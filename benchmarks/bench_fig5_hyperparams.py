@@ -1,0 +1,54 @@
+"""Paper Figure 5: effect of the three LMA hyperparameters on AUC.
+
+  (a) n_h (power of the LSH): interior optimum — n_h=1 over-shares,
+      n_h -> inf degenerates to the hashing trick;
+  (b) alpha (expansion rate |S|d/m): moderate alpha best at fixed budget-free
+      comparison; gains stop growing at large alpha;
+  (c) n_s (rows in D'): AUC saturates once frequent values have enough
+      co-occurrence support.
+
+Usage: python -m benchmarks.bench_fig5_hyperparams [--steps N]
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.bench_fig6_auc_vs_budget import _data, train_eval
+from benchmarks.common import save_csv
+
+
+def run(steps=160) -> list[str]:
+    out = []
+    rows = []
+    gen = _data(0)
+
+    # (a) n_h sweep at fixed alpha
+    for n_h in (1, 2, 4, 8, 32):
+        auc = train_eval("lma", 8.0, gen, steps=steps, n_h=n_h)[0]["auc"]
+        rows.append(("n_h", n_h, round(auc, 4)))
+        out.append(f"fig5a n_h={n_h:3d}: auc={auc:.4f}")
+
+    # (b) alpha sweep
+    for alpha in (2.0, 4.0, 8.0, 16.0, 32.0):
+        met, _ = train_eval("lma", alpha, gen, steps=steps)
+        rows.append(("alpha", alpha, round(met["auc"], 4)))
+        out.append(f"fig5b alpha={alpha:5.1f}: auc={met['auc']:.4f}")
+
+    # (c) n_s sweep (size of D')
+    for n_s in (500, 2000, 8000, 24000):
+        met, _ = train_eval("lma", 8.0, gen, steps=steps, n_s=n_s)
+        rows.append(("n_s", n_s, round(met["auc"], 4)))
+        out.append(f"fig5c n_s={n_s:6d}: auc={met['auc']:.4f}")
+
+    path = save_csv("fig5_hyperparams", ["param", "value", "auc"], rows)
+    out.append(f"fig5 -> {path}")
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=160)
+    args = ap.parse_args()
+    for line in run(args.steps):
+        print(line)

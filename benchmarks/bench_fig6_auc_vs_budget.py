@@ -1,0 +1,137 @@
+"""Paper Figure 6 / main experiment: AUC / accuracy / logloss against memory
+budget for LMA vs full / HashedNet(element-wise) / hashed-row / QR embeddings.
+
+The real 46M-row Criteo is not available offline; the planted-semantics
+synthetic CTR generator (repro/data/synthetic_ctr.py) carries the same
+structure LMA exploits (co-occurrence Jaccard), so the paper's comparative
+claims — LMA tracks full embeddings at a fraction of the budget and dominates
+the hashing tricks at equal budget — are testable.  Budgets are expressed as
+expansion rates alpha = |S|d / m (paper section 7.1; alpha=1 means full-size).
+
+Usage: python -m benchmarks.bench_fig6_auc_vs_budget [--steps N] [--seeds K]
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs._recsys_common import embedding_of_kind
+from repro.core.embedding import make_buffers
+from repro.core.signatures import build_signature_store, densify_store
+from repro.data.metrics import StreamingEval
+from repro.data.synthetic_ctr import CTRGenerator, CTRSpec
+from repro.models import recsys
+from repro.optim import optimizers as opt_lib
+
+from benchmarks.common import ascii_plot, save_csv
+
+N_FIELDS = 12
+DIM = 16
+VOCABS = tuple(300 + (i * 97) % 900 for i in range(N_FIELDS))
+
+
+def _data(seed):
+    # uniform within-cluster popularity: the whole vocabulary is live, so
+    # budget collisions actually bite (the Criteo regime) — with the default
+    # head-heavy Zipf only ~10 values/cluster carry mass and every compressed
+    # scheme is indistinguishable from full
+    spec = CTRSpec(n_fields=N_FIELDS, n_dense=4, vocab_sizes=VOCABS,
+                   n_clusters=8, p_signal=0.9, value_dist="uniform", seed=seed)
+    return CTRGenerator(spec)
+
+
+def _model(kind, alpha, n_h=4):
+    emb = embedding_of_kind(kind, VOCABS, DIM, expansion=alpha,
+                            **({"max_set": 32, "n_h": n_h}
+                               if kind == "lma" else {}))
+    return recsys.RecsysConfig(
+        name=f"dlrm-{kind}-a{alpha}", model="dlrm", embedding=emb, n_dense=4,
+        bot_mlp=(32, 16), top_mlp=(64, 1))
+
+
+def train_eval(kind, alpha, gen, steps=200, batch=512, lr=0.05, n_s=8000,
+               n_h=4):
+    cfg = _model(kind, alpha, n_h)
+    bufs = {}
+    if kind == "lma":
+        store = build_signature_store(gen.rows_for_signatures(n_s),
+                                      sum(VOCABS), max_per_value=32)
+        bufs = make_buffers(cfg.embedding, densify_store(store, 32))
+    params = recsys.init(jax.random.key(0), cfg)
+    opt = opt_lib.adagrad(lr)
+    state = opt.init(params)
+
+    @jax.jit
+    def step_fn(params, state, jb):
+        (loss, _), g = jax.value_and_grad(
+            lambda p: recsys.loss_fn(p, cfg, jb, bufs), has_aux=True)(params)
+        upd, state = opt.update(g, state, params)
+        return opt_lib.apply_updates(params, upd), state, loss
+
+    for i in range(steps):
+        jb = {k: jnp.asarray(v) for k, v in gen.batch(batch, i).items()}
+        params, state, _ = step_fn(params, state, jb)
+
+    ev = StreamingEval()
+    fwd = jax.jit(lambda p, b: recsys.forward(p, cfg, b, bufs))
+    for i in range(8):
+        b = gen.batch(1024, 500_000 + i)
+        jb = {k: jnp.asarray(v) for k, v in b.items() if k != "label"}
+        ev.add(b["label"], np.asarray(fwd(params, jb)))
+    out = ev.compute()
+    n_params = sum(int(np.prod(x.shape))
+                   for x in jax.tree_util.tree_leaves(params))
+    return out, n_params
+
+
+def run(steps=200, seeds=2) -> list[str]:
+    out_lines = []
+    rows = []
+    alphas = {"full": [1.0], "lma": [4.0, 8.0, 16.0],
+              "hashed_elem": [4.0, 8.0, 16.0], "hashed_row": [8.0],
+              "qr": [8.0]}
+    results = {}
+    for kind, als in alphas.items():
+        for a in als:
+            aucs, lls, accs, n_p = [], [], [], 0
+            for s in range(seeds):
+                met, n_p = train_eval(kind, a, _data(s), steps=steps)
+                aucs.append(met["auc"])
+                lls.append(met["logloss"])
+                accs.append(met["accuracy"])
+            results[(kind, a)] = (np.mean(aucs), np.mean(accs), np.mean(lls))
+            rows.append((kind, a, n_p, round(np.mean(aucs), 4),
+                         round(np.std(aucs), 4), round(np.mean(accs), 4),
+                         round(np.mean(lls), 4)))
+            out_lines.append(
+                f"fig6 {kind:12s} alpha={a:5.1f} params={n_p:8d} "
+                f"auc={np.mean(aucs):.4f}+-{np.std(aucs):.4f} "
+                f"acc={np.mean(accs):.4f} logloss={np.mean(lls):.4f}")
+    path = save_csv("fig6_auc_vs_budget",
+                    ["kind", "alpha", "params", "auc", "auc_std", "acc",
+                     "logloss"], rows)
+    out_lines.append(f"fig6 -> {path}")
+    # paper-claim summary lines
+    full = results[("full", 1.0)][0]
+    for a in (8.0, 16.0):
+        lma = results[("lma", a)][0]
+        hsh = results[("hashed_elem", a)][0]
+        out_lines.append(
+            f"fig6 CLAIM alpha={a:.0f}: LMA-full gap {lma-full:+.4f}; "
+            f"LMA-hashed gap {lma-hsh:+.4f} (paper: ~+0.003; seed noise at "
+            f"this scale is ~±0.003 — see EXPERIMENTS.md §Paper-claims)")
+    return out_lines
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seeds", type=int, default=2)
+    args = ap.parse_args()
+    for line in run(args.steps, args.seeds):
+        print(line)

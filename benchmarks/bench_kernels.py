@@ -1,0 +1,69 @@
+"""Kernel micro-bench: Pallas (interpret on CPU) vs pure-jnp reference.
+
+On this CPU container the Pallas interpreter is NOT a performance target —
+the numbers recorded here document (a) correctness at benchmark shapes and
+(b) the jnp-reference wall time that the roofline's memory-term is sanity-
+checked against.  On TPU hardware the same ``ops.py`` entry points dispatch
+the compiled kernels.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.allocation import LMAParams
+from repro.kernels.cin.ref import cin_ref
+from repro.kernels.dot_interaction.ref import dot_interaction_ref
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.lma_locations.ops import reference as lma_ref
+
+from benchmarks.common import save_csv, time_fn
+
+
+def run() -> list[str]:
+    out = []
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # lma_locations reference at DLRM-batch scale
+    p = LMAParams(d=32, m=1 << 21, n_h=4, max_set=32)
+    sets = jnp.asarray(rng.integers(0, 2**31, (4096, 32), dtype=np.uint32))
+    f = jax.jit(lambda s: lma_ref(p, s))
+    us = time_fn(f, sets)
+    rows.append(("lma_locations_ref", "4096x32xd32", round(us, 1)))
+    out.append(f"kernels lma_locations ref 4096 values: {us:.0f} us "
+               f"({4096 * p.n_raw_hashes * 32 / (us/1e6) / 1e9:.1f} Ghash/s)")
+
+    table = jax.random.normal(jax.random.key(0), (65536, 64), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, 65536, (2048, 32), dtype=np.int32))
+    w = jnp.ones((2048, 32), jnp.float32)
+    f = jax.jit(embedding_bag_ref)
+    us = time_fn(f, table, ids, w)
+    rows.append(("embedding_bag_ref", "2048x32@65536x64", round(us, 1)))
+    out.append(f"kernels embedding_bag ref: {us:.0f} us "
+               f"({2048*32*64*4/ (us/1e6) / 1e9:.1f} GB/s gathered)")
+
+    feats = jax.random.normal(jax.random.key(1), (2048, 27, 64), jnp.float32)
+    f = jax.jit(dot_interaction_ref)
+    us = time_fn(f, feats)
+    rows.append(("dot_interaction_ref", "2048x27x64", round(us, 1)))
+    out.append(f"kernels dot_interaction ref: {us:.0f} us")
+
+    xk = jax.random.normal(jax.random.key(2), (512, 200, 10), jnp.float32)
+    x0 = jax.random.normal(jax.random.key(3), (512, 39, 10), jnp.float32)
+    wc = jax.random.normal(jax.random.key(4), (200, 200, 39), jnp.float32) * 0.01
+    f = jax.jit(cin_ref)
+    us = time_fn(f, xk, x0, wc)
+    rows.append(("cin_ref", "512x200x39x10", round(us, 1)))
+    out.append(f"kernels cin ref: {us:.0f} us")
+
+    path = save_csv("kernels", ["kernel", "shape", "us"], rows)
+    out.append(f"kernels -> {path}")
+    return out
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

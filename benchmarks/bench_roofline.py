@@ -1,0 +1,150 @@
+"""Roofline analysis (deliverable g): three-term roofline per (arch x shape x
+mesh) from the persisted dry-run artifacts.
+
+  compute term    = HLO_FLOPs / (peak_FLOPs_per_chip)        [s, per device]
+  memory term     = HLO_bytes / HBM_bandwidth                [s]
+  collective term = collective_bytes / ICI_link_bandwidth    [s]
+
+HLO_FLOPs/bytes are PER-DEVICE (cost_analysis of the SPMD-partitioned module);
+collective bytes are per-device totals parsed from the partitioned HLO.
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Also derives MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) per step and the
+useful-compute ratio MODEL_FLOPS / (chips * HLO_FLOPs) — catching remat and
+redundancy waste.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import save_csv
+
+ART = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_LM_TOKENS = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+              "decode_32k": 128, "long_500k": 1}
+
+
+def model_flops(arch: str, shape: str, meta: dict) -> float | None:
+    """6*N*D estimate of USEFUL model FLOPs for the whole step (all chips)."""
+    from repro.configs.base import get_config
+    cfg = get_config(arch)
+    if cfg.family == "lm":
+        from repro.models.transformer import param_count
+        total, active = param_count(cfg.make_model(shape))
+        tokens = _LM_TOKENS[shape]
+        mult = 6 if shape.startswith("train") else 2
+        return mult * active * tokens
+    if cfg.family == "recsys":
+        # dense-tower params dominate FLOPs; embeddings are gathers
+        import jax
+        from repro.models import recsys as rmod
+        rcfg = cfg.make_model(shape)
+        shapes = jax.eval_shape(
+            lambda: rmod.init(jax.random.key(0), rcfg))
+        n_dense_params = sum(
+            int(np.prod(x.shape)) for p, x in _iter_paths(shapes)
+            if not p.startswith("embedding") and not p.startswith("linear"))
+        ex = meta.get("examples", 1)
+        mult = 6 if shape == "train_batch" else 2
+        return mult * n_dense_params * ex
+    return None
+
+
+def _iter_paths(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _iter_paths(v, f"{prefix}/{k}" if prefix else k)
+    else:
+        yield prefix, tree
+
+
+def analyze(art: dict) -> dict:
+    """Three roofline terms per device.
+
+    LM cells use the ANALYTIC model (benchmarks/roofline_model.py): XLA's
+    cost_analysis counts while-loop bodies once regardless of trip count
+    (verified experimentally — a lax.scan of 10 matmuls reports 1 matmul's
+    FLOPs), so the HLO numbers for scanned programs are per-iteration lower
+    bounds; they are kept as `hlo_*` cross-check columns.  RecSys/GNN models
+    are scan-free and use the exact HLO numbers, except recsys retrieval
+    whose candidate-chunk scan is corrected by its static chunk count.
+    """
+    from repro.configs.base import get_config
+    from benchmarks.roofline_model import lm_terms, retrieval_scan_chunks
+
+    arch, shape, mesh = art["arch"], art["shape"], art["mesh"]
+    chips = art["chips"]
+    flops_dev = art["cost"]["flops"]            # per device (partitioned HLO)
+    bytes_dev = art["cost"]["bytes_accessed"]
+    coll_dev = art["collectives"]["total_bytes"]
+    family = get_config(arch).family
+
+    if family == "lm":
+        t = lm_terms(arch, shape, mesh)
+        t_compute, t_memory, t_coll = t.t_compute, t.t_memory, t.t_collective
+        mf, src = t.model_flops, t.notes
+    else:
+        mult = retrieval_scan_chunks(arch) if shape == "retrieval_cand" else 1
+        t_compute = flops_dev * mult / PEAK_FLOPS
+        t_memory = bytes_dev * mult / HBM_BW
+        t_coll = coll_dev * mult / ICI_BW
+        mf = model_flops(arch, shape, art.get("meta", {}))
+        src = "hlo" if mult == 1 else f"hlo x{mult} (chunk scan)"
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    useful = (mf / (chips * t_compute * PEAK_FLOPS))         if (mf and t_compute) else None
+    bound = max(t_compute, t_memory, t_coll)
+    frac = (mf / chips / PEAK_FLOPS) / bound if (mf and bound > 0) else None
+    return {
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": mf, "useful_ratio": useful,
+        "roofline_fraction": frac, "source": src,
+        "hlo_flops": flops_dev, "hlo_bytes": bytes_dev, "hlo_coll": coll_dev,
+    }
+
+
+def run() -> list[str]:
+    out = []
+    rows = []
+    files = sorted(os.listdir(ART)) if os.path.isdir(ART) else []
+    for fname in files:
+        with open(os.path.join(ART, fname)) as f:
+            art = json.load(f)
+        r = analyze(art)
+        rows.append((art["arch"], art["shape"], art["mesh"],
+                     f"{r['t_compute_s']:.3e}", f"{r['t_memory_s']:.3e}",
+                     f"{r['t_collective_s']:.3e}", r["dominant"],
+                     f"{r['model_flops']:.3e}" if r["model_flops"] else "",
+                     f"{r['useful_ratio']:.3f}" if r["useful_ratio"] else "",
+                     f"{r['roofline_fraction']:.3f}"
+                     if r["roofline_fraction"] else "",
+                     r["source"], f"{r['hlo_flops']:.3e}",
+                     f"{r['hlo_bytes']:.3e}", f"{r['hlo_coll']:.3e}"))
+        out.append(
+            f"roofline {art['arch']:22s} {art['shape']:14s} {art['mesh']:8s} "
+            f"cmp={r['t_compute_s']:.2e}s mem={r['t_memory_s']:.2e}s "
+            f"col={r['t_collective_s']:.2e}s -> {r['dominant']:10s}"
+            + (f" useful={r['useful_ratio']:.2f}" if r['useful_ratio'] else "")
+            + (f" roofline={r['roofline_fraction']:.2f}"
+               if r['roofline_fraction'] else ""))
+    path = save_csv("roofline",
+                    ["arch", "shape", "mesh", "t_compute_s", "t_memory_s",
+                     "t_collective_s", "dominant", "model_flops",
+                     "useful_ratio", "roofline_fraction", "source",
+                     "hlo_flops_dev", "hlo_bytes_dev", "hlo_coll_dev"], rows)
+    out.append(f"roofline -> {path} ({len(rows)} cells)")
+    return out
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

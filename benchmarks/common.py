@@ -1,0 +1,49 @@
+"""Shared benchmark plumbing: timing, CSV output, tiny ASCII plots."""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+
+def save_csv(name: str, header: list[str], rows: list[tuple]) -> str:
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, f"{name}.csv")
+    with open(path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    return path
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall-time (us) of fn(*args) with block_until_ready."""
+    import jax
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def ascii_plot(xs, series: dict, width: int = 60, label: str = "") -> str:
+    """Cheap terminal scatter of several named series against xs."""
+    lo = min(min(v) for v in series.values())
+    hi = max(max(v) for v in series.values())
+    span = max(hi - lo, 1e-12)
+    lines = [f"  {label}   [{lo:.4f} .. {hi:.4f}]"]
+    for name, ys in series.items():
+        cells = [" "] * width
+        for x, y in zip(xs, ys):
+            pos = int((y - lo) / span * (width - 1))
+            cells[pos] = "*"
+        lines.append(f"  {name:>14s} |{''.join(cells)}|")
+    return "\n".join(lines)

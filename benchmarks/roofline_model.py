@@ -1,0 +1,135 @@
+"""Analytic roofline terms for the scanned (LM) cells.
+
+WHY THIS EXISTS: XLA's ``cost_analysis()`` counts a while-loop body ONCE
+regardless of trip count (verified: a lax.scan of 10 matmuls reports the
+FLOPs of 1 — see EXPERIMENTS.md §Roofline "methodology").  Our transformer
+stacks layers in ``lax.scan`` (and streams KV blocks in an inner scan), so
+the artifact's HLO numbers are per-iteration LOWER BOUNDS for LM cells.
+RecSys/GNN models are scan-free (exact), except recsys retrieval's chunk
+scan (corrected by its static chunk count).
+
+The analytic model is first-principles napkin math over the same workload
+the dry-run compiled, using the per-device sharding the dry-run verified:
+
+  compute: dense matmul FLOPs 2·N_active·tokens per fwd pass; causal
+    attention 2·2·B·S²/2·H·hd; train = fwd + 2x bwd + 1x remat re-fwd.
+  memory: weight stream (each pass reads the sharded params), activation
+    stream (~12 rw of the residual per layer), KV-cache stream (decode
+    reads the whole local cache slice each step), optimizer read+write.
+  collective: DP gradient reduce (2·bytes ring cost), Megatron TP psums
+    (2 per layer of the sequence-sharded residual), flash-decode LSE merge,
+    MoE token gather/scatter.
+
+Every term is per device per step, in seconds against v5e peaks.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_LM_SHAPES = {"train_4k": (4096, 256, "train"),
+              "prefill_32k": (32768, 32, "prefill"),
+              "decode_32k": (32768, 128, "decode"),
+              "long_500k": (524288, 1, "decode")}
+
+
+@dataclasses.dataclass
+class Terms:
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    model_flops: float          # useful 6·N·D (all chips)
+    notes: str = ""
+
+    @property
+    def dominant(self):
+        return max(("compute", self.t_compute), ("memory", self.t_memory),
+                   ("collective", self.t_collective), key=lambda kv: kv[1])[0]
+
+    @property
+    def roofline_fraction(self):
+        bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return (self.t_compute / bound) if bound > 0 else None
+
+
+def lm_terms(arch_id: str, shape: str, mesh: str) -> Terms:
+    from repro.configs.base import get_config
+    from repro.models.transformer import param_count
+
+    cfg = get_config(arch_id).make_model(shape)
+    total, active = param_count(cfg)
+    S, B, kind = _LM_SHAPES[shape]
+    chips = 512 if mesh == "2x16x16" else 256
+    pods = 2 if mesh == "2x16x16" else 1
+    dp = 16 * pods                      # ('pod','data') product
+    tp = 16                             # 'model'
+    d = cfg.d_model
+    L = cfg.n_layers
+    hd = cfg.head_dim or d // cfg.n_heads
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    bytes_w = 2                         # bf16 params
+
+    # --- sharded parameter bytes per device (ZeRO/TP: fully sharded)
+    w_dev = total * bytes_w / chips
+    w_active_dev = active * bytes_w / chips
+
+    if kind == "train":
+        T = B * S
+        dense_fwd = 2 * active * T
+        attn_fwd = 2 * 2 * B * (S ** 2) / 2 * H * hd * L
+        fwd = dense_fwd + attn_fwd
+        flops_global = fwd * (3 + (1 if cfg.remat else 0))   # fwd+bwd+refwd
+        t_compute = flops_global / chips / PEAK_FLOPS
+        # memory: 3 weight passes (fwd, re-fwd, bwd) + grads w + opt rw (f32
+        # adam: 16 B/param fully sharded; adafactor ~0) + activation stream
+        opt_bytes = (16 if get_config(arch_id).optimizer == "adam" else 1) \
+            * total / chips
+        act_stream = 12 * (T / (dp * tp)) * d * 2 * L        # seq-parallel
+        t_memory = (3 * w_dev + w_dev + opt_bytes + act_stream) / HBM_BW
+        # collectives: grad ring-reduce of sharded params (2x bytes) + 2 TP
+        # psums of the residual per layer (fwd; 2x more in bwd)
+        coll = 2 * w_dev + 4 * 2 * (T / dp) * d * 2 / tp * L
+        t_coll = coll / ICI_BW
+        mf = 6 * active * T
+        return Terms(t_compute, t_memory, t_coll, mf, "analytic-train")
+
+    if kind == "prefill":
+        T = B * S
+        dense = 2 * active * T
+        attn = 2 * 2 * B * (S ** 2) / 2 * H * hd * L
+        flops_global = dense + attn
+        t_compute = flops_global / chips / PEAK_FLOPS
+        cache_w = (T / chips) * (KV * hd * 2 if cfg.attention != "mla" else
+                                 (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim)
+                                 ) * L * (1 if cfg.kv_quantized else 2)
+        act_stream = 12 * (T / (dp * tp)) * d * 2 * L
+        t_memory = (w_active_dev + act_stream + cache_w) / HBM_BW
+        coll = 4 * (T / dp) * d * 2 / tp * L                 # TP psums
+        t_coll = coll / ICI_BW
+        mf = 2 * active * T
+        return Terms(t_compute, t_memory, t_coll, mf, "analytic-prefill")
+
+    # decode: one token against an S-long cache — weight- and cache-bound
+    cache_entry = (2 * KV * hd if cfg.attention != "mla" else
+                   (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim))
+    cache_bytes_dev = B * S * cache_entry * L \
+        * (1 if cfg.kv_quantized else 2) / chips             # L-sharded
+    flops_global = 2 * active * B + 2 * B * S * cache_entry / \
+        (1 if cfg.attention != "mla" else 1) * H / max(H, 1)  # attn ~ cache read
+    t_compute = flops_global / chips / PEAK_FLOPS
+    t_memory = (w_active_dev + cache_bytes_dev) / HBM_BW
+    # flash-decode LSE merge psum per layer + logits all-gather
+    coll = (B / min(dp, B) * H * hd * 4 * 3) * L + B * cfg.vocab_size * 4 / tp
+    t_coll = coll / ICI_BW
+    mf = 2 * active * B
+    return Terms(t_compute, t_memory, t_coll, mf, "analytic-decode")
+
+
+def retrieval_scan_chunks(arch_id: str) -> int:
+    """recsys retrieval scans 1M candidates in chunks of 16384."""
+    return -(-1_000_000 // 16384)

@@ -1,0 +1,69 @@
+"""Benchmark driver: one benchmark per paper table/figure + the roofline
+report.  ``python -m benchmarks.run [--quick]``.
+
+Table 1  -> bench_table1_datasets   (dataset/budget arithmetic)
+Figure 3 -> bench_fig3_concentration (Thm 1/2 concentration bands)
+Figure 5 -> bench_fig5_hyperparams  (n_h / alpha / n_s sweeps)
+Figure 6 -> bench_fig6_auc_vs_budget (AUC vs budget, 5 methods)
+Roofline -> bench_roofline          (3-term roofline from dry-run artifacts)
+Kernels  -> bench_kernels           (Pallas-vs-ref wall time, CPU interpret)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer training steps / seeds")
+    ap.add_argument("--only", help="comma list: table1,fig3,fig5,fig6,"
+                                   "roofline,kernels")
+    args = ap.parse_args(argv)
+    steps = 60 if args.quick else 200
+    seeds = 1 if args.quick else 2
+    wanted = set(args.only.split(",")) if args.only else None
+
+    benches = []
+    if wanted is None or "table1" in wanted:
+        from benchmarks.bench_table1_datasets import run as t1
+        benches.append(("table1", t1, {}))
+    if wanted is None or "fig3" in wanted:
+        from benchmarks.bench_fig3_concentration import run as f3
+        benches.append(("fig3", f3, {}))
+    if wanted is None or "fig5" in wanted:
+        from benchmarks.bench_fig5_hyperparams import run as f5
+        benches.append(("fig5", f5, {"steps": max(steps * 4 // 5, 40)}))
+    if wanted is None or "fig6" in wanted:
+        from benchmarks.bench_fig6_auc_vs_budget import run as f6
+        benches.append(("fig6", f6, {"steps": steps, "seeds": seeds}))
+    if wanted is None or "roofline" in wanted:
+        from benchmarks.bench_roofline import run as rl
+        benches.append(("roofline", rl, {}))
+    if wanted is None or "kernels" in wanted:
+        from benchmarks.bench_kernels import run as bk
+        benches.append(("kernels", bk, {}))
+
+    failures = []
+    for name, fn, kw in benches:
+        t0 = time.time()
+        print(f"=== {name} ===", flush=True)
+        try:
+            for line in fn(**kw):
+                print(line, flush=True)
+        except Exception:  # keep the harness running
+            import traceback
+            traceback.print_exc()
+            failures.append(name)
+        print(f"=== {name} done in {time.time()-t0:.0f}s ===\n", flush=True)
+    if failures:
+        print(f"FAILED benches: {failures}")
+        return 1
+    print("all benchmarks OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

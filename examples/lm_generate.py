@@ -1,0 +1,72 @@
+"""LM serving demo: train a smoke-scale tinyllama on synthetic bigram data for
+a few hundred steps, then serve generations through the LMServer (prefill +
+slot-reused batched decode — the decode_32k pattern at laptop scale).
+
+Run: PYTHONPATH=src python examples/lm_generate.py [--steps 200]
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.data.lm_data import LMGenerator
+from repro.models import transformer
+from repro.optim import optimizers as opt_lib
+from repro.serve import LMServer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    cfg = get_config("tinyllama-1.1b").make_smoke()
+    gen = LMGenerator(cfg.vocab_size, seed=0)
+    params = transformer.init(jax.random.key(0), cfg)
+    opt = opt_lib.adam(3e-3)
+    state = opt.init(params)
+
+    @jax.jit
+    def step_fn(params, state, tokens, labels):
+        (loss, m), g = jax.value_and_grad(
+            lambda p: transformer.loss_fn(p, cfg, tokens, labels),
+            has_aux=True)(params)
+        upd, state = opt.update(g, state, params)
+        return opt_lib.apply_updates(params, upd), state, loss
+
+    print(f"training {cfg.name} ({args.steps} steps, vocab {cfg.vocab_size})")
+    for i in range(args.steps):
+        b = gen.batch(16, 64, i)
+        params, state, loss = step_fn(params, state,
+                                      jnp.asarray(b["tokens"]),
+                                      jnp.asarray(b["labels"]))
+        if (i + 1) % max(args.steps // 5, 1) == 0:
+            print(f"  step {i+1}: loss {float(loss):.3f} "
+                  f"(random = {np.log(cfg.vocab_size):.3f})")
+
+    server = LMServer(params, cfg, n_slots=4, max_len=96)
+    rng = np.random.default_rng(1)
+    prompts = [list(map(int, rng.integers(1, cfg.vocab_size, 8)))
+               for _ in range(6)]
+    out = server.generate(prompts, max_new_tokens=16)
+    # the generator's bigram structure: check the model learned successors
+    hits = total = 0
+    for r in out:
+        seq = r.prompt + r.tokens
+        for a, b in zip(seq[:-1], seq[1:]):
+            if gen.is_patterned[a]:
+                total += 1
+                hits += int(b == gen.successor[a])
+    print(f"\nserved {len(out)} prompts in {server.stats['waves']} waves, "
+          f"{server.stats['decode_steps']} decode steps")
+    print(f"bigram-successor hit rate in generations: "
+          f"{hits}/{total} = {hits/max(total,1):.2f} (random ~ 1/{cfg.vocab_size})")
+
+
+if __name__ == "__main__":
+    main()

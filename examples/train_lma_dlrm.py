@@ -1,0 +1,102 @@
+"""End-to-end driver: train an LMA-DLRM on planted-semantics CTR data.
+
+Exercises the full production stack at laptop scale:
+  data pipeline (seekable synthetic CTR) -> D' signature build -> LMA-DLRM
+  -> fault-tolerant Trainer (atomic/async checkpoints, preemption-safe)
+  -> streaming AUC eval -> comparison against the hashing-trick baseline at
+  the SAME budget (the paper's headline comparison).
+
+Run: PYTHONPATH=src python examples/train_lma_dlrm.py [--steps 300]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import tempfile
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs._recsys_common import embedding_of_kind
+from repro.core.embedding import make_buffers
+from repro.core.signatures import build_signature_store, densify_store
+from repro.data.metrics import StreamingEval
+from repro.data.synthetic_ctr import CTRGenerator, CTRSpec
+from repro.models import recsys
+from repro.optim import optimizers as opt_lib
+from repro.train.trainer import Trainer, TrainerConfig
+
+N_FIELDS = 16
+VOCABS = tuple(400 + (i * 131) % 1200 for i in range(N_FIELDS))
+DIM = 16
+ALPHA = 12.0
+
+
+def build(kind: str, gen: CTRGenerator):
+    emb = embedding_of_kind(kind, VOCABS, DIM, expansion=ALPHA,
+                            **({"max_set": 32} if kind == "lma" else {}))
+    cfg = recsys.RecsysConfig(name=f"dlrm-{kind}", model="dlrm",
+                              embedding=emb, n_dense=8,
+                              bot_mlp=(64, 32, 16), top_mlp=(128, 64, 1))
+    bufs = {}
+    if kind == "lma":
+        print(f"[{kind}] building D' signatures (n_s=10,000 rows)...")
+        store = build_signature_store(gen.rows_for_signatures(10_000),
+                                      sum(VOCABS), max_per_value=32)
+        bufs = make_buffers(cfg.embedding, densify_store(store, 32))
+    return cfg, bufs
+
+
+def train(kind: str, steps: int, gen: CTRGenerator, ckpt_dir: str):
+    cfg, bufs = build(kind, gen)
+    params = recsys.init(jax.random.key(0), cfg)
+    n_emb = sum(int(np.prod(x.shape))
+                for x in jax.tree_util.tree_leaves(params["embedding"]))
+    print(f"[{kind}] embedding params: {n_emb:,} "
+          f"(full would be {sum(VOCABS)*DIM:,}; alpha={ALPHA})")
+
+    def batch_fn(step):
+        return {k: jnp.asarray(v) for k, v in gen.batch(512, step).items()}
+
+    trainer = Trainer(
+        TrainerConfig(total_steps=steps, ckpt_dir=ckpt_dir, ckpt_every=100,
+                      log_every=max(steps // 6, 1)),
+        lambda p, b: recsys.loss_fn(p, cfg, b, bufs),
+        params, opt_lib.adagrad(0.05), batch_fn)
+    trainer.install_signal_handlers()     # SIGTERM -> checkpoint & exit
+    out = trainer.fit()
+    print(f"[{kind}] finished at step {out['step']}, loss {out['loss']:.4f}, "
+          f"stragglers {out.get('straggler_steps', 0)}")
+
+    ev = StreamingEval()
+    fwd = jax.jit(lambda p, b: recsys.forward(p, cfg, b, bufs))
+    for i in range(8):
+        b = gen.batch(2048, 900_000 + i)
+        jb = {k: jnp.asarray(v) for k, v in b.items() if k != "label"}
+        ev.add(b["label"], np.asarray(fwd(trainer.params, jb)))
+    met = ev.compute()
+    print(f"[{kind}] eval: auc={met['auc']:.4f} logloss={met['logloss']:.4f} "
+          f"acc={met['accuracy']:.4f} (n={met['n']})")
+    return met
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+    spec = CTRSpec(n_fields=N_FIELDS, n_dense=8, vocab_sizes=VOCABS,
+                   n_clusters=10, p_signal=0.85, seed=0)
+    gen = CTRGenerator(spec)
+    results = {}
+    for kind in ("lma", "hashed_elem"):
+        with tempfile.TemporaryDirectory() as td:
+            results[kind] = train(kind, args.steps, gen, td)
+    gap = results["lma"]["auc"] - results["hashed_elem"]["auc"]
+    print(f"\nLMA vs hashing trick at equal budget (alpha={ALPHA}): "
+          f"AUC {gap:+.4f}  (paper: ~+0.003 at Criteo scale)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Shared pieces for the recsys architecture configs.
+
+Criteo-Kaggle per-field vocabulary sizes (the standard 26-field list; total
+33.76M matches the paper's Table 1 "#Values" for Criteo).  Field order is
+rotated so field 0 is the largest (item-like) field — retrieval_cand scores
+candidates against field 0 by convention.
+"""
+from __future__ import annotations
+
+from repro.core.allocation import LMAParams
+from repro.core.embedding import EmbeddingConfig
+
+CRITEO_VOCABS = (
+    10131227, 1460, 583, 2202608, 305, 24, 12517, 633, 3, 93145, 5683,
+    8351593, 3194, 27, 14992, 5461306, 10, 5652, 2173, 4, 7046547, 18, 15,
+    286181, 105, 142572,
+)  # sum = 33,762,577
+
+# xDeepFM uses all 39 Criteo fields (13 integer features bucketized into
+# 100-way categorical vocabularies + the 26 categorical fields)
+XDEEPFM_VOCABS = CRITEO_VOCABS + tuple([100] * 13)
+
+RECSYS_SHAPES = ("train_batch", "serve_p99", "serve_bulk", "retrieval_cand")
+
+RECSYS_SHAPE_TABLE = {
+    "train_batch": dict(batch=65536, kind="train"),
+    "serve_p99": dict(batch=512, kind="serve"),
+    "serve_bulk": dict(batch=262144, kind="serve"),
+    "retrieval_cand": dict(batch=1, n_candidates=1_000_000, kind="retrieval"),
+}
+
+
+def lma_embedding(vocab_sizes: tuple[int, ...], dim: int,
+                  expansion: float = 16.0, n_h: int = 4, max_set: int = 32,
+                  seed: int = 0) -> EmbeddingConfig:
+    """Paper defaults: common memory across tables, alpha=16, n_h=4."""
+    total = sum(vocab_sizes)
+    m = max(int(total * dim / expansion), 4096)
+    m = -(-m // 4096) * 4096   # divisible by every mesh axis combination
+    return EmbeddingConfig(
+        kind="lma", vocab_sizes=tuple(vocab_sizes), dim=dim, budget=m,
+        lma=LMAParams(d=dim, m=m, n_h=n_h, max_set=max_set, seed=seed),
+        memory_init="bernoulli", seed=seed)
+
+
+def embedding_of_kind(kind: str, vocab_sizes: tuple[int, ...], dim: int,
+                      expansion: float = 16.0, **kw) -> EmbeddingConfig:
+    """Build full / hashed / qr / lma embedding configs at matched budget."""
+    if kind == "full":
+        return EmbeddingConfig(kind="full", vocab_sizes=tuple(vocab_sizes), dim=dim)
+    if kind == "lma":
+        return lma_embedding(vocab_sizes, dim, expansion, **kw)
+    total = sum(vocab_sizes)
+    m = max(int(total * dim / expansion), 4096)
+    m = -(-m // 4096) * 4096
+    return EmbeddingConfig(kind=kind, vocab_sizes=tuple(vocab_sizes), dim=dim,
+                           budget=m)
+
+
+def smoke_vocabs(n_fields: int) -> tuple[int, ...]:
+    return tuple([97 + 13 * (i % 5) for i in range(n_fields)])

@@ -1,0 +1,46 @@
+"""Arch config registry: every assigned architecture is a selectable config."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+_REGISTRY: dict[str, "ArchConfig"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    arch_id: str
+    family: str                      # lm | gnn | recsys
+    make_model: Callable             # (shape_id: str|None) -> model config (full scale)
+    make_smoke: Callable             # () -> reduced model config
+    shapes: tuple[str, ...]
+    optimizer: str = "adam"          # adam | adagrad | sgd
+    learning_rate: float = 1e-3
+    source: str = ""
+    notes: str = ""
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.arch_id] = cfg
+    return cfg
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    _ensure_loaded()
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]
+
+
+def list_archs() -> list[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def _ensure_loaded():
+    # import side-effect registration
+    from repro.configs import (dcn_v2, deepseek_v3_671b, din, dlrm_rm2,  # noqa
+                               gat_cora, llama4_scout_17b_a16e,
+                               lma_dlrm_avazu, lma_dlrm_criteo,
+                               qwen1_5_32b, stablelm_3b, tinyllama_1_1b,
+                               xdeepfm)

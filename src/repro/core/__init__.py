@@ -1,0 +1,45 @@
+"""SCMA/LMA core: the paper's contribution as a composable JAX module."""
+from repro.core.allocation import (
+    LMAParams,
+    alloc_full,
+    alloc_hashed_elem,
+    alloc_hashed_row,
+    alloc_lma,
+    expected_gamma,
+    fraction_shared,
+    lma_signatures,
+    locations_from_signatures,
+)
+from repro.core.embedding import (
+    EmbeddingConfig,
+    embed,
+    embed_bag,
+    embed_fields,
+    init_embedding,
+    make_buffers,
+    materialize_rows,
+)
+from repro.core.hashing import fmix32, hash_to_range, hash_u32, seed_stream
+from repro.core.memory import cosine, init_memory, lookup
+from repro.core.minhash import gather_ragged_sets, jaccard_from_sets, minhash_dense
+from repro.core.signatures import (
+    DenseSignatureStore,
+    SignatureStore,
+    build_signature_store,
+    densify_store,
+    synthetic_dense_store,
+    synthetic_signature_store,
+    table_offsets,
+)
+
+__all__ = [
+    "LMAParams", "alloc_full", "alloc_hashed_elem", "alloc_hashed_row", "alloc_lma",
+    "expected_gamma", "fraction_shared", "lma_signatures", "locations_from_signatures",
+    "EmbeddingConfig", "embed", "embed_bag", "embed_fields", "init_embedding",
+    "make_buffers",
+    "materialize_rows", "fmix32", "hash_to_range", "hash_u32", "seed_stream",
+    "cosine", "init_memory", "lookup", "gather_ragged_sets", "jaccard_from_sets",
+    "minhash_dense", "SignatureStore", "DenseSignatureStore",
+    "build_signature_store", "densify_store", "synthetic_dense_store",
+    "synthetic_signature_store", "table_offsets",
+]

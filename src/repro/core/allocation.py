@@ -1,0 +1,130 @@
+"""Allocation functions (paper Definitions 1-2) and the LMA allocation (section 4).
+
+An allocation maps a value id to the ``d`` memory locations its embedding occupies:
+``A(v)[i] in [0, m)``.  We represent allocations as functions returning a dense
+``[B, d]`` int32 location matrix — the one-hot matrix of Definition 1 is never
+materialized (mask-based retrieval == gather).
+
+Implemented allocations:
+  * ``alloc_full``        A_full : location = v*d + i          (m == |S|*d)
+  * ``alloc_hashed_elem`` A_h    : location = h(v, i) % m      (HashedNet / naive trick)
+  * ``alloc_hashed_row``  row-wise trick: row = h(v) % (m//d), location = row*d + i
+  * ``alloc_lma``         A_L    : location = h_r(psi_i(minhash(D_v))) % m
+
+``fraction_shared`` computes f_A (Definition 2) for theory validation (Thm 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import UINT32_MAX, combine_chain, hash_pair, hash_u32, seed_stream
+from repro.core.minhash import gather_ragged_sets, minhash_dense
+from repro.core.signatures import DenseSignatureStore, SignatureStore
+
+
+def alloc_full(value_ids: jax.Array, d: int) -> jax.Array:
+    v = value_ids.astype(jnp.int32)
+    return v[:, None] * d + jnp.arange(d, dtype=jnp.int32)[None, :]
+
+
+def alloc_hashed_elem(value_ids: jax.Array, d: int, m: int, seed: int) -> jax.Array:
+    """Element-wise naive hashing trick (HashedNet [13])."""
+    seeds = seed_stream(seed, d)                      # one function per element index
+    v = value_ids.astype(jnp.uint32)[:, None]
+    i = jnp.arange(d, dtype=jnp.uint32)[None, :]
+    h = hash_pair(v, i, seeds[None, :])
+    return (h % jnp.uint32(m)).astype(jnp.int32)
+
+
+def alloc_hashed_row(value_ids: jax.Array, d: int, m: int, seed: int) -> jax.Array:
+    """Row-wise (vector-wise) hashing trick: whole rows collide."""
+    n_rows = max(m // d, 1)
+    seeds = seed_stream(seed, 1)
+    row = hash_u32(value_ids.astype(jnp.uint32), seeds[0]) % jnp.uint32(n_rows)
+    return (row.astype(jnp.int32)[:, None] * d
+            + jnp.arange(d, dtype=jnp.int32)[None, :])
+
+
+@dataclasses.dataclass(frozen=True)
+class LMAParams:
+    """Static hyper-parameters of the LMA allocation (paper section 7.1)."""
+
+    d: int                 # embedding dimension (number of LSH draws)
+    m: int                 # memory budget |M|
+    n_h: int = 4           # power of each LSH mapping (k of section 3.2)
+    seed: int = 0x5C3A
+    max_set: int = 64      # cap on |D_v| representation used per lookup
+    min_support: int = 2   # |D_v| below this -> fall back to A_h (very sparse values)
+    independent_hashes: bool = True
+    # independent_hashes=True: d*n_h raw minhashes (paper-faithful, d independent
+    # power-n_h functions).  False: sliding-window sharing, d+n_h-1 raw hashes
+    # (beyond-paper perf option; each window is still a valid power-n_h minhash,
+    # only cross-i covariance changes — see EXPERIMENTS.md §Perf).
+
+    @property
+    def n_raw_hashes(self) -> int:
+        return self.d * self.n_h if self.independent_hashes else self.d + self.n_h - 1
+
+
+def lma_signatures(
+    params: LMAParams, store: SignatureStore | DenseSignatureStore,
+    value_ids: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Raw minhash signatures for a batch of values.
+
+    Returns (sigs [B, n_raw_hashes] uint32, support [B] int32 = |D_v|).
+    """
+    if isinstance(store, DenseSignatureStore):
+        elems = jnp.take(store.sets, value_ids, axis=0)          # [B, max_set]
+        mask = elems != DenseSignatureStore.PAD
+        elems = elems[:, : params.max_set]
+        mask = mask[:, : params.max_set]
+    else:
+        elems, mask = gather_ragged_sets(store.flat, store.offsets, value_ids,
+                                         params.max_set)
+    sigs = minhash_dense(elems, mask, params.n_raw_hashes, params.seed)
+    support = jnp.take(store.lengths, value_ids, axis=0)
+    return sigs, support
+
+
+def locations_from_signatures(params: LMAParams, sigs: jax.Array) -> jax.Array:
+    """psi_i composition + universal rehash into [0, m) (section 3.2 / 4).
+
+    ``sigs``: [B, n_raw_hashes] uint32 -> locations [B, d] int32.
+    """
+    B = sigs.shape[0]
+    if params.independent_hashes:
+        grouped = sigs.reshape(B, params.d, params.n_h)
+    else:
+        idx = (jnp.arange(params.d)[:, None] + jnp.arange(params.n_h)[None, :])
+        grouped = sigs[:, idx]                        # [B, d, n_h] sliding windows
+    rehash_seeds = seed_stream(params.seed ^ 0x7F4A7C15, params.d)
+    h = combine_chain(grouped, rehash_seeds[None, :], axis=-1)   # [B, d]
+    return (h % jnp.uint32(params.m)).astype(jnp.int32)
+
+
+def alloc_lma(
+    params: LMAParams, store: SignatureStore | DenseSignatureStore,
+    value_ids: jax.Array,
+) -> jax.Array:
+    """Full LMA allocation A_L with very-sparse fallback to A_h (paper section 5)."""
+    sigs, support = lma_signatures(params, store, value_ids)
+    loc_lma = locations_from_signatures(params, sigs)
+    loc_fallback = alloc_hashed_elem(value_ids, params.d, params.m,
+                                     params.seed ^ 0x1234567)
+    sparse = (support < params.min_support)[:, None]
+    return jnp.where(sparse, loc_fallback, loc_lma)
+
+
+def fraction_shared(loc_a: jax.Array, loc_b: jax.Array) -> jax.Array:
+    """f_A(v1, v2) (Definition 2): fraction of positions mapping to the same slot."""
+    return jnp.mean((loc_a == loc_b).astype(jnp.float32), axis=-1)
+
+
+def expected_gamma(phi: jax.Array, m: int) -> jax.Array:
+    """Theorem 1: E[f_{A_L}] = phi + (1 - phi)/m."""
+    return phi + (1.0 - phi) / m

@@ -1,0 +1,87 @@
+"""Hashing substrate for SCMA/LMA.
+
+All hashing is done in uint32 on the wrap-around ring Z_{2^32} with murmur3-style
+avalanche mixing.  The paper uses a polynomial k-universal family mod a large prime
+(section 3.1); mod-prime arithmetic needs 64-bit products which are slow/unavailable
+on TPU integer units (and x64 is disabled in JAX by default), so we substitute the
+TPU-native family: odd-multiplier polynomial chains on Z_{2^32} finalized with the
+murmur3 avalanche (``fmix32``).  What LMA requires of the family is (a) uniform
+marginals, (b) pairwise collision probability ~= 1/r, (c) independence across the d
+drawn functions (independent seed streams).  ``tests/test_hashing.py`` verifies all
+three empirically.  This substitution is recorded in DESIGN.md section 9.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# murmur3 / splitmix constants
+_C1 = jnp.uint32(0x85EBCA6B)
+_C2 = jnp.uint32(0xC2B2AE35)
+_GOLDEN = jnp.uint32(0x9E3779B9)
+_M1 = jnp.uint32(0xCC9E2D51)
+_M2 = jnp.uint32(0x1B873593)
+
+UINT32_MAX = jnp.uint32(0xFFFFFFFF)
+
+
+def fmix32(x: jax.Array) -> jax.Array:
+    """murmur3 32-bit finalizer: full avalanche on Z_{2^32}."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * _C1
+    x = x ^ (x >> 13)
+    x = x * _C2
+    x = x ^ (x >> 16)
+    return x
+
+
+def seed_stream(base_seed: int, n: int) -> jax.Array:
+    """Derive ``n`` independent uint32 seeds from one base seed (splitmix-style)."""
+    base = jnp.uint32(base_seed & 0xFFFFFFFF)
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    return fmix32(base + _GOLDEN * (idx + jnp.uint32(1)))
+
+
+def hash_u32(x: jax.Array, seed: jax.Array) -> jax.Array:
+    """Universal-style hash of uint32 keys ``x`` under ``seed``.
+
+    Two multiply-mix rounds; behaves as an (approximate) random function per seed.
+    Shapes broadcast: ``x`` and ``seed`` broadcast against each other.
+    """
+    x = x.astype(jnp.uint32)
+    seed = seed.astype(jnp.uint32)
+    h = (x ^ seed) * _M1
+    h = (h ^ (h >> 15)) * _M2
+    h = fmix32(h ^ seed)
+    return h
+
+
+def hash_to_range(x: jax.Array, seed: jax.Array, r) -> jax.Array:
+    """Hash uint32 keys into ``[0, r)`` (r need not be a power of two)."""
+    h = hash_u32(x, seed)
+    return (h % jnp.uint32(r)).astype(jnp.int32)
+
+
+def hash_pair(x: jax.Array, y: jax.Array, seed: jax.Array) -> jax.Array:
+    """Hash a pair of uint32 keys (e.g. (value, element-index)) under ``seed``."""
+    hx = hash_u32(x, seed)
+    return hash_u32(y.astype(jnp.uint32) ^ hx, seed ^ _GOLDEN)
+
+
+def combine_chain(parts: jax.Array, seed: jax.Array, axis: int = -1) -> jax.Array:
+    """Combine a tuple of hash values (the power-k LSH composition psi of sec 3.2).
+
+    ``parts``: uint32 array; the ``axis`` dimension is folded with an
+    order-sensitive polynomial chain on Z_{2^32} + final avalanche, equivalent in
+    role to rehashing the concatenated k-tuple with a universal hash.
+    """
+    parts = jnp.moveaxis(parts.astype(jnp.uint32), axis, 0)
+
+    def body(h, p):
+        h = (h ^ fmix32(p)) * _M1 + _GOLDEN
+        return h, None
+
+    init = jnp.broadcast_to(seed.astype(jnp.uint32), parts.shape[1:])
+    h, _ = jax.lax.scan(body, init, parts)
+    return fmix32(h)

@@ -1,0 +1,51 @@
+"""The shared memory pool M and retrieval from it.
+
+Theorem 2 motivates the Bernoulli(0.5, {-1, +1}) initialization: under LMA
+allocation, cosine similarity of retrieved embeddings concentrates on the target
+kernel phi.  For end-to-end training we scale the +/-1 init (or use scaled normal)
+so downstream layers see unit-variance-ish activations.
+
+``lookup`` is the single-device path (jnp.take; transpose-of-gather gives the
+scatter-add gradient automatically).  The 512-chip sharded path lives in
+``repro/dist/sharded_memory.py`` (mask-local-gather + psum, O(B*d) traffic).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_memory(
+    key: jax.Array,
+    m: int,
+    init: str = "bernoulli",
+    scale: float | None = None,
+    dtype=jnp.float32,
+) -> jax.Array:
+    if init == "bernoulli":
+        bits = jax.random.bernoulli(key, 0.5, (m,))
+        mem = jnp.where(bits, 1.0, -1.0).astype(dtype)
+        s = 1.0 if scale is None else scale
+        return mem * jnp.asarray(s, dtype)
+    if init == "normal":
+        s = 1.0 if scale is None else scale
+        return (jax.random.normal(key, (m,)) * s).astype(dtype)
+    if init == "uniform":
+        s = 1.0 if scale is None else scale
+        return jax.random.uniform(key, (m,), minval=-s, maxval=s).astype(dtype)
+    raise ValueError(f"unknown memory init {init!r}")
+
+
+def lookup(memory: jax.Array, locations: jax.Array) -> jax.Array:
+    """E[v, i] = M[A(v)[i]] — mask-based retrieval of Definition 1.
+
+    memory: [m] (or [m] leading axis of a stacked pytree); locations: [..., d].
+    Returns embeddings with ``locations.shape`` + trailing dims of memory[1:].
+    """
+    return jnp.take(memory, locations, axis=0)
+
+
+def cosine(a: jax.Array, b: jax.Array, eps: float = 1e-12) -> jax.Array:
+    num = jnp.sum(a * b, axis=-1)
+    den = jnp.linalg.norm(a, axis=-1) * jnp.linalg.norm(b, axis=-1)
+    return num / jnp.maximum(den, eps)

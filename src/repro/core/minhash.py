@@ -1,0 +1,79 @@
+"""Minwise hashing (section 3.3) over ragged sets, TPU-friendly.
+
+A minhash ``l_pi(A) = min({pi(x) | x in A})`` is computed with a hash-derived
+permutation approximation ``pi_j(x) = hash_u32(x, seed_j)`` (the standard
+universal-hash minhash; collision probability equals Jaccard in expectation).
+
+Sets are presented as a dense ``[B, L]`` uint32 batch with a boolean mask (the data
+pipeline pads ragged D_v slices to the batch max).  Memory is bounded by scanning
+over hash functions in chunks instead of materializing ``[B, L, n_hashes]``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import UINT32_MAX, hash_u32, seed_stream
+
+
+def minhash_dense(
+    elems: jax.Array,      # [B, L] uint32 set elements (padded)
+    mask: jax.Array,       # [B, L] bool validity
+    n_hashes: int,
+    seed: int | jax.Array,
+    chunk: int = 16,
+) -> jax.Array:
+    """Return minhash signatures ``[B, n_hashes]`` (uint32).
+
+    Rows with an empty set get signature UINT32_MAX in every slot (callers detect
+    and fall back to the naive hashing trick per paper section 5, "Handling very
+    sparse features").
+    """
+    if isinstance(seed, jax.Array):
+        seeds = seed  # already a stream [n_hashes]
+    else:
+        seeds = seed_stream(seed, n_hashes)
+    n_chunks = -(-n_hashes // chunk)
+    pad = n_chunks * chunk - n_hashes
+    seeds_p = jnp.pad(seeds, (0, pad)).reshape(n_chunks, chunk)
+
+    masked_fill = jnp.where(mask, jnp.uint32(0), UINT32_MAX)
+
+    def body(_, seeds_c):
+        # [B, L, chunk]
+        h = hash_u32(elems[..., None], seeds_c[None, None, :])
+        h = jnp.maximum(h, masked_fill[..., None])  # invalid -> UINT32_MAX
+        sig_c = jnp.min(h, axis=1)                  # [B, chunk]
+        return None, sig_c
+
+    _, sigs = jax.lax.scan(body, None, seeds_p)
+    sigs = jnp.moveaxis(sigs, 0, 1).reshape(elems.shape[0], n_chunks * chunk)
+    return sigs[:, :n_hashes]
+
+
+def gather_ragged_sets(
+    flat: jax.Array,       # [nnz] uint32 flattened D' sample-id lists
+    offsets: jax.Array,    # [n_values + 1] int32 CSR offsets into flat
+    value_ids: jax.Array,  # [B] int32 values to fetch sets for
+    max_len: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Gather ``D_v`` for a batch of values, padded to ``max_len``.
+
+    Returns (elems [B, max_len] uint32, mask [B, max_len] bool).  Sets longer than
+    ``max_len`` are truncated (a uniform cap on the per-value representation; Thm 3
+    only requires enough nnz per value, see DESIGN.md).
+    """
+    start = offsets[value_ids]                        # [B]
+    length = offsets[value_ids + 1] - start           # [B]
+    pos = jnp.arange(max_len, dtype=jnp.int32)[None, :]
+    mask = pos < jnp.minimum(length, max_len)[:, None]
+    idx = jnp.clip(start[:, None] + pos, 0, flat.shape[0] - 1)
+    elems = jnp.take(flat, idx, axis=0).astype(jnp.uint32)
+    return elems, mask
+
+
+def jaccard_from_sets(a: set, b: set) -> float:
+    """Host-side exact Jaccard (test/benchmark oracle)."""
+    if not a and not b:
+        return 1.0
+    return len(a & b) / max(1, len(a | b))

@@ -1,0 +1,5 @@
+from repro.data.graph import (Graph, NeighborSampler, molecule_batch, pad_block,
+                              sbm_graph)
+from repro.data.lm_data import LMGenerator
+from repro.data.metrics import StreamingEval, accuracy, logloss, roc_auc
+from repro.data.synthetic_ctr import CTRGenerator, CTRSpec, DINGenerator, DINSpec

@@ -1,0 +1,157 @@
+"""Graph data: SBM synthetic graphs (Cora/products-shaped), neighbor sampling,
+molecule batching.
+
+``minibatch_lg`` requires a *real* neighbor sampler: ``NeighborSampler`` builds
+a CSR adjacency once and draws fanout-limited k-hop blocks (GraphSAGE-style),
+emitting fixed-shape (padded) edge lists so the jitted GAT step never re-traces.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Graph:
+    src: np.ndarray          # [E] int32
+    dst: np.ndarray          # [E] int32
+    features: np.ndarray     # [N, F] float32
+    labels: np.ndarray       # [N] int32
+    n_nodes: int
+    train_mask: np.ndarray | None = None
+
+
+def sbm_graph(n_nodes: int, n_edges: int, d_feat: int, n_classes: int,
+              seed: int = 0, homophily: float = 0.8) -> Graph:
+    """Stochastic-block-model graph with class-correlated features (Cora-like)."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, n_classes, n_nodes).astype(np.int32)
+    # sample edges: with prob homophily endpoints share a class
+    same = rng.random(n_edges) < homophily
+    src = rng.integers(0, n_nodes, n_edges)
+    dst = np.empty(n_edges, np.int64)
+    # same-class partner: draw until class matches (vectorized retry x3, then any)
+    dst_try = rng.integers(0, n_nodes, n_edges)
+    for _ in range(4):
+        bad = same & (labels[dst_try] != labels[src])
+        if not bad.any():
+            break
+        dst_try[bad] = rng.integers(0, n_nodes, bad.sum())
+    dst = dst_try
+    # add self loops + symmetrize
+    src = np.concatenate([src, dst, np.arange(n_nodes)])
+    dst = np.concatenate([dst, src[: n_edges], np.arange(n_nodes)])
+    class_proto = rng.normal(0, 1.0, (n_classes, d_feat))
+    features = (class_proto[labels] + rng.normal(0, 1.2, (n_nodes, d_feat))
+                ).astype(np.float32)
+    train_mask = rng.random(n_nodes) < 0.3
+    return Graph(src.astype(np.int32), dst.astype(np.int32), features, labels,
+                 n_nodes, train_mask)
+
+
+class NeighborSampler:
+    """Fanout-limited k-hop block sampler over a CSR adjacency."""
+
+    def __init__(self, graph: Graph, fanouts: tuple[int, ...], seed: int = 0):
+        self.graph = graph
+        self.fanouts = fanouts
+        self.rng = np.random.default_rng(seed)
+        order = np.argsort(graph.dst, kind="stable")
+        self.in_src = graph.src[order]            # incoming neighbors per node
+        self.indptr = np.zeros(graph.n_nodes + 1, np.int64)
+        np.add.at(self.indptr[1:], graph.dst, 1)
+        np.cumsum(self.indptr, out=self.indptr)
+
+    def sample(self, batch_nodes: np.ndarray) -> dict:
+        """Returns a block subgraph: local-id edge list covering k hops.
+
+        Output arrays are padded to fixed max sizes derived from fanouts so the
+        downstream jit signature is stable.
+        """
+        layers = [np.asarray(batch_nodes, np.int64)]
+        edges_src, edges_dst = [], []
+        frontier = layers[0]
+        for fan in self.fanouts:
+            nbr_src, nbr_dst = [], []
+            for v in frontier:
+                lo, hi = self.indptr[v], self.indptr[v + 1]
+                deg = hi - lo
+                if deg == 0:
+                    continue
+                take = min(fan, deg)
+                sel = self.rng.choice(deg, take, replace=False) + lo
+                nbr_src.append(self.in_src[sel])
+                nbr_dst.append(np.full(take, v, np.int64))
+            if nbr_src:
+                edges_src.append(np.concatenate(nbr_src))
+                edges_dst.append(np.concatenate(nbr_dst))
+                frontier = np.unique(edges_src[-1])
+            else:
+                frontier = np.empty(0, np.int64)
+            layers.append(frontier)
+        all_src = (np.concatenate(edges_src) if edges_src
+                   else np.empty(0, np.int64))
+        all_dst = (np.concatenate(edges_dst) if edges_dst
+                   else np.empty(0, np.int64))
+        nodes = np.unique(np.concatenate([np.concatenate(layers), all_src, all_dst]))
+        local = {int(g): i for i, g in enumerate(nodes)}
+        lsrc = np.array([local[int(s)] for s in all_src], np.int32)
+        ldst = np.array([local[int(d)] for d in all_dst], np.int32)
+        # self loops keep isolated batch nodes alive
+        loops = np.arange(len(nodes), dtype=np.int32)
+        g = self.graph
+        return {
+            "src": np.concatenate([lsrc, loops]),
+            "dst": np.concatenate([ldst, loops]),
+            "features": g.features[nodes],
+            "labels": g.labels[nodes],
+            "label_mask": np.isin(nodes, batch_nodes),
+            "n_nodes": len(nodes),
+        }
+
+
+def pad_block(block: dict, max_nodes: int, max_edges: int) -> dict:
+    """Pad a sampled block to fixed shapes (stable jit signature)."""
+    n, e = block["n_nodes"], len(block["src"])
+    assert n <= max_nodes and e <= max_edges, (n, e, max_nodes, max_edges)
+    out = dict(block)
+    out["src"] = np.concatenate(
+        [block["src"], np.zeros(max_edges - e, np.int32)])
+    # padded edges become self-loops on a padded (masked-out) node
+    out["dst"] = np.concatenate(
+        [block["dst"], np.full(max_edges - e, max_nodes - 1, np.int32)])
+    out["features"] = np.pad(block["features"],
+                             ((0, max_nodes - n), (0, 0)))
+    out["labels"] = np.pad(block["labels"], (0, max_nodes - n))
+    out["label_mask"] = np.pad(block["label_mask"], (0, max_nodes - n))
+    return out
+
+
+def molecule_batch(batch_size: int, n_nodes: int, n_edges: int, d_feat: int,
+                   n_classes: int, seed: int = 0) -> dict:
+    """Batched small graphs: block-diagonal edge list + graph ids for readout."""
+    rng = np.random.default_rng(seed)
+    srcs, dsts, gids = [], [], []
+    for b in range(batch_size):
+        s = rng.integers(0, n_nodes, n_edges) + b * n_nodes
+        d = rng.integers(0, n_nodes, n_edges) + b * n_nodes
+        loops = np.arange(n_nodes) + b * n_nodes
+        srcs.append(np.concatenate([s, d, loops]))
+        dsts.append(np.concatenate([d, s, loops]))
+        gids.append(np.full(n_nodes, b))
+    N = batch_size * n_nodes
+    labels = rng.integers(0, n_classes, batch_size).astype(np.int32)
+    feats = rng.normal(0, 1, (N, d_feat)).astype(np.float32)
+    # plant signal: add label prototype to each graph's features
+    proto = rng.normal(0, 1, (n_classes, d_feat))
+    for b in range(batch_size):
+        feats[b * n_nodes : (b + 1) * n_nodes] += proto[labels[b]]
+    return {
+        "src": np.concatenate(srcs).astype(np.int32),
+        "dst": np.concatenate(dsts).astype(np.int32),
+        "features": feats,
+        "graph_ids": np.concatenate(gids).astype(np.int32),
+        "n_graphs": batch_size,
+        "labels": labels,
+    }

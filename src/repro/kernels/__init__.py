@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the performance-critical compute hot-spots.
+
+Each kernel package: kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd wrapper; interpret-mode on CPU), ref.py (pure-jnp oracle).
+"""

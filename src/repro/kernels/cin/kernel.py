@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: xDeepFM Compressed Interaction Network layer.
+
+CIN: out[b,o,d] = sum_{h,f} W[o,h,f] * Xk[b,h,d] * X0[b,f,d].
+Rewritten for the MXU as: Z[b,(h,f),d] = Xk[b,h,d]*X0[b,f,d] (VPU outer
+product over the field axes), then a single [Ho, Hk*F] x [Hk*F, d] matmul per
+sample — blocked over the batch grid, Z lives only in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cin_kernel(xk_ref, x0_ref, w_ref, out_ref):
+    xk = xk_ref[...]                                  # [bB, Hk, D]
+    x0 = x0_ref[...]                                  # [bB, F, D]
+    w = w_ref[...]                                    # [Ho, Hk*F]
+    bB, Hk, D = xk.shape
+    F = x0.shape[1]
+    z = (xk[:, :, None, :] * x0[:, None, :, :]).reshape(bB, Hk * F, D)
+    # [bB, Q, D] x [Ho, Q] -> [bB, D, Ho] -> [bB, Ho, D]
+    out = jax.lax.dot_general(z, w, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    out_ref[...] = jnp.transpose(out, (0, 2, 1)).astype(out_ref.dtype)
+
+
+def cin_pallas(xk: jax.Array, x0: jax.Array, w: jax.Array, *,
+               block_b: int = 32, interpret: bool = False) -> jax.Array:
+    """xk [B, Hk, D], x0 [B, F, D], w [Ho, Hk, F] -> [B, Ho, D]."""
+    B, Hk, D = xk.shape
+    F = x0.shape[1]
+    Ho = w.shape[0]
+    bb = min(block_b, B)
+    assert B % bb == 0, (B, bb)
+    wf = w.reshape(Ho, Hk * F)
+    return pl.pallas_call(
+        _cin_kernel,
+        grid=(B // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, Hk, D), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bb, F, D), lambda i: (i, 0, 0)),
+            pl.BlockSpec((Ho, Hk * F), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, Ho, D), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Ho, D), xk.dtype),
+        interpret=interpret,
+    )(xk, x0, wf)

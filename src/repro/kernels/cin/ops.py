@@ -1,0 +1,29 @@
+"""Jit'd public wrapper for the CIN kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.cin.kernel import cin_pallas
+from repro.kernels.cin.ref import cin_ref
+
+
+@partial(jax.jit, static_argnums=(3,))
+def cin(xk: jax.Array, x0: jax.Array, w: jax.Array,
+        interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B = xk.shape[0]
+    bb = 32 if B % 32 == 0 else (B if B <= 32 else _divisor(B, 32))
+    return cin_pallas(xk, x0, w, block_b=bb, interpret=interpret)
+
+
+def _divisor(n: int, target: int) -> int:
+    for c in range(target, 0, -1):
+        if n % c == 0:
+            return c
+    return 1
+
+
+reference = cin_ref

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the CIN kernel (matches models/recsys.cin_layer)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cin_ref(xk: jax.Array, x0: jax.Array, w: jax.Array) -> jax.Array:
+    """xk [B, Hk, d], x0 [B, F, d], w [Ho, Hk, F] -> [B, Ho, d]."""
+    z = jnp.einsum("bhd,bfd->bhfd", xk.astype(jnp.float32),
+                   x0.astype(jnp.float32))
+    return jnp.einsum("bhfd,ohf->bod", z, w.astype(jnp.float32)
+                      ).astype(xk.dtype)

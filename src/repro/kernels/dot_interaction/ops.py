@@ -1,0 +1,28 @@
+"""Jit'd public wrapper for dot_interaction."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.dot_interaction.kernel import dot_interaction_pallas
+from repro.kernels.dot_interaction.ref import dot_interaction_ref
+
+
+@partial(jax.jit, static_argnums=(1,))
+def dot_interaction(feats: jax.Array, interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B = feats.shape[0]
+    bb = 128 if B % 128 == 0 else (B if B <= 128 else _divisor(B, 128))
+    return dot_interaction_pallas(feats, block_b=bb, interpret=interpret)
+
+
+def _divisor(n: int, target: int) -> int:
+    for c in range(target, 0, -1):
+        if n % c == 0:
+            return c
+    return 1
+
+
+reference = dot_interaction_ref

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the dot_interaction kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dot_interaction_ref(feats: jax.Array) -> jax.Array:
+    """feats [B, F, d] -> [B, F(F-1)/2] strictly-lower-triangular pairwise dots."""
+    z = jnp.einsum("bfd,bgd->bfg", feats.astype(jnp.float32),
+                   feats.astype(jnp.float32))
+    ii, jj = np.tril_indices(feats.shape[1], k=-1)
+    return z[:, ii, jj].astype(feats.dtype)

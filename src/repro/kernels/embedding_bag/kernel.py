@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: embedding-bag as blocked one-hot matmul.
+
+JAX has no native EmbeddingBag; the TPU-native formulation of a multi-hot
+gather+pool is a *one-hot matmul*: A[b, v] = sum_l w[b,l] * [ids[b,l] == v],
+out = A @ table — which runs on the MXU instead of scalar gathers.  The vocab
+is tiled over a grid axis so each step holds one [bV, d] table tile in VMEM
+and accumulates into the output block (revisited across the V axis).
+
+This is the right regime for *small/medium vocab tiles* (the per-shard slice
+of an LMA memory, field tables, molecule dictionaries); huge-vocab bags go
+through the XLA gather path in core.embedding.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bag_kernel(ids_ref, w_ref, table_ref, out_ref, *, block_v: int):
+    j = pl.program_id(1)
+    ids = ids_ref[...]                               # [bB, L] int32
+    w = w_ref[...]                                   # [bB, L] f32
+    table = table_ref[...]                           # [bV, d]
+    v_lo = j * block_v
+    bB, L = ids.shape
+    bV = table.shape[0]
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    def body(l, acc):
+        col = ids[:, l] - v_lo                       # [bB]
+        onehot = (col[:, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (bB, bV), 1)).astype(table.dtype)
+        return acc + onehot * w[:, l][:, None]
+
+    A = jax.lax.fori_loop(0, L, body, jnp.zeros((bB, bV), table.dtype))
+    out_ref[...] += jnp.dot(A, table, preferred_element_type=jnp.float32
+                            ).astype(out_ref.dtype)
+
+
+def embedding_bag_pallas(table: jax.Array, ids: jax.Array, weights: jax.Array,
+                         *, block_b: int = 128, block_v: int = 512,
+                         interpret: bool = False) -> jax.Array:
+    """table [V, d], ids [B, L] int32, weights [B, L] -> [B, d] pooled sums."""
+    V, d = table.shape
+    B, L = ids.shape
+    bb = min(block_b, B)
+    bv = min(block_v, V)
+    assert B % bb == 0 and V % bv == 0, (B, bb, V, bv)
+    kern = functools.partial(_bag_kernel, block_v=bv)
+    return pl.pallas_call(
+        kern,
+        grid=(B // bb, V // bv),
+        in_specs=[
+            pl.BlockSpec((bb, L), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, L), lambda i, j: (i, 0)),
+            pl.BlockSpec((bv, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, d), table.dtype),
+        interpret=interpret,
+    )(ids, weights.astype(table.dtype), table)

@@ -1,0 +1,34 @@
+"""Jit'd public wrapper for the embedding-bag kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+@partial(jax.jit, static_argnums=(3,))
+def embedding_bag(table: jax.Array, ids: jax.Array, weights: jax.Array,
+                  interpret: bool | None = None) -> jax.Array:
+    """table [V, d], ids [B, L], weights [B, L] -> [B, d] weighted-sum bags."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B = ids.shape[0]
+    V = table.shape[0]
+    bb = 128 if B % 128 == 0 else (B if B <= 128 else _divisor(B, 128))
+    bv = 512 if V % 512 == 0 else (V if V <= 512 else _divisor(V, 512))
+    return embedding_bag_pallas(table, ids, weights, block_b=bb, block_v=bv,
+                                interpret=interpret)
+
+
+def _divisor(n: int, target: int) -> int:
+    for c in range(target, 0, -1):
+        if n % c == 0:
+            return c
+    return 1
+
+
+reference = embedding_bag_ref

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the embedding_bag kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jax.Array, ids: jax.Array,
+                      weights: jax.Array) -> jax.Array:
+    """out[b] = sum_l weights[b,l] * table[ids[b,l]]."""
+    gathered = jnp.take(table, ids, axis=0)             # [B, L, d]
+    return jnp.einsum("bl,bld->bd", weights.astype(table.dtype), gathered)

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: fused LMA location computation.
+
+The LMA hot path (paper section 5, "Forward Pass") computes, per batch value,
+``d`` memory locations from its D_v set: R = d*n_h universal-hash minhashes ->
+power-n_h combine -> k-universal rehash into [0, m).  This is R*max_set integer
+multiply/xor/min work per value — pure VPU ALU, zero MXU — and on GPU the paper
+runs it as a batched CUDA kernel.  TPU adaptation: tile the batch over the
+grid, keep the [bB, max_set] set tile and the [bB, R] signature accumulator in
+VMEM, iterate hash seeds with fori_loop (seeds live in SMEM via scalar
+prefetch-like small VMEM block).
+
+The gather from M itself stays an XLA gather (TPU's native sparse-access
+engine); ``ops.lma_gather`` fuses kernel locations + jnp.take.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.allocation import LMAParams
+from repro.core.signatures import DenseSignatureStore
+
+# murmur3 constants as Python ints: jnp module-level arrays would be captured
+# as pallas consts; np scalars created inside the kernel body trace as literals
+_C1, _C2 = 0x85EBCA6B, 0xC2B2AE35
+_M1, _M2, _GOLDEN = 0xCC9E2D51, 0x1B873593, 0x9E3779B9
+
+
+def _u(v):
+    import numpy as np
+    return np.uint32(v)
+
+
+def fmix32(x):
+    x = x ^ (x >> 16)
+    x = x * _u(_C1)
+    x = x ^ (x >> 13)
+    x = x * _u(_C2)
+    return x ^ (x >> 16)
+
+
+def _hash_u32(x, seed):
+    h = (x ^ seed) * _u(_M1)
+    h = (h ^ (h >> 15)) * _u(_M2)
+    return fmix32(h ^ seed)
+
+
+def _locations_kernel(sets_ref, seeds_ref, rehash_ref, loc_ref, *,
+                      d: int, n_h: int, m: int, independent: bool):
+    sets = sets_ref[...]                            # [bB, S] uint32
+    mask = sets != jnp.uint32(0xFFFFFFFF)
+    R = d * n_h if independent else d + n_h - 1
+
+    def one_hash(j, sigs):
+        h = _hash_u32(sets, seeds_ref[j])           # [bB, S]
+        h = jnp.where(mask, h, jnp.uint32(0xFFFFFFFF))
+        return sigs.at[:, j].set(jnp.min(h, axis=1))
+
+    sigs0 = jnp.zeros((sets.shape[0], R), jnp.uint32)
+    sigs = jax.lax.fori_loop(0, R, one_hash, sigs0)  # [bB, R]
+
+    if independent:
+        grouped = sigs.reshape(sets.shape[0], d, n_h)
+    else:
+        idx = (jnp.arange(d)[:, None] + jnp.arange(n_h)[None, :])
+        grouped = sigs[:, idx]
+
+    def chain(t, h):
+        part = jax.lax.dynamic_index_in_dim(grouped, t, axis=2, keepdims=False)
+        return (h ^ fmix32(part)) * _u(_M1) + _u(_GOLDEN)
+
+    h0 = jnp.broadcast_to(rehash_ref[...][None, :],
+                          (sets.shape[0], d)).astype(jnp.uint32)
+    h = jax.lax.fori_loop(0, n_h, chain, h0)
+    loc_ref[...] = (fmix32(h) % jnp.uint32(m)).astype(jnp.int32)
+
+
+def lma_locations_pallas(params: LMAParams, sets: jax.Array, seeds: jax.Array,
+                         rehash_seeds: jax.Array, *, block_b: int = 256,
+                         interpret: bool = False) -> jax.Array:
+    """sets [B, max_set] uint32 (PAD=0xFFFFFFFF) -> locations [B, d] int32."""
+    B, S = sets.shape
+    assert B % block_b == 0 or B < block_b, (B, block_b)
+    bb = min(block_b, B)
+    kern = functools.partial(
+        _locations_kernel, d=params.d, n_h=params.n_h, m=params.m,
+        independent=params.independent_hashes)
+    return pl.pallas_call(
+        kern,
+        grid=(B // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, S), lambda i: (i, 0)),
+            pl.BlockSpec((seeds.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((params.d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bb, params.d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, params.d), jnp.int32),
+        interpret=interpret,
+    )(sets, seeds, rehash_seeds)

@@ -1,0 +1,40 @@
+"""Jit'd public wrapper: Pallas on TPU, interpret-mode elsewhere."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.allocation import LMAParams
+from repro.core.hashing import seed_stream
+from repro.kernels.lma_locations.kernel import lma_locations_pallas
+from repro.kernels.lma_locations.ref import lma_locations_ref
+
+
+def _seeds(params: LMAParams):
+    return (seed_stream(params.seed, params.n_raw_hashes),
+            seed_stream(params.seed ^ 0x7F4A7C15, params.d))
+
+
+@partial(jax.jit, static_argnums=(0, 2))
+def lma_locations(params: LMAParams, sets: jax.Array,
+                  interpret: bool | None = None) -> jax.Array:
+    """sets [B, max_set] uint32 -> [B, d] int32 locations in [0, m)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    seeds, rehash = _seeds(params)
+    return lma_locations_pallas(params, sets, seeds, rehash,
+                                interpret=interpret)
+
+
+def lma_gather(params: LMAParams, memory: jax.Array, sets: jax.Array,
+               interpret: bool | None = None) -> jax.Array:
+    """Kernel locations + native gather -> [B, d] embeddings."""
+    loc = lma_locations(params, sets, interpret)
+    return jnp.take(memory, loc, axis=0)
+
+
+def reference(params: LMAParams, sets: jax.Array) -> jax.Array:
+    seeds, _ = _seeds(params)
+    return lma_locations_ref(params, sets, seeds)

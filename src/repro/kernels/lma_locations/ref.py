@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the lma_locations kernel (bit-exact)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.allocation import (LMAParams, lma_signatures,
+                                   locations_from_signatures)
+from repro.core.minhash import minhash_dense
+from repro.core.signatures import DenseSignatureStore
+
+
+def lma_locations_ref(params: LMAParams, sets: jax.Array,
+                      seeds: jax.Array) -> jax.Array:
+    """sets [B, max_set] uint32 (PAD sentinel) -> [B, d] int32 locations."""
+    mask = sets != DenseSignatureStore.PAD
+    sigs = minhash_dense(sets, mask, params.n_raw_hashes, seeds)
+    return locations_from_signatures(params, sigs)

@@ -1,0 +1,355 @@
+"""Step builders + ShapeDtypeStruct input specs for every (arch x shape) cell.
+
+``build_cell(arch_id, shape_id, mesh)`` returns a Bundle with:
+  fn          — the step function to jit (train_step / prefill / serve_step /
+                forward / retrieval)
+  args        — ShapeDtypeStruct pytree (no device allocation)
+  in_shardings / out_shardings — NamedShardings per DESIGN.md section 5
+  donate      — argnums to donate (params/opt for train, cache for decode)
+
+The same builders power the real launchers (train.py / serve.py) with concrete
+arrays instead of specs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, get_config
+from repro.configs.gat_cora import GNN_SHAPE_TABLE
+from repro.configs._lm_common import LM_SHAPE_TABLE
+from repro.configs._recsys_common import RECSYS_SHAPE_TABLE
+from repro.dist import sharding as shd
+from repro.dist.sharding import ALL, DP, EP
+from repro.models import gnn, recsys, transformer
+from repro.optim import optimizers as opt_lib
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class Bundle:
+    arch_id: str
+    shape_id: str
+    fn: Callable
+    args: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate: tuple[int, ...] = ()
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+def make_optimizer(arch: ArchConfig):
+    if arch.optimizer == "adafactor":
+        return opt_lib.adafactor(arch.learning_rate)
+    if arch.optimizer == "adam":
+        return opt_lib.adam(arch.learning_rate)
+    if arch.optimizer == "adagrad":
+        return opt_lib.adagrad(arch.learning_rate)
+    if arch.optimizer == "sgd":
+        return opt_lib.sgd(arch.learning_rate, momentum=0.9)
+    raise ValueError(arch.optimizer)
+
+
+def _shardings(mesh, shapes, rules):
+    return shd.shardings_for(mesh, shapes, rules)
+
+
+def _rep(mesh, tree):
+    return jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), tree,
+        is_leaf=lambda x: isinstance(x, SDS))
+
+
+def _fit_dp(mesh, n):
+    """Batch PartitionSpec over dp axes if divisible, else replicate."""
+    spec = shd.resolve_template([[DP, "data", None]], (n,), mesh)
+    return spec
+
+
+# ------------------------------------------------------------------------- LM
+
+LM_CACHE_RULES = [
+    # [count, B, L, (KV, hd | r+rd)] — cache LENGTH shards over 'model' plus
+    # every dp axis the batch leaves idle (flash-decoding,
+    # dist/flash_decode.py): works for every arch including qwen's 40 KV
+    # heads, and spreads the B=1 long_500k cache over the full mesh
+    (r"/(k|v)$", [None, [DP, "data", None], [ALL, EP, "model"], None, None]),
+    (r"/ckv$", [None, [DP, "data", None], [ALL, EP, "model"], None]),
+    # int8-cache scales: same (B, L) sharding as their cache
+    (r"/(k|v)_scale$", [None, [DP, "data", None], [ALL, EP, "model"], None]),
+    (r"/ckv_scale$", [None, [DP, "data", None], [ALL, EP, "model"]]),
+]
+
+
+def _lm_bundle(arch: ArchConfig, shape_id: str, mesh) -> Bundle:
+    t = LM_SHAPE_TABLE[shape_id]
+    tcfg = arch.make_model(shape_id)
+    B, S = t["global_batch"], t["seq_len"]
+    rules = shd.lm_rules()
+
+    param_shapes = jax.eval_shape(
+        lambda: transformer.init(jax.random.key(0), tcfg))
+    param_sh = _shardings(mesh, param_shapes, rules)
+    tok = SDS((B, S), jnp.int32)
+    bspec = shd.resolve_template([[DP, "data", None], None], (B, S), mesh)
+    tok_sh = NamedSharding(mesh, bspec)
+
+    if t["kind"] == "train":
+        optimizer = make_optimizer(arch)
+        opt_shapes = jax.eval_shape(optimizer.init, param_shapes)
+        opt_sh = _shardings(mesh, opt_shapes, rules)
+
+        def train_step(params, opt_state, batch):
+            def lf(p):
+                loss, m = transformer.loss_fn(p, tcfg, batch["tokens"],
+                                              batch["labels"])
+                return loss, m
+            (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+            updates, opt_state = optimizer.update(grads, opt_state, params)
+            params = opt_lib.apply_updates(params, updates)
+            return params, opt_state, metrics["ce"]
+
+        batch = {"tokens": tok, "labels": tok}
+        batch_sh = {"tokens": tok_sh, "labels": tok_sh}
+        return Bundle(
+            arch.arch_id, shape_id, train_step,
+            (param_shapes, opt_shapes, batch),
+            (param_sh, opt_sh, batch_sh),
+            (param_sh, opt_sh, NamedSharding(mesh, P())),
+            donate=(0, 1), meta={"kind": "train", "tokens": B * S})
+
+    if t["kind"] == "prefill":
+        def prefill_step(params, tokens):
+            return transformer.prefill(params, tcfg, tokens)
+
+        cache_shapes = jax.eval_shape(
+            lambda: transformer.init_cache(tcfg, B, S))
+        cache_sh = _shardings(mesh, cache_shapes, LM_CACHE_RULES)
+        logits_sh = NamedSharding(mesh, shd.resolve_template(
+            [[DP, "data", None], ["model"]], (B, tcfg.vocab_size), mesh))
+        return Bundle(
+            arch.arch_id, shape_id, prefill_step,
+            (param_shapes, tok),
+            (param_sh, tok_sh),
+            (logits_sh, cache_sh),
+            meta={"kind": "prefill", "tokens": B * S})
+
+    # decode (decode_32k / long_500k): one token against an S-long cache
+    def serve_step(params, tokens, cache, cache_len):
+        return transformer.decode_step(params, tcfg, tokens, cache, cache_len)
+
+    cache_shapes = jax.eval_shape(lambda: transformer.init_cache(tcfg, B, S))
+    cache_sh = _shardings(mesh, cache_shapes, LM_CACHE_RULES)
+    tok1 = SDS((B,), jnp.int32)
+    tok1_sh = NamedSharding(mesh, _fit_dp(mesh, B))
+    len_spec = SDS((), jnp.int32)
+    logits_sh = NamedSharding(mesh, shd.resolve_template(
+        [[DP, "data", None], ["model"]], (B, tcfg.vocab_size), mesh))
+    return Bundle(
+        arch.arch_id, shape_id, serve_step,
+        (param_shapes, tok1, cache_shapes, len_spec),
+        (param_sh, tok1_sh, cache_sh, NamedSharding(mesh, P())),
+        (logits_sh, cache_sh),
+        donate=(2,), meta={"kind": "decode", "tokens": B})
+
+
+# --------------------------------------------------------------------- recsys
+
+def _recsys_batch_specs(rcfg, B: int, mesh):
+    if rcfg.model == "din":
+        batch = {"hist": SDS((B, rcfg.hist_len), jnp.int32),
+                 "hist_mask": SDS((B, rcfg.hist_len), jnp.bool_),
+                 "target": SDS((B,), jnp.int32),
+                 "label": SDS((B,), jnp.float32)}
+    else:
+        batch = {"sparse": SDS((B, rcfg.n_fields), jnp.int32),
+                 "label": SDS((B,), jnp.float32)}
+        if rcfg.n_dense:
+            batch["dense"] = SDS((B, rcfg.n_dense), jnp.float32)
+    sh = {}
+    for k, v in batch.items():
+        tmpl = [[DP, "data", None]] + [None] * (len(v.shape) - 1)
+        sh[k] = NamedSharding(mesh, shd.resolve_template(tmpl, v.shape, mesh))
+    return batch, sh
+
+
+def _recsys_buffer_specs(rcfg, mesh):
+    e = rcfg.embedding
+    if e.kind != "lma":
+        return {}, {}
+    total = store_rows(e.total_vocab)
+    bufs = {"store_sets": SDS((total, e.lma.max_set), jnp.uint32),
+            "store_lengths": SDS((total,), jnp.int32)}
+    sh = _shardings(mesh, bufs, shd.buffer_rules())
+    return bufs, sh
+
+
+def store_rows(total_vocab: int) -> int:
+    """Dense-store rows padded so every mesh axis divides evenly (shard_map)."""
+    return -(-total_vocab // 512) * 512
+
+
+def _recsys_bundle(arch: ArchConfig, shape_id: str, mesh) -> Bundle:
+    t = RECSYS_SHAPE_TABLE[shape_id]
+    rcfg = arch.make_model(shape_id)
+    rules = shd.recsys_rules()
+    param_shapes = jax.eval_shape(lambda: recsys.init(jax.random.key(0), rcfg))
+    param_sh = _shardings(mesh, param_shapes, rules)
+    bufs, bufs_sh = _recsys_buffer_specs(rcfg, mesh)
+
+    if t["kind"] == "train":
+        B = t["batch"]
+        optimizer = make_optimizer(arch)
+        opt_shapes = jax.eval_shape(optimizer.init, param_shapes)
+        opt_sh = _shardings(mesh, opt_shapes, rules)
+        batch, batch_sh = _recsys_batch_specs(rcfg, B, mesh)
+
+        def train_step(params, opt_state, buffers, batch):
+            (loss, m), grads = jax.value_and_grad(
+                lambda p: recsys.loss_fn(p, rcfg, batch, buffers),
+                has_aux=True)(params)
+            updates, opt_state = optimizer.update(grads, opt_state, params)
+            params = opt_lib.apply_updates(params, updates)
+            return params, opt_state, loss
+
+        return Bundle(
+            arch.arch_id, shape_id, train_step,
+            (param_shapes, opt_shapes, bufs, batch),
+            (param_sh, opt_sh, bufs_sh, batch_sh),
+            (param_sh, opt_sh, NamedSharding(mesh, P())),
+            donate=(0, 1), meta={"kind": "train", "examples": B})
+
+    if t["kind"] == "serve":
+        B = t["batch"]
+        batch, batch_sh = _recsys_batch_specs(rcfg, B, mesh)
+        batch.pop("label"); batch_sh.pop("label")
+
+        def serve_step(params, buffers, batch):
+            return recsys.forward(params, rcfg, batch, buffers)
+
+        out_sh = NamedSharding(mesh, _fit_dp(mesh, B))
+        return Bundle(
+            arch.arch_id, shape_id, serve_step,
+            (param_shapes, bufs, batch),
+            (param_sh, bufs_sh, batch_sh),
+            out_sh, meta={"kind": "serve", "examples": B})
+
+    # retrieval: one context vs n_candidates, chunked inside
+    C = t["n_candidates"]
+    batch, _ = _recsys_batch_specs(rcfg, 1, mesh)
+    batch.pop("label")
+    batch_sh = _rep(mesh, batch)
+    cand = SDS((C,), jnp.int32)
+    cand_sh = NamedSharding(mesh, P())
+    chunk = int(t.get("chunk", 16384))
+
+    def retrieval_step(params, buffers, batch, candidates):
+        return recsys.retrieval(params, rcfg, batch, candidates, buffers,
+                                chunk=chunk)
+
+    return Bundle(
+        arch.arch_id, shape_id, retrieval_step,
+        (param_shapes, bufs, batch, cand),
+        (param_sh, bufs_sh, batch_sh, cand_sh),
+        NamedSharding(mesh, P()),
+        meta={"kind": "retrieval", "examples": C})
+
+
+# ------------------------------------------------------------------------ GNN
+
+def _pad_to(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+def _gnn_bundle(arch: ArchConfig, shape_id: str, mesh) -> Bundle:
+    t = GNN_SHAPE_TABLE[shape_id]
+    gcfg = arch.make_model(shape_id)
+    ndev = int(np.prod(mesh.devices.shape))
+    rules = shd.gnn_rules()
+    optimizer = make_optimizer(arch)
+
+    if t["kind"] == "batched_graphs":
+        B, n, e = t["batch"], t["n_nodes"], t["n_edges"]
+        N = B * n
+        E = B * (2 * e + n)
+        batch = {"features": SDS((N, t["d_feat"]), jnp.float32),
+                 "src": SDS((E,), jnp.int32), "dst": SDS((E,), jnp.int32),
+                 "graph_ids": SDS((N,), jnp.int32), "n_graphs": B,
+                 "labels": SDS((B,), jnp.int32)}
+    elif t["kind"] == "minibatch":
+        b, (f1, f2) = t["batch_nodes"], t["fanout"]
+        N = b + b * f1 + b * f1 * f2               # 169,984 for 1024/15-10
+        E = b * f1 + b * f1 * f2 + N               # sampled edges + self loops
+        batch = {"features": SDS((N, t["d_feat"]), jnp.float32),
+                 "src": SDS((E,), jnp.int32), "dst": SDS((E,), jnp.int32),
+                 "edge_mask": SDS((E,), jnp.bool_),
+                 "labels": SDS((N,), jnp.int32),
+                 "label_mask": SDS((N,), jnp.bool_)}
+    else:  # full_graph
+        N = _pad_to(t["n_nodes"], ndev)
+        E = _pad_to(t["n_edges"] + t["n_nodes"], ndev)  # + self loops
+        batch = {"features": SDS((N, t["d_feat"]), jnp.float32),
+                 "src": SDS((E,), jnp.int32), "dst": SDS((E,), jnp.int32),
+                 "edge_mask": SDS((E,), jnp.bool_),
+                 "labels": SDS((N,), jnp.int32),
+                 "label_mask": SDS((N,), jnp.bool_)}
+
+    param_shapes = jax.eval_shape(lambda: gnn.init(jax.random.key(0), gcfg))
+    param_sh = _shardings(mesh, param_shapes, rules)
+    opt_shapes = jax.eval_shape(optimizer.init, param_shapes)
+    opt_sh = _shardings(mesh, opt_shapes, rules)
+
+    def spec_for(k, v):
+        if not hasattr(v, "shape") or v.shape == ():
+            return NamedSharding(mesh, P())
+        if k in ("src", "dst", "edge_mask"):
+            tmpl = [[ALL, EP, "model", "data", None]]
+        elif k in ("features", "labels", "label_mask", "graph_ids"):
+            tmpl = [[DP, "data", None]] + [None] * (len(v.shape) - 1)
+        else:
+            tmpl = [None] * len(v.shape)
+        return NamedSharding(mesh, shd.resolve_template(tmpl, v.shape, mesh))
+
+    batch_sh = {k: spec_for(k, v) for k, v in batch.items()
+                if hasattr(v, "shape")}
+    batch = {k: v for k, v in batch.items() if hasattr(v, "shape")}
+    if t["kind"] == "batched_graphs":
+        fn_batch_static = {"n_graphs": t["batch"]}
+    else:
+        fn_batch_static = {}
+
+    def train_step(params, opt_state, batch):
+        full = dict(batch, **fn_batch_static)
+        (loss, m), grads = jax.value_and_grad(
+            lambda p: gnn.loss_fn(p, gcfg, full), has_aux=True)(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = opt_lib.apply_updates(params, updates)
+        return params, opt_state, loss
+
+    return Bundle(
+        arch.arch_id, shape_id, train_step,
+        (param_shapes, opt_shapes, batch),
+        (param_sh, opt_sh, batch_sh),
+        (param_sh, opt_sh, NamedSharding(mesh, P())),
+        donate=(0, 1), meta={"kind": "train", "nodes": N, "edges": E})
+
+
+def build_cell(arch_id: str, shape_id: str, mesh) -> Bundle:
+    arch = get_config(arch_id)
+    if shape_id not in arch.shapes:
+        raise ValueError(f"{arch_id} does not define shape {shape_id}")
+    if arch.family == "lm":
+        return _lm_bundle(arch, shape_id, mesh)
+    if arch.family == "recsys":
+        return _recsys_bundle(arch, shape_id, mesh)
+    if arch.family == "gnn":
+        return _gnn_bundle(arch, shape_id, mesh)
+    raise ValueError(arch.family)

@@ -1,0 +1,76 @@
+"""Dry-run sweep driver: every (arch x shape x mesh) cell in an isolated
+subprocess (fresh XLA per cell; one bad cell cannot kill the sweep).
+
+  PYTHONPATH=src python -m repro.launch.sweep [--force] [--single-pod-only]
+
+Skips cells whose artifact JSON already exists (incremental re-runs).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "experiments", "dryrun")
+
+
+def cells():
+    # import deferred: this module must not init jax (device count!)
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "from repro.configs.base import get_config, list_archs\n"
+         "import json\n"
+         "cs=[]\n"
+         "for a in list_archs():\n"
+         "  if a.startswith('lma-dlrm'): continue\n"
+         "  for s in get_config(a).shapes: cs.append([a,s])\n"
+         "print(json.dumps(cs))"],
+        capture_output=True, text=True, env=dict(os.environ))
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--timeout", type=int, default=2400)
+    args = ap.parse_args()
+    os.makedirs(ART, exist_ok=True)
+    meshes = ["16x16"] if args.single_pod_only else ["16x16", "2x16x16"]
+    failures, done, skipped = [], 0, 0
+    cs = cells()
+    t0 = time.time()
+    for arch, shape in cs:
+        for mesh in meshes:
+            art = os.path.join(ART, f"{arch}__{shape}__{mesh}.json")
+            if os.path.exists(art) and not args.force:
+                skipped += 1
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape]
+            if mesh == "2x16x16":
+                cmd.append("--multi-pod")
+            print(f"[sweep] {arch} x {shape} @ {mesh} "
+                  f"(t+{time.time()-t0:.0f}s)", flush=True)
+            try:
+                r = subprocess.run(cmd, timeout=args.timeout,
+                                   capture_output=True, text=True)
+                if r.returncode != 0:
+                    failures.append((arch, shape, mesh))
+                    print(r.stdout[-1500:], r.stderr[-3000:], flush=True)
+                else:
+                    done += 1
+                    print("\n".join(r.stdout.splitlines()[-4:]), flush=True)
+            except subprocess.TimeoutExpired:
+                failures.append((arch, shape, mesh, "timeout"))
+                print(f"[sweep] TIMEOUT {arch} {shape} {mesh}", flush=True)
+    print(f"[sweep] done={done} skipped={skipped} failures={failures}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Training launcher: real data + the same step builders the dry-run lowers.
+
+On hardware this runs under the production mesh; on this container it runs on
+however many devices exist (1 CPU or N forced hosts).  The recsys family is
+fully runnable end-to-end (synthetic CTR data with planted semantics); the LM
+family runs at smoke scale with the bigram generator.
+
+  PYTHONPATH=src python -m repro.launch.train --arch lma-dlrm-criteo \
+      --steps 300 --ckpt-dir /tmp/ckpt
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b --smoke \
+      --steps 100
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.core.embedding import make_buffers
+from repro.core.signatures import build_signature_store, densify_store
+from repro.data.lm_data import LMGenerator
+from repro.data.metrics import StreamingEval
+from repro.data.synthetic_ctr import CTRGenerator, CTRSpec, DINGenerator, DINSpec
+from repro.models import recsys, transformer
+from repro.optim import optimizers as opt_lib
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def make_optimizer(arch):
+    return {"adam": opt_lib.adam, "adagrad": opt_lib.adagrad,
+            "adafactor": opt_lib.adafactor,
+            "sgd": lambda lr: opt_lib.sgd(lr, momentum=0.9)}[
+        arch.optimizer](arch.learning_rate)
+
+
+def _recsys_setup(arch, cfg, n_s: int, batch: int):
+    e = cfg.embedding
+    if cfg.model == "din":
+        gen = DINGenerator(DINSpec(n_items=e.vocab_sizes[0], hist_len=max(
+            cfg.hist_len, 8), n_clusters=50, seed=0))
+    else:
+        spec = CTRSpec(n_fields=cfg.n_fields, n_dense=cfg.n_dense,
+                       vocab_sizes=e.vocab_sizes, seed=0)
+        gen = CTRGenerator(spec)
+    bufs = {}
+    if e.kind == "lma":
+        print(f"building D' ({n_s} rows)...")
+        store = build_signature_store(gen.rows_for_signatures(n_s),
+                                      e.total_vocab, max_per_value=e.lma.max_set)
+        bufs = make_buffers(e, densify_store(store, e.lma.max_set))
+
+    def batch_fn(step):
+        return {k: jnp.asarray(v) for k, v in gen.batch(batch, step).items()}
+
+    return gen, bufs, batch_fn, (lambda p, b: recsys.loss_fn(p, cfg, b, bufs))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="lma-dlrm-criteo")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (required for LM archs here)")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=512)
+    ap.add_argument("--ckpt-dir")
+    ap.add_argument("--n-signatures", type=int, default=10_000)
+    ap.add_argument("--eval-batches", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    arch = get_config(args.arch)
+    cfg = arch.make_smoke() if (args.smoke or arch.family == "lm") \
+        else arch.make_model(None)
+
+    if arch.family == "recsys":
+        gen, bufs, batch_fn, loss_fn = _recsys_setup(
+            arch, cfg, args.n_signatures, args.batch)
+        params = recsys.init(jax.random.key(0), cfg)
+    elif arch.family == "lm":
+        gen = LMGenerator(cfg.vocab_size, seed=0)
+
+        def batch_fn(step):
+            b = gen.batch(min(args.batch, 16), 64, step)
+            return {k: jnp.asarray(v) for k, v in b.items()}
+
+        def loss_fn(p, b):
+            return transformer.loss_fn(p, cfg, b["tokens"], b["labels"])
+
+        params = transformer.init(jax.random.key(0), cfg)
+        bufs = {}
+    else:
+        raise SystemExit(f"use examples/ for family {arch.family}")
+
+    n_params = sum(int(np.prod(x.shape))
+                   for x in jax.tree_util.tree_leaves(params))
+    print(f"{args.arch}: {n_params:,} parameters on {len(jax.devices())} "
+          f"device(s)")
+    trainer = Trainer(
+        TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=100, log_every=max(args.steps // 10, 1)),
+        loss_fn, params, make_optimizer(arch), batch_fn)
+    trainer.install_signal_handlers()
+    out = trainer.fit()
+    print(f"done: {out}")
+
+    if arch.family == "recsys":
+        ev = StreamingEval()
+        fwd = jax.jit(lambda p, b: recsys.forward(p, cfg, b, bufs))
+        for i in range(args.eval_batches):
+            b = gen.batch(2048, 700_000 + i)
+            jb = {k: jnp.asarray(v) for k, v in b.items() if k != "label"}
+            ev.add(b["label"], np.asarray(fwd(trainer.params, jb)))
+        print(f"eval: {ev.compute()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.models import gnn, recsys, transformer
+from repro.models.gnn import GATConfig
+from repro.models.recsys import RecsysConfig
+from repro.models.transformer import TransformerConfig

@@ -1,0 +1,161 @@
+"""Graph attention network (GAT, Velickovic et al. 2018) via segment ops.
+
+JAX sparse is BCOO-only, so message passing is implemented directly over an
+edge-index representation: SDDMM-style per-edge attention logits, segment-max/
+segment-sum edge-softmax per destination node, and scatter-add aggregation —
+exactly the kernel regime the taxonomy prescribes for GAT (SpMM/SDDMM).
+
+Supports: full-batch (Cora, ogbn-products scale), sampled minibatch blocks
+(fanout sampling, see repro/data/graph.py), and batched small molecule graphs
+(block-diagonal edges + segment-mean readout).
+
+LMA note (DESIGN.md §Arch-applicability): GAT on Cora consumes dense bag-of-words
+features, so there is no categorical embedding table to allocate — the paper's
+technique is inapplicable here and the model is built without it.  For id-feature
+graphs (minibatch_lg), ``node_id_embedding`` optionally draws node embeddings
+from an LMA/full embedding instead of an input feature matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.embedding import EmbeddingConfig, embed, init_embedding
+from repro.nn.modules import dense_init, mlp, mlp_init
+
+
+@dataclasses.dataclass(frozen=True)
+class GATConfig:
+    d_in: int
+    n_layers: int = 2
+    d_hidden: int = 8
+    n_heads: int = 8
+    n_classes: int = 7
+    negative_slope: float = 0.2
+    readout: Optional[str] = None      # None (node-level) | "mean" (graph-level)
+    node_id_embedding: Optional[EmbeddingConfig] = None
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def init(key, cfg: GATConfig) -> dict:
+    params = {}
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    if cfg.node_id_embedding is not None:
+        params["node_embed"] = init_embedding(keys[-1], cfg.node_id_embedding)
+    d_prev = cfg.d_in
+    for li in range(cfg.n_layers):
+        last = li == cfg.n_layers - 1
+        d_out = cfg.n_classes if (last and cfg.readout is None) else cfg.d_hidden
+        k1, k2, k3 = jax.random.split(keys[li], 3)
+        s = 1.0 / np.sqrt(d_prev)
+        params[f"layer_{li}"] = {
+            "w": (jax.random.normal(k1, (d_prev, cfg.n_heads, d_out)) * s
+                  ).astype(cfg.jdtype),
+            "a_src": (jax.random.normal(k2, (cfg.n_heads, d_out)) * s).astype(cfg.jdtype),
+            "a_dst": (jax.random.normal(k3, (cfg.n_heads, d_out)) * s).astype(cfg.jdtype),
+        }
+        # forward() concat-heads on every layer except a node-level output
+        # layer (readout None), which head-means instead.
+        d_prev = d_out if (last and cfg.readout is None) else d_out * cfg.n_heads
+    if cfg.readout is not None:
+        params["head"] = mlp_init(keys[-2], [d_prev, cfg.d_hidden * cfg.n_heads,
+                                             cfg.n_classes])
+    return params
+
+
+def gat_conv(p: dict, x: jax.Array, src: jax.Array, dst: jax.Array,
+             n_nodes: int, *, negative_slope: float, concat_heads: bool,
+             edge_mask: jax.Array | None = None) -> jax.Array:
+    """x [N, F] -> [N, H*F'] (concat) or [N, F'] (head-mean, output layer).
+
+    Edge-parallel: every [E, ...] tensor is constrained to shard over the whole
+    mesh; segment reductions onto node-sharded outputs psum partials (GSPMD).
+    """
+    from repro.dist.context import constrain
+    from repro.dist.sharding import ALL, DP
+
+    epart = [[ALL, EP_FALL, "model", "data"]]
+    h = jnp.einsum("nf,fhd->nhd", x, p["w"])                       # [N, H, D]
+    h = constrain(h, [[DP, "data"], None, None])
+    logit_src = jnp.sum(h * p["a_src"][None], axis=-1)             # [N, H]
+    logit_dst = jnp.sum(h * p["a_dst"][None], axis=-1)
+    e = logit_src[src] + logit_dst[dst]                            # [E, H] (SDDMM)
+    e = constrain(e, epart + [None])
+    e = jax.nn.leaky_relu(e, negative_slope)
+    if edge_mask is not None:
+        e = jnp.where(edge_mask[:, None], e, -1e30)  # padded edges drop out
+    # numerically-stable segment softmax over incoming edges of each dst
+    e_max = jax.ops.segment_max(e, dst, num_segments=n_nodes)      # [N, H]
+    e_max = jnp.where(e_max > -1e29, e_max, 0.0)
+    p_edge = jnp.exp(e - e_max[dst])
+    if edge_mask is not None:
+        p_edge = p_edge * edge_mask[:, None]  # exp(-1e30 + 1e30) guard
+    p_edge = constrain(p_edge, epart + [None])
+    denom = jax.ops.segment_sum(p_edge, dst, num_segments=n_nodes)  # [N, H]
+    msg = p_edge[..., None] * h[src]                               # [E, H, D]
+    msg = constrain(msg, epart + [None, None])
+    agg = jax.ops.segment_sum(msg, dst, num_segments=n_nodes)      # [N, H, D]
+    agg = constrain(agg, [[DP, "data"], None, None])
+    out = agg / jnp.maximum(denom, 1e-9)[..., None]
+    if concat_heads:
+        return out.reshape(n_nodes, -1)
+    return jnp.mean(out, axis=1)
+
+
+EP_FALL = ("data", "model")
+
+
+def forward(params: dict, cfg: GATConfig, batch: dict) -> jax.Array:
+    """batch: {features [N,F] | node_ids [N], src [E], dst [E], n_nodes,
+    (graph_ids [N], n_graphs for readout)} -> logits."""
+    if cfg.node_id_embedding is not None:
+        x = embed(cfg.node_id_embedding, params["node_embed"],
+                  batch.get("buffers", {}), 0, batch["node_ids"])
+    else:
+        x = batch["features"].astype(cfg.jdtype)
+    src, dst = batch["src"], batch["dst"]
+    n = batch["features"].shape[0] if "features" in batch else batch["node_ids"].shape[0]
+    for li in range(cfg.n_layers):
+        last = li == cfg.n_layers - 1
+        x = gat_conv(params[f"layer_{li}"], x, src, dst, n,
+                     negative_slope=cfg.negative_slope,
+                     concat_heads=not (last and cfg.readout is None),
+                     edge_mask=batch.get("edge_mask"))
+        if not last:
+            x = jax.nn.elu(x)
+    if cfg.readout == "mean":
+        g = batch["graph_ids"]
+        ng = batch["n_graphs"]
+        summed = jax.ops.segment_sum(x, g, num_segments=ng)
+        count = jax.ops.segment_sum(jnp.ones((x.shape[0], 1), x.dtype), g,
+                                    num_segments=ng)
+        pooled = summed / jnp.maximum(count, 1.0)
+        return mlp(params["head"], pooled)
+    return x
+
+
+def loss_fn(params: dict, cfg: GATConfig, batch: dict):
+    logits = forward(params, cfg, batch)
+    labels = batch["labels"]
+    mask = batch.get("label_mask")
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        nll = jnp.where(mask, nll, 0.0)
+        ce = jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)
+    else:
+        ce = jnp.mean(nll)
+    acc = jnp.argmax(logits, -1) == labels
+    if mask is not None:
+        acc = jnp.sum(jnp.where(mask, acc, False)) / jnp.maximum(jnp.sum(mask), 1)
+    else:
+        acc = jnp.mean(acc)
+    return ce, {"ce": ce, "acc": acc}

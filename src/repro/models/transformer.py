@@ -1,0 +1,413 @@
+"""Config-driven decoder-only transformer LM.
+
+One implementation covers all five assigned LM architectures (stablelm-3b,
+qwen1.5-32b, tinyllama-1.1b, deepseek-v3-671b, llama4-scout-17b-16e):
+  * GQA or MLA attention, optional QKV bias, LayerNorm or RMSNorm, SwiGLU/GELU
+  * dense FFN, or MoE (shared + routed, top-k, sigmoid/softmax router), with
+    ``first_k_dense`` leading dense layers and ``moe_freq`` interleaving
+  * optional LMA-compressed vocab embedding (the paper's technique applied to
+    the token table) via ``repro.core.embedding``
+
+Layers with identical structure are *stacked* (params carry a leading layer
+axis) and executed with ``lax.scan`` — compile time stays flat in depth, which
+is what makes 61-layer x 512-device dry-runs tractable.  ``remat`` checkpoints
+each layer body (activation memory ~ one layer, the standard large-scale
+policy).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.embedding import (EmbeddingConfig, embed, init_embedding,
+                                  make_buffers, materialize_rows)
+from repro.nn.attention import (GQAConfig, MLAConfig, gqa_decode, gqa_init,
+                                gqa_train, mla_decode, mla_init, mla_train)
+from repro.nn.modules import (dense, dense_init, glu_ffn, glu_ffn_init,
+                              layernorm, layernorm_init, rmsnorm, rmsnorm_init)
+from repro.nn.moe import MoEConfig, moe_dispatch, moe_init
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int                      # dense FFN width (or shared width for MoE archs)
+    vocab_size: int
+    head_dim: Optional[int] = None
+    norm: str = "rmsnorm"          # rmsnorm | layernorm
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    tied_embeddings: bool = True
+    attention: str = "gqa"         # gqa | mla
+    mla: Optional[MLAConfig] = None
+    moe: Optional[MoEConfig] = None
+    first_k_dense: int = 0         # leading dense layers before MoE layers
+    dtype: str = "float32"
+    remat: bool = True
+    attn_block: int = 512          # KV block for online-softmax scan
+    embedding: Optional[EmbeddingConfig] = None  # None -> full vocab table
+    loss_chunk: int = 0            # 0 -> unchunked cross-entropy
+    # "int8": quantized KV cache (per-token-per-head absmax scales) — halves
+    # serving HBM (the qwen decode_32k cache alone is 17 GiB/chip in bf16) and
+    # keeps the cache out of XLA:CPU's bf16->f32 normalization.  None -> dtype.
+    kv_cache_dtype: Optional[str] = None
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def kv_quantized(self) -> bool:
+        return self.kv_cache_dtype == "int8"
+
+    def layer_groups(self) -> list[tuple[str, int]]:
+        """[(kind, count)] homogeneous groups, scanned separately."""
+        if self.moe is None:
+            return [("dense", self.n_layers)]
+        groups = []
+        if self.first_k_dense > 0:
+            groups.append(("dense", self.first_k_dense))
+        groups.append(("moe", self.n_layers - self.first_k_dense))
+        return groups
+
+
+def _norm_init(cfg, d):
+    return rmsnorm_init(d, cfg.jdtype) if cfg.norm == "rmsnorm" else layernorm_init(d, cfg.jdtype)
+
+
+def _norm(cfg, p, x):
+    return rmsnorm(p, x) if cfg.norm == "rmsnorm" else layernorm(p, x)
+
+
+def _attn_cfg(cfg: TransformerConfig):
+    if cfg.attention == "mla":
+        return cfg.mla
+    return GQAConfig(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                     cfg.qkv_bias, cfg.rope_theta)
+
+
+def _layer_init(key, cfg: TransformerConfig, kind: str) -> dict:
+    ka, kf = jax.random.split(key)
+    p = {"norm_attn": _norm_init(cfg, cfg.d_model),
+         "norm_ffn": _norm_init(cfg, cfg.d_model)}
+    if cfg.attention == "mla":
+        p["attn"] = mla_init(ka, cfg.mla, cfg.jdtype)
+    else:
+        p["attn"] = gqa_init(ka, _attn_cfg(cfg), cfg.jdtype)
+    if kind == "moe":
+        p["moe"] = moe_init(kf, cfg.moe, cfg.jdtype)
+    else:
+        p["ffn"] = glu_ffn_init(kf, cfg.d_model, cfg.d_ff, dtype=cfg.jdtype)
+    return p
+
+
+def init(key, cfg: TransformerConfig) -> dict:
+    keys = jax.random.split(key, 4)
+    params: dict = {}
+    if cfg.embedding is None:
+        scale = 1.0 / np.sqrt(cfg.d_model)
+        params["embed"] = {"table_0": (jax.random.normal(
+            keys[0], (cfg.vocab_size, cfg.d_model)) * scale).astype(cfg.jdtype)}
+    else:
+        params["embed"] = init_embedding(keys[0], cfg.embedding)
+    if not cfg.tied_embeddings:
+        params["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.vocab_size,
+                                       bias=False, dtype=cfg.jdtype)
+    params["final_norm"] = _norm_init(cfg, cfg.d_model)
+    for gi, (kind, count) in enumerate(cfg.layer_groups()):
+        gkeys = jax.random.split(jax.random.fold_in(keys[2], gi), count)
+        params[f"layers_{gi}"] = jax.vmap(
+            lambda k: _layer_init(k, cfg, kind))(gkeys)
+    return params
+
+
+def _block(cfg: TransformerConfig, kind: str, p: dict, x: jax.Array):
+    """One transformer layer. x [B,S,d] -> (y, aux)."""
+    from repro.dist.context import constrain
+    from repro.dist.sharding import DP
+
+    # sequence-parallel layer boundary: the remat-saved per-layer activation is
+    # sharded over BOTH batch (dp) and sequence ('model') — 1/16th the resident
+    # activation memory; attention/FFN gather S back internally (Megatron-SP)
+    x = constrain(x, [[DP, "data"], ["model"], None])
+    h = _norm(cfg, p["norm_attn"], x)
+    if cfg.attention == "mla":
+        a = mla_train(p["attn"], cfg.mla, h, block=cfg.attn_block)
+    else:
+        a = gqa_train(p["attn"], _attn_cfg(cfg), h, block=cfg.attn_block)
+    x = x + a
+    h = _norm(cfg, p["norm_ffn"], x)
+    if kind == "moe":
+        B, S, d = h.shape
+        f, aux = moe_dispatch(p["moe"], cfg.moe, h.reshape(B * S, d))
+        f = f.reshape(B, S, d)
+    else:
+        f, aux = glu_ffn(p["ffn"], h), jnp.zeros((), jnp.float32)
+    return x + f, aux
+
+
+def _run_group(cfg, kind, stacked, x):
+    body = partial(_block, cfg, kind)
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    def step(carry, p_layer):
+        y, aux = body(p_layer, carry)
+        return y, aux
+
+    x, auxs = jax.lax.scan(step, x, stacked)
+    return x, jnp.sum(auxs)
+
+
+def embed_tokens(params: dict, cfg: TransformerConfig, tokens: jax.Array,
+                 buffers: dict | None = None) -> jax.Array:
+    if cfg.embedding is None:
+        return jnp.take(params["embed"]["table_0"], tokens, axis=0)
+    return embed(cfg.embedding, params["embed"], buffers or {}, 0, tokens)
+
+
+def _output_table(params: dict, cfg: TransformerConfig, buffers: dict | None):
+    """[V, d] table used for logits."""
+    if not cfg.tied_embeddings:
+        return params["lm_head"]["kernel"].T
+    if cfg.embedding is None:
+        return params["embed"]["table_0"]
+    return materialize_rows(cfg.embedding, params["embed"], buffers or {}, 0)
+
+
+def forward(params: dict, cfg: TransformerConfig, tokens: jax.Array,
+            buffers: dict | None = None):
+    """tokens [B, S] -> (hidden [B,S,d], aux). Logits via loss/logits helpers."""
+    x = embed_tokens(params, cfg, tokens, buffers).astype(cfg.jdtype)
+    aux = jnp.zeros((), jnp.float32)
+    for gi, (kind, _count) in enumerate(cfg.layer_groups()):
+        x, a = _run_group(cfg, kind, params[f"layers_{gi}"], x)
+        aux = aux + a
+    x = _norm(cfg, params["final_norm"], x)
+    return x, aux
+
+
+def logits_fn(params: dict, cfg: TransformerConfig, hidden: jax.Array,
+              buffers: dict | None = None) -> jax.Array:
+    table = _output_table(params, cfg, buffers)
+    return hidden @ table.T.astype(hidden.dtype)
+
+
+def loss_fn(params: dict, cfg: TransformerConfig, tokens: jax.Array,
+            labels: jax.Array, buffers: dict | None = None):
+    """Causal LM cross-entropy.  ``cfg.loss_chunk`` > 0 chunks the softmax over
+    the sequence axis so the [B,S,V] logits tensor is never materialized — the
+    memory-roofline lever for large-vocab archs."""
+    hidden, aux = forward(params, cfg, tokens, buffers)
+    table = _output_table(params, cfg, buffers).astype(jnp.float32)
+
+    @jax.checkpoint  # never keep [*, chunk, V] logits for bwd — recompute
+    def xent(h_chunk, y_chunk):
+        lg = (h_chunk.astype(jnp.float32)) @ table.T
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, y_chunk[..., None], axis=-1)[..., 0]
+        return lse - gold
+
+    if cfg.loss_chunk and cfg.loss_chunk < tokens.shape[1]:
+        S = tokens.shape[1]
+        nc = -(-S // cfg.loss_chunk)
+        hs = hidden.reshape(hidden.shape[0], nc, cfg.loss_chunk, cfg.d_model)
+        ys = labels.reshape(labels.shape[0], nc, cfg.loss_chunk)
+        losses = jax.lax.scan(
+            lambda _, hy: (None, xent(hy[0], hy[1])),
+            None, (jnp.moveaxis(hs, 1, 0), jnp.moveaxis(ys, 1, 0)))[1]
+        ce = jnp.mean(losses)
+    else:
+        ce = jnp.mean(xent(hidden, labels))
+    return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+
+# --------------------------------------------------------------------- prefill
+
+def prefill(params: dict, cfg: TransformerConfig, tokens: jax.Array,
+            buffers: dict | None = None):
+    """tokens [B, S] -> (last-position logits [B, V], KV cache of length S).
+
+    The serving prefill step: same blocked causal attention as training, but
+    each layer's (rope'd) keys/values — or MLA latents — are collected into the
+    decode cache layout of ``init_cache``.
+    """
+    from repro.dist.context import constrain
+    from repro.dist.sharding import DP
+
+    x = embed_tokens(params, cfg, tokens, buffers).astype(cfg.jdtype)
+    B, S = tokens.shape
+    # the decode-layout cache is preallocated and carried through the layer
+    # scan, written in place per layer (dynamic-update-index on a while carry)
+    # — collecting it as scan ys instead double-buffers the whole cache
+    cache = init_cache(cfg, B, S)
+
+    def make_step(kind):
+        def step(carry, p_layer):
+            x, li, c_full = carry
+            # sequence-parallel layer boundary, same as _block: the resident
+            # per-layer activation shards over batch AND sequence — without
+            # this the S=32k prefill residual stream is 16x larger per device
+            x = constrain(x, [[DP, "data"], ["model"], None])
+            h = _norm(cfg, p_layer["norm_attn"], x)
+            if cfg.attention == "mla":
+                a, kv = mla_train(p_layer["attn"], cfg.mla, h,
+                                  block=cfg.attn_block, return_kv=True)
+            else:
+                a, kv = gqa_train(p_layer["attn"], _attn_cfg(cfg), h,
+                                  block=cfg.attn_block, return_kv=True)
+            x = x + a
+            h = _norm(cfg, p_layer["norm_ffn"], x)
+            if kind == "moe":
+                Bs, Ss, d = h.shape
+                f, _ = moe_dispatch(p_layer["moe"], cfg.moe,
+                                    h.reshape(Bs * Ss, d), inference=True)
+                f = f.reshape(Bs, Ss, d)
+            else:
+                f = glu_ffn(p_layer["ffn"], h)
+            if cfg.kv_quantized:
+                from repro.nn.attention import quantize_kv
+                if cfg.attention == "mla":
+                    qq, qs = quantize_kv(kv["ckv"])
+                    kv = {"ckv": qq, "ckv_scale": qs}
+                else:
+                    kq, ks = quantize_kv(kv["k"])
+                    vq, vs = quantize_kv(kv["v"])
+                    kv = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+            c_full = jax.tree_util.tree_map(
+                lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                    c, n.astype(c.dtype), li, axis=0), c_full, kv)
+            return (x + f, li + 1, c_full), None
+        return step
+
+    for gi, (kind, _count) in enumerate(cfg.layer_groups()):
+        (x, _, cache[f"layers_{gi}"]), _ = jax.lax.scan(
+            make_step(kind), (x, jnp.int32(0), cache[f"layers_{gi}"]),
+            params[f"layers_{gi}"])
+    x = _norm(cfg, params["final_norm"], x)
+    logits = logits_fn(params, cfg, x[:, -1, :], buffers)
+    return logits, cache
+
+
+# ---------------------------------------------------------------------- decode
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int) -> dict:
+    """Per-layer-group stacked KV caches.
+
+    MLA uses the fused latent layout {"ckv": [count, B, L, r + rope_dim]}
+    (c_kv | k_rope in one tensor — one owner-write and one flash pass per
+    decode step instead of two).
+    """
+    dt = jnp.int8 if cfg.kv_quantized else cfg.jdtype
+    cache = {}
+    for gi, (kind, count) in enumerate(cfg.layer_groups()):
+        if cfg.attention == "mla":
+            w = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim
+            cache[f"layers_{gi}"] = {
+                "ckv": jnp.zeros((count, batch, max_len, w), dt),
+            }
+            if cfg.kv_quantized:
+                cache[f"layers_{gi}"]["ckv_scale"] = jnp.zeros(
+                    (count, batch, max_len), jnp.float32)
+        else:
+            hd = cfg.head_dim or cfg.d_model // cfg.n_heads
+            cache[f"layers_{gi}"] = {
+                "k": jnp.zeros((count, batch, max_len, cfg.n_kv_heads, hd), dt),
+                "v": jnp.zeros((count, batch, max_len, cfg.n_kv_heads, hd), dt),
+            }
+            if cfg.kv_quantized:
+                sc = (count, batch, max_len, cfg.n_kv_heads)
+                cache[f"layers_{gi}"]["k_scale"] = jnp.zeros(sc, jnp.float32)
+                cache[f"layers_{gi}"]["v_scale"] = jnp.zeros(sc, jnp.float32)
+    return cache
+
+
+def decode_step(params: dict, cfg: TransformerConfig, tokens: jax.Array,
+                cache: dict, cache_len: jax.Array,
+                buffers: dict | None = None):
+    """One decode step.  tokens [B] -> (logits [B, V], new_cache).
+
+    ``cache_len`` is the current valid length (the new token is written there).
+    """
+    x = embed_tokens(params, cfg, tokens[:, None], buffers).astype(cfg.jdtype)
+
+    def layer_step(kind):
+        def step(carry, p_layer):
+            # The stacked cache rides in the CARRY and is updated in place via
+            # dynamic-update-slice (XLA's in-place while-carry optimization) —
+            # streaming it through scan xs/ys double-buffers the entire cache
+            # (2x HBM: the qwen decode_32k cell alone carries 10 GiB/device).
+            x, li, c_full = carry
+            c_layer = jax.tree_util.tree_map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, li, axis=0,
+                                                       keepdims=False), c_full)
+            h = _norm(cfg, p_layer["norm_attn"], x)
+            if cfg.attention == "mla":
+                a, new_c = mla_decode(p_layer["attn"], cfg.mla, h, c_layer,
+                                      cache_len, block=cfg.attn_block)
+            else:
+                a, new_c = gqa_decode(p_layer["attn"], _attn_cfg(cfg), h, c_layer,
+                                      cache_len, block=cfg.attn_block)
+            x = x + a
+            h = _norm(cfg, p_layer["norm_ffn"], x)
+            if kind == "moe":
+                B = h.shape[0]
+                f, _ = moe_dispatch(p_layer["moe"], cfg.moe,
+                                    h.reshape(B, cfg.d_model), inference=True)
+                f = f.reshape(B, 1, cfg.d_model)
+            else:
+                f = glu_ffn(p_layer["ffn"], h)
+            c_full = jax.tree_util.tree_map(
+                lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                    c, n.astype(c.dtype), li, axis=0), c_full, new_c)
+            return (x + f, li + 1, c_full), None
+        return step
+
+    new_cache = {}
+    for gi, (kind, _count) in enumerate(cfg.layer_groups()):
+        (x, _, new_cache[f"layers_{gi}"]), _ = jax.lax.scan(
+            layer_step(kind), (x, jnp.int32(0), cache[f"layers_{gi}"]),
+            params[f"layers_{gi}"])
+    x = _norm(cfg, params["final_norm"], x)
+    logits = logits_fn(params, cfg, x[:, 0, :], buffers)
+    return logits, new_cache
+
+
+def param_count(cfg: TransformerConfig) -> tuple[int, int]:
+    """(total, active) parameter counts — 6*N*D roofline inputs."""
+    d, f = cfg.d_model, cfg.d_ff
+    hd = cfg.head_dim or d // cfg.n_heads
+    if cfg.attention == "mla":
+        m = cfg.mla
+        attn = (d * m.q_lora_rank + m.q_lora_rank * cfg.n_heads * m.qk_dim
+                if m.q_lora_rank else d * cfg.n_heads * m.qk_dim)
+        attn += d * (m.kv_lora_rank + m.qk_rope_dim)
+        attn += m.kv_lora_rank * cfg.n_heads * (m.qk_nope_dim + m.v_head_dim)
+        attn += cfg.n_heads * m.v_head_dim * d
+    else:
+        attn = d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd + cfg.n_heads * hd * d
+    dense_ffn = 3 * d * f
+    emb = cfg.vocab_size * d * (1 if cfg.tied_embeddings else 2)
+    total = emb
+    active = emb
+    for kind, count in cfg.layer_groups():
+        if kind == "dense":
+            total += count * (attn + dense_ffn)
+            active += count * (attn + dense_ffn)
+        else:
+            mo = cfg.moe
+            expert = 3 * d * mo.d_ff
+            shared = 3 * d * mo.d_ff * mo.n_shared_experts
+            router = d * mo.n_experts
+            total += count * (attn + mo.n_experts * expert + shared + router)
+            active += count * (attn + mo.top_k * expert + shared + router)
+    return int(total), int(active)

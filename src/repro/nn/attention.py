@@ -1,0 +1,487 @@
+"""Attention: RoPE, GQA (grouped KV), MLA (DeepSeek latent compression).
+
+All softmax attention goes through ``blocked_attention`` — an online-softmax scan
+over KV blocks (flash-attention dataflow expressed in pure JAX).  XLA:TPU does not
+rewrite naive softmax(QK^T)V into a streaming form, and at seq 4k-32k the [B,H,S,T]
+score tensor would dominate HBM; the scan keeps live memory at one KV block per
+step, which is what makes the train_4k/decode_32k/long_500k dry-run cells fit.
+
+Decode paths take explicit KV caches.  MLA caches the *compressed* latent
+(c_kv + shared rope key) and supports the absorbed-matmul decode (projection
+absorbed into query/output) so decode cost is independent of the per-head
+expansion — the paper-relevant trick for the long_500k cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.modules import dense, dense_init, rmsnorm, rmsnorm_init
+
+_NEG_INF = -1e30
+
+
+def _mesh_sizes() -> dict:
+    from repro.dist.context import current_mesh
+    mesh = current_mesh()
+    if mesh is None:
+        return {}
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def rope_table(positions: jax.Array, dim: int, theta: float = 10000.0):
+    """positions [...,] -> (cos, sin) each [..., dim/2]."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x [..., S, H, hd]; cos/sin [..., S, hd/2] (broadcast over heads).
+
+    cos/sin are cast to x.dtype *before* the multiply: jnp promotion would
+    otherwise materialize f32 [B,S,H,hd] intermediates (2x the bf16 activation
+    footprint at S=32k) just to round them straight back down.
+    """
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def quantize_kv(x: jax.Array, eps: float = 1e-8):
+    """Per-token-per-head absmax int8 quantization of cache entries.
+
+    x [..., hd] -> (q int8 [..., hd], scale f32 [...]).  The standard
+    serving-cache compression (KIVI/FlexGen家): halves cache HBM vs bf16 and,
+    as integer data, is exempt from XLA:CPU's bf16->f32 float-normalization of
+    loop carries (the dry-run's measured-memory inflation).
+    """
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1), eps) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def _attn_q_chunk(
+    qr: jax.Array,           # [B, qb, KV, G, hd] pre-scaled f32
+    k: jax.Array,            # [B, Tc, KV, hd]  (Tc = blocks actually needed)
+    v: jax.Array,            # [B, Tc, KV, vd]
+    q_pos: jax.Array,        # [qb]
+    kv_pos: jax.Array,       # [Tc]
+    causal: bool,
+    kv_valid_len,            # None | [B]/scalar
+    kv_block: int,
+) -> jax.Array:
+    """Online-softmax over KV blocks for one query chunk. -> [B, qb, KV, G, vd]."""
+    B, qb, KV, G, hd = qr.shape
+    Tc = k.shape[1]
+    vd = v.shape[-1]
+    nb = -(-Tc // kv_block)
+    pad = nb * kv_block - Tc
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=2**30)
+    kb = jnp.moveaxis(k.reshape(B, nb, kv_block, KV, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nb, kv_block, KV, vd), 1, 0)
+    pb = kv_pos.reshape(nb, kv_block)
+
+    m0 = jnp.full((B, KV, G, qb), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, qb), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, qb, vd), jnp.float32)
+
+    @jax.checkpoint  # recompute the block tile in bwd: O(qb*kv_block) residuals
+    def body(carry, blk):
+        m, l, acc = carry
+        kj, vj, pj = blk
+        # bf16 x bf16 -> f32 accumulation: MXU-native, no f32 K/Q materialization
+        s = jnp.einsum("bsKGh,btKh->bKGst", qr, kj,
+                       preferred_element_type=jnp.float32)
+        mask = jnp.ones((qb, kv_block), bool)
+        if causal:
+            mask &= pj[None, :] <= q_pos[:, None]
+        s = jnp.where(mask[None, None, None], s, _NEG_INF)
+        if kv_valid_len is not None:
+            vl = jnp.broadcast_to(jnp.asarray(kv_valid_len, jnp.int32), (B,))
+            valid = pj[None, :] < vl[:, None]                  # [B, kv_block]
+            s = jnp.where(valid[:, None, None, None, :], s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bKGst,btKd->bKGsd", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    # cast per chunk: the concatenated [B,S,H,vd] buffer stays bf16 (the f32
+    # copy at S=32k was 2x the activation footprint for zero accuracy gain —
+    # the f32 accumulation already happened inside the scan)
+    return jnp.moveaxis(out, 3, 1).astype(qr.dtype)  # [B, qb, KV, G, vd]
+
+
+def blocked_attention(
+    q: jax.Array,        # [B, S, H, hd]
+    k: jax.Array,        # [B, T, KV, hd]
+    v: jax.Array,        # [B, T, KV, vd]
+    *,
+    causal: bool,
+    q_positions: jax.Array,   # [S] absolute positions of queries
+    kv_positions: jax.Array,  # [T]
+    kv_valid_len: jax.Array | None = None,  # [B] or scalar: kv entries < len valid
+    block: int = 1024,        # KV block
+    q_block: int = 512,
+    sm_scale: float | None = None,
+    aligned: bool | None = None,  # q_positions == arange(S) == kv prefix layout
+) -> jax.Array:
+    """Flash-dataflow attention in pure JAX: a static Python loop over query
+    chunks, an online-softmax ``lax.scan`` over KV blocks inside, checkpointed
+    block body.  Live memory is one (q_block x kv_block) tile per (B,H);
+    causal+aligned chunks statically skip future KV blocks (no wasted FLOPs).
+    Returns [B, S, H, vd]."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = sm_scale if sm_scale is not None else 1.0 / np.sqrt(hd)
+    if aligned is None:
+        aligned = causal
+    # Sharding priority (EXPERIMENTS.md §Perf iteration 2):
+    #   1. KV heads over 'model' (Megatron tensor parallelism): the column-
+    #      sharded QKV projections already emit head-sharded q/k/v, so this is
+    #      collective-FREE, and the per-device KV working set shrinks by the
+    #      model-axis size (the lever for MLA prefill, H=128).
+    #   2. batch over the dp axes (and over 'model' too when heads don't
+    #      divide, e.g. qwen's 40 heads — batch-pull costs one all-to-all).
+    from repro.dist.context import constrain
+    from repro.dist.sharding import DP, EP
+    sizes = _mesh_sizes()
+    mdl = sizes.get("model", 1)
+    dp_ax = tuple(a for a in ("pod", "data") if a in sizes)
+    if KV % mdl == 0 and KV >= mdl:
+        # Megatron tensor parallelism: heads over 'model' — collective-free
+        # (the column-sharded QKV projections already emit this layout)
+        hspec = ["model"]
+        bspec = [DP, "data"]
+    else:
+        # Heads don't divide the axis (qwen 40, tinyllama KV=4).  Pull the
+        # batch over the dp axes EXTENDED by 'model' — a prefix-consistent
+        # refinement of the residual's (pod, data) sharding, so fwd/bwd
+        # reshards stay local.  Pulling over ('data','model') while the
+        # residual sits on ('pod','data') triggered "involuntary full remat"
+        # in the backward (48.6 GiB qwen train_4k@2x16x16); when the extended
+        # pull doesn't divide B, fall back to the dp axes and let GSPMD
+        # partition the score/value einsums itself (§Perf iteration 5).
+        hspec = None
+        bspec = [(*dp_ax, "model"), DP, "data"]
+    q = constrain(q, [bspec, None, hspec if H % mdl == 0 else None, None])
+    k = constrain(k, [bspec, None, hspec, None])
+    v = constrain(v, [bspec, None, hspec, None])
+    qr = (q * scale).astype(q.dtype).reshape(B, S, KV, G, hd)
+    qr = constrain(qr, [bspec, None, hspec, None, None])
+
+    qb = min(q_block, S)
+    nq = -(-S // qb)
+    outs = []
+    for qi in range(nq):
+        lo, hi = qi * qb, min((qi + 1) * qb, S)
+        qc = qr[:, lo:hi]
+        qp = q_positions[lo:hi]
+        if causal and aligned:
+            t_need = min(T, -(-hi // block) * block)   # static triangle skip
+        else:
+            t_need = T
+        o = _attn_q_chunk(qc, k[:, :t_need], v[:, :t_need], qp,
+                          kv_positions[:t_need], causal, kv_valid_len, block)
+        outs.append(o)
+    out = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    return out.reshape(B, S, H, v.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------- GQA attention
+
+@dataclasses.dataclass(frozen=True)
+class GQAConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int | None = None
+    qkv_bias: bool = False       # Qwen1.5 uses QKV bias
+    rope_theta: float = 10000.0
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+
+def gqa_init(key, cfg: GQAConfig, dtype=jnp.float32) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    hd = cfg.hd
+    return {
+        "wq": dense_init(kq, cfg.d_model, cfg.n_heads * hd, cfg.qkv_bias, dtype=dtype),
+        "wk": dense_init(kk, cfg.d_model, cfg.n_kv_heads * hd, cfg.qkv_bias, dtype=dtype),
+        "wv": dense_init(kv, cfg.d_model, cfg.n_kv_heads * hd, cfg.qkv_bias, dtype=dtype),
+        "wo": dense_init(ko, cfg.n_heads * hd, cfg.d_model, False, dtype=dtype),
+    }
+
+
+def gqa_qkv(p: dict, cfg: GQAConfig, x: jax.Array, positions: jax.Array):
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = dense(p["wq"], x).reshape(B, S, cfg.n_heads, hd)
+    k = dense(p["wk"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    v = dense(p["wv"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    cos, sin = rope_table(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def gqa_train(p: dict, cfg: GQAConfig, x: jax.Array, block: int = 512,
+              return_kv: bool = False):
+    """Causal self-attention over a full sequence (training / prefill)."""
+    B, S, _ = x.shape
+    pos = jnp.arange(S, dtype=jnp.int32)
+    q, k, v = gqa_qkv(p, cfg, x, pos)
+    o = blocked_attention(q, k, v, causal=True, q_positions=pos, kv_positions=pos,
+                          block=block)
+    out = dense(p["wo"], o.reshape(B, S, cfg.n_heads * cfg.hd))
+    if return_kv:
+        return out, {"k": k, "v": v}
+    return out
+
+
+def gqa_decode(p: dict, cfg: GQAConfig, x: jax.Array, cache: dict,
+               cache_len: jax.Array, block: int = 1024):
+    """One-token decode.  x [B, 1, d]; cache {"k","v"}: [B, L, KV, hd].
+
+    Returns (out [B, 1, d], new_cache).  The new token is written at cache_len.
+    With a mesh installed, the cache length is sharded over 'model' and the
+    attention runs as a flash-decoding LSE merge (repro.dist.flash_decode) —
+    the per-device cache shrinks by the model-axis size for EVERY arch,
+    including head counts that don't divide the axis (qwen: 40) and B=1
+    long-context cells.
+    """
+    B = x.shape[0]
+    L = cache["k"].shape[1]
+    quant = cache["k"].dtype == jnp.int8
+    pos = cache_len.reshape(1).astype(jnp.int32)  # scalar position
+    q, k_new, v_new = gqa_qkv(p, cfg, x, pos)
+    if quant:
+        kq_new, ks_new = quantize_kv(k_new)
+        vq_new, vs_new = quantize_kv(v_new)
+
+    from repro.dist.context import current_mesh, dp_axes as _dp
+    mesh = current_mesh()
+    if mesh is not None and L % dict(zip(mesh.axis_names,
+                                         mesh.devices.shape))["model"] == 0:
+        from repro.dist.flash_decode import sharded_flash_decode
+        if quant:
+            o, k, v, ks, vs = sharded_flash_decode(
+                q, cache["k"], cache["v"], kq_new, vq_new, cache_len,
+                sm_scale=1.0 / np.sqrt(cfg.hd), mesh=mesh, dp_axes=_dp(mesh),
+                k_scale=cache["k_scale"], v_scale=cache["v_scale"],
+                k_scale_new=ks_new, v_scale_new=vs_new)
+            out = dense(p["wo"], o.reshape(B, 1, cfg.n_heads * cfg.hd))
+            return out, {"k": k, "v": v, "k_scale": ks, "v_scale": vs}
+        o, k, v = sharded_flash_decode(
+            q, cache["k"], cache["v"], k_new, v_new, cache_len,
+            sm_scale=1.0 / np.sqrt(cfg.hd), mesh=mesh, dp_axes=_dp(mesh))
+    else:
+        if quant:
+            k = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], kq_new, cache_len, axis=1)
+            v = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], vq_new, cache_len, axis=1)
+            ks = jax.lax.dynamic_update_slice_in_dim(
+                cache["k_scale"], ks_new.astype(jnp.float32), cache_len, axis=1)
+            vs = jax.lax.dynamic_update_slice_in_dim(
+                cache["v_scale"], vs_new.astype(jnp.float32), cache_len, axis=1)
+            kf = dequantize_kv(k, ks, x.dtype)
+            vf = dequantize_kv(v, vs, x.dtype)
+        else:
+            k = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k_new.astype(cache["k"].dtype), cache_len, axis=1)
+            v = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v_new.astype(cache["v"].dtype), cache_len, axis=1)
+            kf, vf = k, v
+        kv_pos = jnp.arange(L, dtype=jnp.int32)
+        o = blocked_attention(q, kf, vf, causal=False, q_positions=pos,
+                              kv_positions=kv_pos, kv_valid_len=cache_len + 1,
+                              block=block)
+    out = dense(p["wo"], o.reshape(B, 1, cfg.n_heads * cfg.hd))
+    if quant:
+        return out, {"k": k, "v": v, "k_scale": ks, "v_scale": vs}
+    return out, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------- MLA attention
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int = 1536      # 0 -> direct q projection
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10000.0
+
+    @property
+    def qk_dim(self) -> int:
+        return self.qk_nope_dim + self.qk_rope_dim
+
+
+def mla_init(key, cfg: MLAConfig, dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, 6)
+    H = cfg.n_heads
+    p = {}
+    if cfg.q_lora_rank > 0:
+        p["wq_a"] = dense_init(keys[0], cfg.d_model, cfg.q_lora_rank, False, dtype=dtype)
+        p["q_norm"] = rmsnorm_init(cfg.q_lora_rank, dtype)
+        p["wq_b"] = dense_init(keys[1], cfg.q_lora_rank, H * cfg.qk_dim, False, dtype=dtype)
+    else:
+        p["wq"] = dense_init(keys[0], cfg.d_model, H * cfg.qk_dim, False, dtype=dtype)
+    p["wkv_a"] = dense_init(keys[2], cfg.d_model,
+                            cfg.kv_lora_rank + cfg.qk_rope_dim, False, dtype=dtype)
+    p["kv_norm"] = rmsnorm_init(cfg.kv_lora_rank, dtype)
+    p["wkv_b"] = dense_init(keys[3], cfg.kv_lora_rank,
+                            H * (cfg.qk_nope_dim + cfg.v_head_dim), False, dtype=dtype)
+    p["wo"] = dense_init(keys[4], H * cfg.v_head_dim, cfg.d_model, False, dtype=dtype)
+    return p
+
+
+def _mla_q(p: dict, cfg: MLAConfig, x: jax.Array, positions: jax.Array):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    if cfg.q_lora_rank > 0:
+        q = dense(p["wq_b"], rmsnorm(p["q_norm"], dense(p["wq_a"], x)))
+    else:
+        q = dense(p["wq"], x)
+    q = q.reshape(B, S, H, cfg.qk_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    cos, sin = rope_table(positions, cfg.qk_rope_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def _mla_ckv(p: dict, cfg: MLAConfig, x: jax.Array, positions: jax.Array):
+    ckv_kr = dense(p["wkv_a"], x)
+    c_kv, k_rope = jnp.split(ckv_kr, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(p["kv_norm"], c_kv)
+    cos, sin = rope_table(positions, cfg.qk_rope_dim, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[..., None, :], cos, sin)[..., 0, :]  # shared head
+    return c_kv, k_rope
+
+
+def mla_train(p: dict, cfg: MLAConfig, x: jax.Array, block: int = 512,
+              return_kv: bool = False):
+    """Causal MLA over a full sequence (naive-expand path for training)."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    pos = jnp.arange(S, dtype=jnp.int32)
+    q_nope, q_rope = _mla_q(p, cfg, x, pos)
+    c_kv, k_rope = _mla_ckv(p, cfg, x, pos)
+    kv = dense(p["wkv_b"], c_kv).reshape(B, S, H, cfg.qk_nope_dim + cfg.v_head_dim)
+    k_nope, v = jnp.split(kv, [cfg.qk_nope_dim], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, cfg.qk_rope_dim))],
+        axis=-1)
+    o = blocked_attention(q, k, v, causal=True, q_positions=pos, kv_positions=pos,
+                          block=block, sm_scale=1.0 / np.sqrt(cfg.qk_dim))
+    out = dense(p["wo"], o.reshape(B, S, H * cfg.v_head_dim))
+    if return_kv:
+        # fused latent cache layout: (c_kv | k_rope) in one [B,S,r+rd] tensor
+        return out, {"ckv": jnp.concatenate([c_kv, k_rope], axis=-1)}
+    return out
+
+
+def mla_decode(p: dict, cfg: MLAConfig, x: jax.Array, cache: dict,
+               cache_len: jax.Array, block: int = 2048):
+    """Absorbed-matmul decode against the latent cache.
+
+    cache: {"ckv": [B, L, r + rope_dim]} — the fused (c_kv | k_rope) latent
+    layout: rank-r latents + the shared rope key, NOT H per-head keys/values
+    (the MLA memory win).  Attention runs directly in latent space:
+    scores = (q_nope·W_uk | q_rope) · (c_kv | k_rope); output = (attn @ c_kv)
+    · W_uv.  Cost per step is O(L·(r + rd)) per head-group.  With a mesh
+    installed, the cache length shards over 'model' (flash-decoding LSE merge).
+    """
+    B = x.shape[0]
+    H = cfg.n_heads
+    r = cfg.kv_lora_rank
+    L = cache["ckv"].shape[1]
+    quant = cache["ckv"].dtype == jnp.int8
+    pos = cache_len.reshape(1).astype(jnp.int32)
+    q_nope, q_rope = _mla_q(p, cfg, x, pos)          # [B,1,H,*]
+    c_new, kr_new = _mla_ckv(p, cfg, x, pos)
+
+    wkv_b = p["wkv_b"]["kernel"].reshape(r, H, cfg.qk_nope_dim + cfg.v_head_dim)
+    w_uk = wkv_b[..., : cfg.qk_nope_dim]             # [r, H, nope]
+    w_uv = wkv_b[..., cfg.qk_nope_dim:]              # [r, H, vd]
+    # absorb: q_c [B,1,H,r] = q_nope @ w_uk^T
+    q_c = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)
+    # latent-space attention: (q_c | q_rope) against (c_kv | k_rope), 1 kv head
+    q_cat = jnp.concatenate([q_c, q_rope], axis=-1)                  # [B,1,H,r+rd]
+    kn_cat = jnp.concatenate([c_new, kr_new], axis=-1)[:, :, None, :]
+    if quant:
+        kn_q, kn_s = quantize_kv(kn_cat)             # scale over fused width
+
+    from repro.dist.context import current_mesh, dp_axes as _dp
+    mesh = current_mesh()
+    scl = None
+    if mesh is not None and L % dict(zip(mesh.axis_names,
+                                         mesh.devices.shape))["model"] == 0:
+        from repro.dist.flash_decode import sharded_flash_decode
+        k_cat = cache["ckv"][:, :, None, :]                          # [B,L,1,r+rd]
+        if quant:
+            sc = cache["ckv_scale"][:, :, None]                      # [B,L,1]
+            o_lat, k_cat_new, _, sc_new, _ = sharded_flash_decode(
+                q_cat, k_cat, k_cat[..., :r], kn_q, kn_q[..., :r], cache_len,
+                sm_scale=1.0 / np.sqrt(cfg.qk_dim), mesh=mesh,
+                dp_axes=_dp(mesh), k_scale=sc, v_scale=sc,
+                k_scale_new=kn_s, v_scale_new=kn_s)
+            scl = sc_new[:, :, 0]
+        else:
+            o_lat, k_cat_new, _ = sharded_flash_decode(
+                q_cat, k_cat, k_cat[..., :r], kn_cat, kn_cat[..., :r],
+                cache_len, sm_scale=1.0 / np.sqrt(cfg.qk_dim), mesh=mesh,
+                dp_axes=_dp(mesh))
+        new_ckv = k_cat_new[:, :, 0, :]
+    else:
+        if quant:
+            new_ckv = jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv"], kn_q[:, :, 0, :], cache_len, axis=1)
+            scl = jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv_scale"], kn_s[:, :, 0].astype(jnp.float32),
+                cache_len, axis=1)
+            ck_f = dequantize_kv(new_ckv, scl, x.dtype)
+        else:
+            new_ckv = jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv"], kn_cat[:, :, 0, :].astype(cache["ckv"].dtype),
+                cache_len, axis=1)
+            ck_f = new_ckv
+        k_cat = ck_f[:, :, None, :]
+        v_lat = ck_f[:, :, None, :r]                                 # [B,L,1,r]
+        kv_pos = jnp.arange(L, dtype=jnp.int32)
+        o_lat = blocked_attention(q_cat, k_cat, v_lat, causal=False,
+                                  q_positions=pos, kv_positions=kv_pos,
+                                  kv_valid_len=cache_len + 1, block=block,
+                                  sm_scale=1.0 / np.sqrt(cfg.qk_dim))
+    o = jnp.einsum("bshr,rhv->bshv", o_lat[..., :r], w_uv)
+    out = dense(p["wo"], o.reshape(B, 1, H * cfg.v_head_dim))
+    if quant:
+        return out, {"ckv": new_ckv, "ckv_scale": scl}
+    return out, {"ckv": new_ckv}

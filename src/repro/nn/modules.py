@@ -1,0 +1,102 @@
+"""Minimal pure-JAX NN substrate (flax/optax are not installed in this container).
+
+Every layer is an (init, apply) pair over plain nested-dict params.  Param leaf
+names are stable and path-addressable so ``repro.dist.sharding`` can attach
+PartitionSpecs by path regex (MaxText-style logical rules).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, d_in: int, d_out: int, bias: bool = True, scale: float | None = None,
+               dtype=jnp.float32) -> dict:
+    s = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    p = {"kernel": (jax.random.normal(key, (d_in, d_out)) * s).astype(dtype)}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: dict, x: jax.Array) -> jax.Array:
+    y = x @ p["kernel"]
+    if "bias" in p:
+        y = y + p["bias"]
+    return y
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y * p["scale"] + p["bias"]
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * p["scale"]
+
+
+def mlp_init(key, dims: list[int], bias: bool = True, dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, len(dims) - 1)
+    return {f"layer_{i}": dense_init(keys[i], dims[i], dims[i + 1], bias, dtype=dtype)
+            for i in range(len(dims) - 1)}
+
+
+def mlp(p: dict, x: jax.Array, act=jax.nn.relu, final_act=None) -> jax.Array:
+    n = len(p)
+    for i in range(n):
+        x = dense(p[f"layer_{i}"], x)
+        if i < n - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+def glu_ffn_init(key, d_model: int, d_ff: int, bias: bool = False, dtype=jnp.float32) -> dict:
+    """SwiGLU-style gated FFN (LLaMA family)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff, bias, dtype=dtype),
+        "up": dense_init(k2, d_model, d_ff, bias, dtype=dtype),
+        "down": dense_init(k3, d_ff, d_model, bias, dtype=dtype),
+    }
+
+
+def glu_ffn(p: dict, x: jax.Array, act=jax.nn.silu) -> jax.Array:
+    return dense(p["down"], act(dense(p["gate"], x)) * dense(p["up"], x))
+
+
+def gelu_ffn_init(key, d_model: int, d_ff: int, bias: bool = True, dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(key, 2)
+    return {"up": dense_init(k1, d_model, d_ff, bias, dtype=dtype),
+            "down": dense_init(k2, d_ff, d_model, bias, dtype=dtype)}
+
+
+def gelu_ffn(p: dict, x: jax.Array) -> jax.Array:
+    return dense(p["down"], jax.nn.gelu(dense(p["up"], x)))
+
+
+def count_params(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
+
+
+def tree_paths(params, prefix="") -> list[str]:
+    out = []
+    if isinstance(params, dict):
+        for k, v in params.items():
+            out.extend(tree_paths(v, f"{prefix}/{k}" if prefix else k))
+    else:
+        out.append(prefix)
+    return out

@@ -1,0 +1,23 @@
+from repro.optim.compression import (
+    EFState,
+    ef_init,
+    int8_compress,
+    int8_decompress,
+    topk_compress,
+)
+from repro.optim.optimizers import (
+    AdamState,
+    Optimizer,
+    adagrad,
+    adam,
+    adamw,
+    apply_updates,
+    chain,
+    clip_by_global_norm,
+    constant,
+    multi_transform,
+    scale,
+    scale_by_schedule,
+    sgd,
+    warmup_cosine,
+)

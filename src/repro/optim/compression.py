@@ -1,0 +1,83 @@
+"""Gradient compression with error feedback, for the DP all-reduce at scale.
+
+Two schemes, both wrapped as optimizer-style transforms applied *before* the
+cross-replica reduction (use inside a shard_map DP step: compress -> psum of the
+compressed representation -> decompress), plus an error-feedback accumulator so
+the compression bias does not accumulate (Karimireddy et al., "EF-SGD").
+
+  * int8 stochastic quantization: per-tensor scale, ~4x wire reduction.
+  * top-k sparsification: keep the k largest-magnitude entries per tensor.
+
+On TPU meshes the all-reduce bandwidth term is usually small for recsys models
+(embedding grads are sparse by access) — this is provided as a first-class knob
+for the dense towers and for the multi-pod (DCI-bound) axis.  The error-feedback
+invariant (compressed + error == original) is property-tested.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    error: object  # pytree matching grads
+
+
+def _q_int8(x: jax.Array, key: jax.Array):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    noise = jax.random.uniform(key, x.shape, minval=-0.5, maxval=0.5)
+    q = jnp.clip(jnp.round(x / scale + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dq_int8(q: jax.Array, scale: jax.Array):
+    return q.astype(jnp.float32) * scale
+
+
+def int8_compress(grads, ef: EFState, key: jax.Array):
+    """Returns (quantized pytree of (q, scale), new EFState)."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    err = jax.tree_util.tree_leaves(ef.error)
+    keys = jax.random.split(key, len(leaves))
+    qs, new_err = [], []
+    for g, e, k in zip(leaves, err, keys):
+        corrected = g.astype(jnp.float32) + e
+        q, s = _q_int8(corrected, k)
+        deq = _dq_int8(q, s)
+        qs.append((q, s))
+        new_err.append(corrected - deq)
+    return (jax.tree_util.tree_unflatten(treedef, qs),
+            EFState(jax.tree_util.tree_unflatten(treedef, new_err)))
+
+
+def int8_decompress(qtree):
+    return jax.tree_util.tree_map(
+        lambda qs: _dq_int8(*qs), qtree,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+
+
+def topk_compress(grads, ef: EFState, frac: float = 0.01):
+    """Keep top-``frac`` entries by magnitude (dense mask representation —
+    value+mask is what a TPU all-reduce can move; index lists are host-side)."""
+    def one(g, e):
+        c = g.astype(jnp.float32) + e
+        flat = jnp.abs(c.reshape(-1))
+        k = max(1, int(flat.shape[0] * frac))
+        thresh = jax.lax.top_k(flat, k)[0][-1]
+        mask = (jnp.abs(c) >= thresh).astype(jnp.float32)
+        kept = c * mask
+        return kept, c - kept
+
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    err = jax.tree_util.tree_leaves(ef.error)
+    outs = [one(g, e) for g, e in zip(leaves, err)]
+    kept = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_err = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return kept, EFState(new_err)
+
+
+def ef_init(params) -> EFState:
+    return EFState(jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), params))

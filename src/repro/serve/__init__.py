@@ -1,0 +1,5 @@
+from repro.serve.batching import BatchingScorer, bucket_for, pad_buckets
+from repro.serve.lm import GenerationResult, LMServer
+
+__all__ = ["BatchingScorer", "bucket_for", "pad_buckets", "GenerationResult",
+           "LMServer"]

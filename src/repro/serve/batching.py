@@ -1,0 +1,133 @@
+"""Request batching for online serving (the serve_p99 path).
+
+A production scorer never sees nicely shaped batches: requests arrive one at a
+time and the server must trade latency against device efficiency.  This module
+implements the standard recipe:
+
+  * requests queue up; a batch is cut when ``max_batch`` requests are waiting
+    or the oldest request has waited ``max_delay_ms``;
+  * batches are PADDED to a fixed set of bucket sizes so the jitted scoring
+    function compiles once per bucket (no retrace storms);
+  * responses are futures keyed by request id.
+
+The same machinery serves all recsys models; the LM decode loop has its own
+continuous-batching driver in ``repro.serve.lm``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+
+def pad_buckets(max_batch: int) -> tuple[int, ...]:
+    """Power-of-two bucket ladder: 1, 2, 4, ... max_batch."""
+    out = []
+    b = 1
+    while b < max_batch:
+        out.append(b)
+        b *= 2
+    out.append(max_batch)
+    return tuple(out)
+
+
+def bucket_for(n: int, buckets: tuple[int, ...]) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+@dataclasses.dataclass
+class _Pending:
+    req_id: int
+    features: dict           # single-example feature dict (numpy)
+    t_enqueue: float
+    event: threading.Event
+    result: Optional[float] = None
+
+
+class BatchingScorer:
+    """Batches single-example requests into padded device calls.
+
+    ``score_fn(batch_dict) -> scores [B]`` must accept numpy arrays whose
+    leading dim is one of the pad buckets.
+    """
+
+    def __init__(self, score_fn: Callable[[dict], np.ndarray],
+                 max_batch: int = 512, max_delay_ms: float = 2.0):
+        self.score_fn = score_fn
+        self.max_batch = max_batch
+        self.max_delay = max_delay_ms / 1e3
+        self.buckets = pad_buckets(max_batch)
+        self._queue: deque[_Pending] = deque()
+        self._lock = threading.Lock()
+        self._ids = itertools.count()
+        self._stop = False
+        self._worker = threading.Thread(target=self._loop, daemon=True)
+        self.n_batches = 0
+        self.n_requests = 0
+        self.batch_sizes: list[int] = []
+        self._worker.start()
+
+    # ------------------------------------------------------------------ API
+    def submit(self, features: dict) -> "_Pending":
+        p = _Pending(next(self._ids), features, time.perf_counter(),
+                     threading.Event())
+        with self._lock:
+            self._queue.append(p)
+        return p
+
+    def score(self, features: dict, timeout: float = 30.0) -> float:
+        """Blocking convenience wrapper."""
+        p = self.submit(features)
+        if not p.event.wait(timeout):
+            raise TimeoutError("scoring request timed out")
+        return p.result
+
+    def close(self):
+        self._stop = True
+        self._worker.join(timeout=5)
+
+    # ---------------------------------------------------------------- worker
+    def _cut_batch(self) -> list[_Pending]:
+        with self._lock:
+            if not self._queue:
+                return []
+            oldest = self._queue[0].t_enqueue
+            full = len(self._queue) >= self.max_batch
+            stale = (time.perf_counter() - oldest) >= self.max_delay
+            if not (full or stale):
+                return []
+            n = min(len(self._queue), self.max_batch)
+            return [self._queue.popleft() for _ in range(n)]
+
+    def _loop(self):
+        while not self._stop:
+            batch = self._cut_batch()
+            if not batch:
+                time.sleep(self.max_delay / 4)
+                continue
+            self._run(batch)
+
+    def _run(self, batch: list[_Pending]):
+        n = len(batch)
+        b = bucket_for(n, self.buckets)
+        keys = batch[0].features.keys()
+        arrays = {}
+        for k in keys:
+            rows = np.stack([np.asarray(p.features[k]) for p in batch])
+            pad = [(0, b - n)] + [(0, 0)] * (rows.ndim - 1)
+            arrays[k] = np.pad(rows, pad)
+        scores = np.asarray(self.score_fn(arrays))[:n]
+        self.n_batches += 1
+        self.n_requests += n
+        self.batch_sizes.append(n)
+        for p, s in zip(batch, scores):
+            p.result = float(s)
+            p.event.set()

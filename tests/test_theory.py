@@ -1,0 +1,165 @@
+"""Paper-claims validation: Theorems 1, 2, 3 (EXPERIMENTS.md §Paper-claims).
+
+Thm 1 (LMA solves RSCMA): E[f_{A_L}] = Γ = φ + (1-φ)/m, Var = Γ(1-Γ)/d.
+Thm 2 (existence of M):   with Bernoulli ±1 memory, E[cos] = Γ, Var ≈ (1-Γ²)/d.
+Thm 3 (small D'):         Jaccard from an i.i.d. subsample concentrates on J.
+
+φ here is the kernel of the power-n_h minwise family: φ = J^{n_h}.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.allocation import LMAParams, alloc_lma, fraction_shared
+from repro.core.memory import cosine, init_memory, lookup
+
+from conftest import make_dense_store_from_sets, sets_with_jaccard, true_jaccard
+
+M = 1 << 20
+N_SEEDS = 48
+
+
+def _f_samples(j: float, d: int, n_h: int, n_seeds: int = N_SEEDS):
+    a, b = sets_with_jaccard(j, size=48)
+    jt = true_jaccard(a, b)
+    store = make_dense_store_from_sets([a, b], max_set=64)
+    fs = []
+    for s in range(n_seeds):
+        p = LMAParams(d=d, m=M, n_h=n_h, max_set=64, seed=1000 + s)
+        loc = alloc_lma(p, store, jnp.asarray([0, 1]))
+        fs.append(float(fraction_shared(loc[0], loc[1])))
+    return np.asarray(fs), jt
+
+
+@pytest.mark.parametrize("j,n_h", [(0.3, 1), (0.5, 2), (0.8, 4)])
+def test_thm1_expectation(j, n_h):
+    d = 512
+    fs, jt = _f_samples(j, d, n_h)
+    phi = jt ** n_h
+    gamma = phi + (1 - phi) / M
+    # mean of N_SEEDS samples, each Binomial(d, Γ)/d
+    se = np.sqrt(gamma * (1 - gamma) / d / len(fs))
+    assert abs(fs.mean() - gamma) < 4 * se + 5e-3, (fs.mean(), gamma)
+
+
+@pytest.mark.parametrize("j,n_h", [(0.5, 1), (0.8, 2)])
+def test_thm1_variance(j, n_h):
+    d = 256
+    fs, jt = _f_samples(j, d, n_h)
+    phi = jt ** n_h
+    gamma = phi + (1 - phi) / M
+    v_pred = gamma * (1 - gamma) / d
+    v_hat = fs.var(ddof=1)
+    # chi-square spread of a 48-sample variance estimate: allow 2.2x both ways
+    assert v_pred / 2.2 < v_hat < v_pred * 2.2, (v_hat, v_pred)
+
+
+def test_thm1_variance_decays_with_d():
+    """Var ∝ 1/d: quadrupling d should cut variance ~4x (Fig 3 bands narrow)."""
+    v = {}
+    for d in (128, 512):
+        fs, _ = _f_samples(0.6, d, 2)
+        v[d] = fs.var(ddof=1)
+    ratio = v[128] / max(v[512], 1e-12)
+    assert 1.8 < ratio < 9.0, ratio
+
+
+@pytest.mark.parametrize("j,n_h", [(0.0, 1), (0.4, 1), (0.8, 1), (0.6, 4)])
+def test_thm2_cosine_expectation(j, n_h):
+    """±1 memory: cosine of retrieved embeddings concentrates on φ."""
+    d = 512
+    a, b = sets_with_jaccard(j, size=48)
+    jt = true_jaccard(a, b)
+    store = make_dense_store_from_sets([a, b], max_set=64)
+    phi = jt ** n_h
+    gamma = phi + (1 - phi) / M
+    cs = []
+    for s in range(N_SEEDS):
+        p = LMAParams(d=d, m=M, n_h=n_h, max_set=64, seed=2000 + s)
+        loc = alloc_lma(p, store, jnp.asarray([0, 1]))
+        mem = init_memory(jax.random.key(s), M, "bernoulli", scale=1.0)
+        e = lookup(mem, loc)
+        cs.append(float(cosine(e[0], e[1])))
+    cs = np.asarray(cs)
+    se = np.sqrt((1 - gamma**2) / d / len(cs)) + 1e-4
+    assert abs(cs.mean() - gamma) < 4 * se + 6e-3, (cs.mean(), gamma)
+
+
+def test_thm2_variance_band():
+    """Var(cos) ≈ (1-Γ²)/d (the m² term is negligible at M=2^20)."""
+    d, n_h, j = 256, 1, 0.5
+    a, b = sets_with_jaccard(j, size=48)
+    jt = true_jaccard(a, b)
+    store = make_dense_store_from_sets([a, b], max_set=64)
+    phi = jt ** n_h
+    gamma = phi + (1 - phi) / M
+    cs = []
+    for s in range(N_SEEDS):
+        p = LMAParams(d=d, m=M, n_h=n_h, max_set=64, seed=3000 + s)
+        loc = alloc_lma(p, store, jnp.asarray([0, 1]))
+        mem = init_memory(jax.random.key(100 + s), M, "bernoulli", scale=1.0)
+        e = lookup(mem, loc)
+        cs.append(float(cosine(e[0], e[1])))
+    v_pred = (1 - gamma**2) / d
+    v_hat = np.asarray(cs).var(ddof=1)
+    assert v_pred / 2.5 < v_hat < v_pred * 2.5, (v_hat, v_pred)
+
+
+# ------------------------------------------------------------------ Theorem 3
+
+def _subsample_jaccard(n_total: int, s: float, j: float, n_sub: int, seed: int):
+    """Construct D_x, D_y ⊆ [n_total] with sparsity s and Jaccard j, then
+    estimate Ĵ from an i.i.d. subsample of n_sub rows."""
+    rng = np.random.default_rng(seed)
+    size = int(s * n_total)
+    k = int(round(2 * size * j / (1 + j)))          # |D_x ∩ D_y|
+    perm = rng.permutation(n_total)
+    inter = perm[:k]
+    only_x = perm[k : size]
+    only_y = perm[size : 2 * size - k]
+    in_x = np.zeros(n_total, bool)
+    in_y = np.zeros(n_total, bool)
+    in_x[inter] = in_x[only_x] = True
+    in_y[inter] = in_y[only_y] = True
+    j_true = k / (2 * size - k)
+    rows = rng.choice(n_total, n_sub, replace=False)
+    xi, yi = in_x[rows], in_y[rows]
+    union = (xi | yi).sum()
+    if union == 0:
+        return np.nan, j_true
+    return (xi & yi).sum() / union, j_true
+
+
+@pytest.mark.parametrize("j", [0.2, 0.5, 0.8])
+def test_thm3_subsample_estimate_concentrates(j):
+    n_total, s = 50_000, 0.02
+    for n_sub, tol in ((2_000, 0.12), (20_000, 0.04)):
+        ests, jt = [], None
+        for t in range(24):
+            e, jt = _subsample_jaccard(n_total, s, j, n_sub, seed=t)
+            if not np.isnan(e):
+                ests.append(e)
+        err = abs(np.mean(ests) - jt)
+        assert err < tol, (n_sub, err, jt)
+
+
+def test_thm3_variance_decays_with_ns():
+    """Var(Ĵ) ≈ A = J(1+J-2sJ)/(2ns): 10x more rows -> ~10x less variance."""
+    n_total, s, j = 50_000, 0.02, 0.5
+    v = {}
+    for n_sub in (1_000, 10_000):
+        ests = [
+            _subsample_jaccard(n_total, s, j, n_sub, seed=100 + t)[0]
+            for t in range(64)
+        ]
+        v[n_sub] = np.nanvar(ests, ddof=1)
+    ratio = v[1_000] / max(v[10_000], 1e-12)
+    assert 4.0 < ratio < 30.0, (v, ratio)
+    # absolute scale vs the paper's A (loose bound; factor-3 band)
+    jt = _subsample_jaccard(n_total, s, j, 1_000, 0)[1]
+    A = jt * (1 + jt - 2 * s * jt) / (2 * 1_000 * s)
+    assert A / 3.5 < v[1_000] < A * 3.5, (v[1_000], A)
