@@ -8,6 +8,11 @@ the compiled kernels.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
+
 import numpy as np
 
 import jax
@@ -19,7 +24,78 @@ from repro.kernels.dot_interaction.ref import dot_interaction_ref
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 from repro.kernels.lma_locations.ops import reference as lma_ref
 
-from benchmarks.common import save_csv, time_fn
+from benchmarks.common import ART_DIR, save_csv, time_fn
+
+
+# Sharded-lookup micro-bench: run in a subprocess with 8 forced host devices
+# (this process must keep its single real device).  Times the sharded LMA
+# lookup on a (2, 4) ('data','model') mesh against the replicated-memory
+# baseline and reports the paper-critical traffic numbers: per-device
+# gathered bytes are O(B*d) and per-device resident memory m/n_model —
+# independent of the total budget.
+_SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+import json, time
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core.allocation import LMAParams, alloc_lma
+from repro.core.memory import init_memory, lookup
+from repro.core.signatures import synthetic_dense_store
+from repro.dist.context import use_mesh
+from repro.dist.sharded_memory import sharded_lma_lookup
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+B, D, M, N = 4096, 32, 1 << 21, 8192
+lma = LMAParams(d=D, m=M, n_h=4, max_set=32, seed=7)
+store = synthetic_dense_store(N, 64, max_set=32, seed=1)
+mem = init_memory(jax.random.key(0), M, "normal", 0.1)
+gids = jnp.asarray(np.random.default_rng(0).integers(0, N, (B,), np.int32))
+
+def timeit(f, *a):
+    for _ in range(2):
+        jax.block_until_ready(f(*a))
+    ts = []
+    for _ in range(10):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(*a))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+base = jax.jit(lambda m_, g: lookup(m_, alloc_lma(lma, store, g)))
+t_base = timeit(base, mem, gids)
+with use_mesh(mesh):
+    sh = jax.jit(lambda m_, s, l, g: sharded_lma_lookup(
+        m_, s, l, g, lma, mesh, ("data",)))
+    t_sh = timeit(sh, mem, store.sets, store.lengths, gids)
+
+n_dp, n_model = 2, 4
+print(json.dumps({
+    "mesh": "2x4", "B": B, "d": D, "m": M,
+    "replicated_us": round(t_base, 1),
+    "sharded_us": round(t_sh, 1),
+    "replicated_gathered_bytes_per_device": B * D * 4,
+    "sharded_gathered_bytes_per_device": (B // n_dp) * D * 4,
+    "replicated_resident_memory_bytes": M * 4,
+    "sharded_resident_memory_bytes": M // n_model * 4,
+}))
+"""
+
+
+def bench_sharded_lookup() -> dict:
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    try:
+        r = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT],
+                           capture_output=True, text=True, env=env,
+                           timeout=900)
+    except subprocess.TimeoutExpired:
+        return {"error": "sharded-lookup subprocess timed out (900s)"}
+    if r.returncode != 0:
+        return {"error": r.stderr[-2000:]}
+    return json.loads(r.stdout.strip().splitlines()[-1])
 
 
 def run() -> list[str]:
@@ -59,8 +135,30 @@ def run() -> list[str]:
     rows.append(("cin_ref", "512x200x39x10", round(us, 1)))
     out.append(f"kernels cin ref: {us:.0f} us")
 
+    sharded = bench_sharded_lookup()
+    if "error" not in sharded:
+        rows.append(("sharded_lma_lookup", "4096xd32@m=2^21/8dev",
+                     sharded["sharded_us"]))
+        rows.append(("replicated_lma_lookup", "4096xd32@m=2^21/1dev",
+                     sharded["replicated_us"]))
+        out.append(
+            f"kernels sharded_lma_lookup 8dev: {sharded['sharded_us']:.0f} us "
+            f"(gathered/device {sharded['sharded_gathered_bytes_per_device']/2**10:.0f} KiB "
+            f"vs replicated {sharded['replicated_gathered_bytes_per_device']/2**10:.0f} KiB; "
+            f"resident M/device {sharded['sharded_resident_memory_bytes']/2**20:.0f} MiB "
+            f"vs {sharded['replicated_resident_memory_bytes']/2**20:.0f} MiB)")
+    else:
+        out.append(f"kernels sharded_lma_lookup FAILED: {sharded['error'][:200]}")
+
     path = save_csv("kernels", ["kernel", "shape", "us"], rows)
     out.append(f"kernels -> {path}")
+    # machine-readable ledger next to the CSV: the perf trajectory artifact
+    jpath = os.path.join(ART_DIR, "BENCH_kernels.json")
+    with open(jpath, "w") as f:
+        json.dump({"rows": [{"kernel": k, "shape": s, "us": u}
+                            for k, s, u in rows],
+                   "sharded_lookup": sharded}, f, indent=1)
+    out.append(f"kernels -> {jpath}")
     return out
 
 

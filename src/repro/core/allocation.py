@@ -70,6 +70,19 @@ class LMAParams:
         return self.d * self.n_h if self.independent_hashes else self.d + self.n_h - 1
 
 
+def _rows_signatures(params: LMAParams, rows: jax.Array) -> jax.Array:
+    """Dense D' rows [B, max_set_store] -> raw minhash signatures.
+
+    THE shared hash core: PAD-mask before truncation, truncate to
+    ``params.max_set``, minhash.  Every path that must stay bit-identical
+    (``lma_signatures``, ``alloc_lma_from_rows``, and through it the sharded
+    lookup) funnels through here."""
+    mask = rows != DenseSignatureStore.PAD
+    elems = rows[:, : params.max_set]
+    mask = mask[:, : params.max_set]
+    return minhash_dense(elems, mask, params.n_raw_hashes, params.seed)
+
+
 def lma_signatures(
     params: LMAParams, store: SignatureStore | DenseSignatureStore,
     value_ids: jax.Array,
@@ -79,14 +92,11 @@ def lma_signatures(
     Returns (sigs [B, n_raw_hashes] uint32, support [B] int32 = |D_v|).
     """
     if isinstance(store, DenseSignatureStore):
-        elems = jnp.take(store.sets, value_ids, axis=0)          # [B, max_set]
-        mask = elems != DenseSignatureStore.PAD
-        elems = elems[:, : params.max_set]
-        mask = mask[:, : params.max_set]
+        sigs = _rows_signatures(params, jnp.take(store.sets, value_ids, axis=0))
     else:
         elems, mask = gather_ragged_sets(store.flat, store.offsets, value_ids,
                                          params.max_set)
-    sigs = minhash_dense(elems, mask, params.n_raw_hashes, params.seed)
+        sigs = minhash_dense(elems, mask, params.n_raw_hashes, params.seed)
     support = jnp.take(store.lengths, value_ids, axis=0)
     return sigs, support
 
@@ -107,17 +117,43 @@ def locations_from_signatures(params: LMAParams, sigs: jax.Array) -> jax.Array:
     return (h % jnp.uint32(params.m)).astype(jnp.int32)
 
 
+def _lma_or_fallback(params: LMAParams, loc_lma: jax.Array,
+                     support: jax.Array, value_ids: jax.Array) -> jax.Array:
+    """Very-sparse fallback to A_h (paper section 5): |D_v| < min_support."""
+    loc_fallback = alloc_hashed_elem(value_ids, params.d, params.m,
+                                     params.seed ^ 0x1234567)
+    sparse = (support < params.min_support)[:, None]
+    return jnp.where(sparse, loc_fallback, loc_lma)
+
+
+def alloc_lma_from_rows(
+    params: LMAParams, rows: jax.Array, support: jax.Array,
+    value_ids: jax.Array,
+) -> jax.Array:
+    """A_L from already-gathered dense D' rows.
+
+    ``rows``: [B, max_set_store] uint32 (PAD-padded) — exactly
+    ``store.sets[value_ids]``; ``support``: [B] int32 == |D_v|.  This is the
+    shared core of ``alloc_lma`` and the sharded lookup
+    (``repro.dist.sharded_memory`` reconstructs the rows by mask-local-gather
+    + psum and must produce bit-identical locations).
+    """
+    loc_lma = locations_from_signatures(params, _rows_signatures(params, rows))
+    return _lma_or_fallback(params, loc_lma, support, value_ids)
+
+
 def alloc_lma(
     params: LMAParams, store: SignatureStore | DenseSignatureStore,
     value_ids: jax.Array,
 ) -> jax.Array:
     """Full LMA allocation A_L with very-sparse fallback to A_h (paper section 5)."""
+    if isinstance(store, DenseSignatureStore):
+        rows = jnp.take(store.sets, value_ids, axis=0)
+        support = jnp.take(store.lengths, value_ids, axis=0)
+        return alloc_lma_from_rows(params, rows, support, value_ids)
     sigs, support = lma_signatures(params, store, value_ids)
     loc_lma = locations_from_signatures(params, sigs)
-    loc_fallback = alloc_hashed_elem(value_ids, params.d, params.m,
-                                     params.seed ^ 0x1234567)
-    sparse = (support < params.min_support)[:, None]
-    return jnp.where(sparse, loc_fallback, loc_lma)
+    return _lma_or_fallback(params, loc_lma, support, value_ids)
 
 
 def fraction_shared(loc_a: jax.Array, loc_b: jax.Array) -> jax.Array:

@@ -1,0 +1,73 @@
+"""Thread-local mesh context.
+
+``use_mesh(mesh)`` installs a mesh for the duration of a ``with`` block;
+model code discovers it via ``current_mesh()`` and branches onto the sharded
+paths.  The context is *thread*-local (serving threads score under their own
+mesh or none) and purely Python-level: installing a mesh never touches jax
+global state, so tracing/lowering inside the block sees it and code outside
+the block is untouched.
+
+``constrain(x, template)`` is the one-liner every layer uses to pin
+intermediate activations: a ``with_sharding_constraint`` against the resolved
+template when a mesh is installed, identity otherwise.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+_state = threading.local()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Install ``mesh`` as the ambient distribution mesh for this thread."""
+    prev = getattr(_state, "mesh", None)
+    _state.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def current_mesh():
+    """The installed mesh, or None (single-device paths)."""
+    return getattr(_state, "mesh", None)
+
+
+def axis_sizes(mesh=None) -> dict:
+    mesh = current_mesh() if mesh is None else mesh
+    if mesh is None:
+        return {}
+    return dict(mesh.shape)
+
+
+def dp_axes(mesh=None) -> tuple[str, ...]:
+    """The data-parallel axis set: every one of ('pod', 'data') the mesh has.
+
+    'model' is never data-parallel here — it carries tensor/expert/memory
+    shards (launch/mesh.py axis semantics).
+    """
+    mesh = current_mesh() if mesh is None else mesh
+    if mesh is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def constrain(x: jax.Array, template) -> jax.Array:
+    """``with_sharding_constraint`` against ``template`` if a mesh is installed.
+
+    ``template`` follows ``sharding.resolve_template`` syntax (one entry per
+    leading dim; entries are None or a candidate list).  With no mesh this is
+    the identity, so model code can call it unconditionally.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    from repro.dist.sharding import resolve_template
+
+    spec = resolve_template(template, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))

@@ -1,0 +1,143 @@
+"""Sharded common-memory lookups: mask-local-gather + psum over 'model'.
+
+The paper's memory pool M is a flat [m] vector; production budgets (10^8+
+slots) cannot live replicated on every chip.  Here M is sharded over the
+'model' axis (each device owns a contiguous [m / n_model] slab, replicated
+across the dp axes) and a lookup runs as a ``shard_map``:
+
+  1. every device computes the full [n_local, d] location matrix for its
+     dp-shard of the batch (allocation is pure hashing — no communication);
+  2. it gathers the locations that land in its own slab and zero-fills the
+     rest (the mask-local-gather);
+  3. a ``psum`` over 'model' assembles complete embeddings: exactly one
+     device contributed each element, so the sum is bit-identical to the
+     single-device gather, and the transpose of (gather + psum) is exactly
+     the sharded scatter-add the gradient needs — AD gives it for free.
+
+Per-device traffic is O(n_local * d) — independent of m, the property
+``benchmarks/bench_kernels.py`` records and ``tests/test_sharded.py`` checks
+against the single-device oracle (forward bit-identical, grads to 1e-6).
+
+For LMA the D' store rows are sharded over 'model' the same way and each
+batch row's D_v set is reconstructed with the same gather + psum before the
+location hashes run (integer psum: exact).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import allocation as alc
+from repro.core.allocation import LMAParams
+from repro.core.memory import lookup
+from repro.core.signatures import DenseSignatureStore
+from repro.dist.sharding import shard_map
+
+
+def _model_size(mesh) -> int:
+    return int(dict(mesh.shape).get("model", 1))
+
+
+def _batch_axes(mesh, dp_axes, lead: int) -> tuple[str, ...]:
+    """dp axes for the leading batch dim — all of them or none (replicated)."""
+    axes = tuple(a for a in dp_axes if a in mesh.axis_names)
+    prod = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if prod > 1 and lead % prod == 0:
+        return axes
+    return ()
+
+
+def _bspec(batch_axes) -> tuple | None:
+    if not batch_axes:
+        return None
+    return batch_axes if len(batch_axes) > 1 else batch_axes[0]
+
+
+def local_gather_psum(shard: jax.Array, idx: jax.Array,
+                      axis_name="model") -> jax.Array:
+    """Axis-0-sharded slab + global indices -> full values, gather + psum.
+
+    Works for the memory pool M ([m_local] floats, ``idx`` = [.., d]
+    locations) and for row-sharded integer tables (D' store sets/lengths,
+    ``idx`` = value ids).  Must run inside a ``shard_map`` over
+    ``axis_name``.  Exactly one rank owns each index, so the psum (exact for
+    integers, x+0 for floats) reproduces the single-device gather bitwise;
+    its transpose is the sharded scatter-add (zero-filled ranks scatter 0).
+    """
+    n_local = shard.shape[0]
+    rank = jax.lax.axis_index(axis_name)
+    rel = idx - rank * n_local
+    mine = (rel >= 0) & (rel < n_local)
+    vals = jnp.take(shard, jnp.clip(rel, 0, n_local - 1), axis=0)
+    mask = mine.reshape(mine.shape + (1,) * (vals.ndim - mine.ndim))
+    return jax.lax.psum(jnp.where(mask, vals, jnp.zeros((), vals.dtype)),
+                        axis_name)
+
+
+def sharded_hashed_lookup(memory: jax.Array, gids: jax.Array, d: int, m: int,
+                          seed: int, mesh, dp_axes,
+                          kind: str = "hashed_elem") -> jax.Array:
+    """Hashing-trick lookup with M sharded over 'model'.
+
+    gids [...]: global value ids (leading dim dp-sharded when divisible)
+    -> [..., d].  Bit-identical to ``lookup(memory, alloc_hashed_*(gids))``.
+    """
+    alloc = (alc.alloc_hashed_elem if kind == "hashed_elem"
+             else alc.alloc_hashed_row)
+    n_model = _model_size(mesh)
+    if n_model <= 1 or m % n_model != 0:
+        return lookup(memory, alloc(gids.reshape(-1), d, m, seed)).reshape(
+            *gids.shape, d)
+    batch = _batch_axes(mesh, dp_axes, int(gids.shape[0]))
+    bspec = _bspec(batch)
+    gspec = P(bspec, *([None] * (gids.ndim - 1)))
+
+    def body(mem_l, gids_l):
+        flat = gids_l.reshape(-1)
+        loc = alloc(flat, d, m, seed)
+        out = local_gather_psum(mem_l, loc)
+        return out.reshape(*gids_l.shape, d)
+
+    fn = shard_map(body, mesh=mesh, in_specs=(P("model"), gspec),
+                   out_specs=P(bspec, *([None] * gids.ndim)),
+                   check_vma=False)
+    return fn(memory, gids)
+
+
+def sharded_lma_lookup(memory: jax.Array, store_sets: jax.Array,
+                       store_lengths: jax.Array, gids: jax.Array,
+                       params: LMAParams, mesh, dp_axes) -> jax.Array:
+    """LMA lookup with M *and* the dense D' store sharded over 'model'.
+
+    gids [...] -> [..., d], bit-identical to
+    ``lookup(memory, alloc_lma(params, store, gids))``.  Each device first
+    reconstructs its batch shard's D_v rows from the row-sharded store
+    (gather + integer psum — exact), hashes them to locations, then
+    mask-local-gathers from its M slab.
+    """
+    n_model = _model_size(mesh)
+    n_rows = int(store_sets.shape[0])
+    if (n_model <= 1 or params.m % n_model != 0 or n_rows % n_model != 0):
+        store = DenseSignatureStore(sets=store_sets, lengths=store_lengths)
+        loc = alc.alloc_lma(params, store, gids.reshape(-1))
+        return lookup(memory, loc).reshape(*gids.shape, params.d)
+    batch = _batch_axes(mesh, dp_axes, int(gids.shape[0]))
+    bspec = _bspec(batch)
+    gspec = P(bspec, *([None] * (gids.ndim - 1)))
+
+    def body(mem_l, sets_l, len_l, gids_l):
+        flat = gids_l.reshape(-1)
+        rows = local_gather_psum(sets_l, flat)       # [n, max_set] exact
+        support = local_gather_psum(len_l, flat)     # [n] exact
+        loc = alc.alloc_lma_from_rows(params, rows, support, flat)
+        out = local_gather_psum(mem_l, loc)
+        return out.reshape(*gids_l.shape, params.d)
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P("model"), P("model", None), P("model"), gspec),
+        out_specs=P(bspec, *([None] * gids.ndim)),
+        check_vma=False)
+    return fn(memory, store_sets, store_lengths, gids)

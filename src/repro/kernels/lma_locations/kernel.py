@@ -81,22 +81,31 @@ def _locations_kernel(sets_ref, seeds_ref, rehash_ref, loc_ref, *,
 def lma_locations_pallas(params: LMAParams, sets: jax.Array, seeds: jax.Array,
                          rehash_seeds: jax.Array, *, block_b: int = 256,
                          interpret: bool = False) -> jax.Array:
-    """sets [B, max_set] uint32 (PAD=0xFFFFFFFF) -> locations [B, d] int32."""
+    """sets [B, max_set] uint32 (PAD=0xFFFFFFFF) -> locations [B, d] int32.
+
+    Any batch size works: B is padded up to the next ``block_b`` multiple
+    with all-PAD (empty-set) rows so the grid tiles evenly, and the pad rows
+    are sliced off the result.
+    """
     B, S = sets.shape
-    assert B % block_b == 0 or B < block_b, (B, block_b)
     bb = min(block_b, B)
+    b_pad = -(-B // bb) * bb
+    if b_pad != B:
+        sets = jnp.pad(sets, ((0, b_pad - B), (0, 0)),
+                       constant_values=DenseSignatureStore.PAD)
     kern = functools.partial(
         _locations_kernel, d=params.d, n_h=params.n_h, m=params.m,
         independent=params.independent_hashes)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kern,
-        grid=(B // bb,),
+        grid=(b_pad // bb,),
         in_specs=[
             pl.BlockSpec((bb, S), lambda i: (i, 0)),
             pl.BlockSpec((seeds.shape[0],), lambda i: (0,)),
             pl.BlockSpec((params.d,), lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((bb, params.d), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, params.d), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((b_pad, params.d), jnp.int32),
         interpret=interpret,
     )(sets, seeds, rehash_seeds)
+    return out[:B] if b_pad != B else out

@@ -270,7 +270,8 @@ def prefill(params: dict, cfg: TransformerConfig, tokens: jax.Array,
             if kind == "moe":
                 Bs, Ss, d = h.shape
                 f, _ = moe_dispatch(p_layer["moe"], cfg.moe,
-                                    h.reshape(Bs * Ss, d), inference=True)
+                                    h.reshape(Bs * Ss, d), inference=True,
+                                    lead=Bs)
                 f = f.reshape(Bs, Ss, d)
             else:
                 f = glu_ffn(p_layer["ffn"], h)
@@ -362,7 +363,8 @@ def decode_step(params: dict, cfg: TransformerConfig, tokens: jax.Array,
             if kind == "moe":
                 B = h.shape[0]
                 f, _ = moe_dispatch(p_layer["moe"], cfg.moe,
-                                    h.reshape(B, cfg.d_model), inference=True)
+                                    h.reshape(B, cfg.d_model), inference=True,
+                                    lead=B)
                 f = f.reshape(B, 1, cfg.d_model)
             else:
                 f = glu_ffn(p_layer["ffn"], h)

@@ -104,7 +104,8 @@ def _full_rank(spec, rank):
 
 def moe_apply_sharded(p: dict, cfg: MoEConfig, x: jax.Array, mesh,
                       dp_axes: tuple[str, ...],
-                      full_token_sharding: bool = False
+                      full_token_sharding: bool = False,
+                      lead: int | None = None
                       ) -> tuple[jax.Array, jax.Array]:
     """Expert-parallel MoE via shard_map (the production path).
 
@@ -130,9 +131,16 @@ def moe_apply_sharded(p: dict, cfg: MoEConfig, x: jax.Array, mesh,
     # leaves via reduce-scatter) > dp-only > replicated (decode-sized T)
     # full-mesh token sharding is an INFERENCE optimization: in training the
     # per-layer gathered-token residuals dominate backward memory (deepseek
-    # train_4k: 23.6 -> 179 GiB/device when enabled there)
+    # train_4k: 23.6 -> 179 GiB/device when enabled there).
+    # ``lead``: the caller's [B, S, d] batch dim.  The flat (dp x model)
+    # token sharding reshapes back to (B over dp, S over 'model') ONLY when
+    # B == dp_size; any other factoring leaves GSPMD a {B-ways, S-ways}
+    # layout the residual constraint can't reach without an involuntary
+    # full rematerialization of the [B, S, d] stream (20 GiB/device f32 for
+    # llama4 prefill_32k@16x16) — fall back to dp-only tokens instead.
     tokens_full = (full_token_sharding
-                   and T % (dp_size * M) == 0 and T >= dp_size * M)
+                   and T % (dp_size * M) == 0 and T >= dp_size * M
+                   and (lead is None or lead == dp_size))
     tokens_sharded = T % dp_size == 0 and T >= dp_size
     dp = dp_axes if len(dp_axes) != 1 else dp_axes[0]
     if tokens_full:
@@ -209,7 +217,8 @@ def moe_apply_sharded(p: dict, cfg: MoEConfig, x: jax.Array, mesh,
             aux = jax.lax.pmean(aux, dp_axes)
         return out, aux
 
-    fn = jax.shard_map(
+    from repro.dist.sharding import shard_map
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(None, None), spec_g, spec_g, spec_d, x_spec),
         out_specs=(x_spec, P()),
@@ -221,13 +230,17 @@ def moe_apply_sharded(p: dict, cfg: MoEConfig, x: jax.Array, mesh,
 
 
 def moe_dispatch(p: dict, cfg: MoEConfig, x: jax.Array,
-                 inference: bool = False):
-    """Route to the shard_map expert-parallel path when a mesh is installed."""
+                 inference: bool = False, lead: int | None = None):
+    """Route to the shard_map expert-parallel path when a mesh is installed.
+
+    ``lead``: leading batch dim of the caller's pre-flatten [B, S, d] (or
+    [B, d]) activation — gates the full-mesh token sharding (see
+    ``moe_apply_sharded``)."""
     from repro.dist.context import current_mesh, dp_axes
     mesh = current_mesh()
     if mesh is not None:
         return moe_apply_sharded(p, cfg, x, mesh, dp_axes(mesh),
-                                 full_token_sharding=inference)
+                                 full_token_sharding=inference, lead=lead)
     return moe_apply(p, cfg, x)
 
 

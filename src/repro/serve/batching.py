@@ -50,6 +50,7 @@ class _Pending:
     t_enqueue: float
     event: threading.Event
     result: Optional[float] = None
+    error: Optional[BaseException] = None   # score_fn failure, re-raised in score()
 
 
 class BatchingScorer:
@@ -84,10 +85,12 @@ class BatchingScorer:
         return p
 
     def score(self, features: dict, timeout: float = 30.0) -> float:
-        """Blocking convenience wrapper."""
+        """Blocking convenience wrapper.  Re-raises ``score_fn`` failures."""
         p = self.submit(features)
         if not p.event.wait(timeout):
             raise TimeoutError("scoring request timed out")
+        if p.error is not None:
+            raise p.error
         return p.result
 
     def close(self):
@@ -117,14 +120,26 @@ class BatchingScorer:
 
     def _run(self, batch: list[_Pending]):
         n = len(batch)
-        b = bucket_for(n, self.buckets)
-        keys = batch[0].features.keys()
-        arrays = {}
-        for k in keys:
-            rows = np.stack([np.asarray(p.features[k]) for p in batch])
-            pad = [(0, b - n)] + [(0, 0)] * (rows.ndim - 1)
-            arrays[k] = np.pad(rows, pad)
-        scores = np.asarray(self.score_fn(arrays))[:n]
+        try:
+            b = bucket_for(n, self.buckets)
+            keys = batch[0].features.keys()
+            arrays = {}
+            for k in keys:
+                rows = np.stack([np.asarray(p.features[k]) for p in batch])
+                pad = [(0, b - n)] + [(0, 0)] * (rows.ndim - 1)
+                arrays[k] = np.pad(rows, pad)
+            scores = np.asarray(self.score_fn(arrays))[:n]
+            if scores.shape[0] < n:  # short result strands the tail pendings
+                raise ValueError(
+                    f"score_fn returned {scores.shape[0]} scores for {n} requests")
+        except BaseException as e:  # noqa: BLE001 — a worker-thread failure
+            # must never strand callers: park the exception on every pending
+            # record and wake them (score() re-raises; raw submit() users see
+            # .error set).  Swallowing it here would mean 30 s TimeoutErrors.
+            for p in batch:
+                p.error = e
+                p.event.set()
+            return
         self.n_batches += 1
         self.n_requests += n
         self.batch_sizes.append(n)

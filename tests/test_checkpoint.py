@@ -6,7 +6,12 @@ import os
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # optional dev dep: only the property-based tests need it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 import jax
 import jax.numpy as jnp
@@ -114,28 +119,32 @@ def test_elastic_restore_device_put(tmp_path):
     assert leaf.sharding == sh
 
 
-leaf_st = st.one_of(
-    st.integers(-5, 5).map(lambda i: np.asarray(i, np.int32)),
-    st.lists(st.floats(-1, 1, width=32), min_size=1, max_size=4)
-      .map(lambda l: np.asarray(l, np.float32)),
-)
-tree_st = st.recursive(
-    leaf_st,
-    lambda children: st.one_of(
-        st.dictionaries(st.sampled_from(list("abcd")), children,
-                        min_size=1, max_size=3),
-        st.tuples(children, children),
-    ),
-    max_leaves=8,
-)
+if HAVE_HYPOTHESIS:
+    leaf_st = st.one_of(
+        st.integers(-5, 5).map(lambda i: np.asarray(i, np.int32)),
+        st.lists(st.floats(-1, 1, width=32), min_size=1, max_size=4)
+          .map(lambda l: np.asarray(l, np.float32)),
+    )
+    tree_st = st.recursive(
+        leaf_st,
+        lambda children: st.one_of(
+            st.dictionaries(st.sampled_from(list("abcd")), children,
+                            min_size=1, max_size=3),
+            st.tuples(children, children),
+        ),
+        max_leaves=8,
+    )
 
-
-@settings(max_examples=30, deadline=None)
-@given(tree=tree_st)
-def test_property_flatten_unflatten_roundtrip(tree):
-    flat = _flatten(tree)
-    rebuilt = _unflatten(flat)
-    la, lb = jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(rebuilt)
-    assert len(la) == len(lb)
-    for x, y in zip(la, lb):
-        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    @settings(max_examples=30, deadline=None)
+    @given(tree=tree_st)
+    def test_property_flatten_unflatten_roundtrip(tree):
+        flat = _flatten(tree)
+        rebuilt = _unflatten(flat)
+        la, lb = (jax.tree_util.tree_leaves(tree),
+                  jax.tree_util.tree_leaves(rebuilt))
+        assert len(la) == len(lb)
+        for x, y in zip(la, lb):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+else:
+    def test_property_flatten_unflatten_roundtrip():
+        pytest.importorskip("hypothesis")

@@ -4,7 +4,12 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # optional dev dep: only the property-based tests need it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.minhash import jaccard_from_sets
 from repro.core.signatures import (build_signature_store, densify_store,
@@ -166,13 +171,17 @@ def _auc_brute(y, s):
     return cmp / (len(pos) * len(neg))
 
 
-@settings(max_examples=40, deadline=None)
-@given(st.lists(st.tuples(st.booleans(),
-                          st.integers(0, 20)), min_size=2, max_size=60))
-def test_property_auc_matches_brute_force(pairs):
-    y = np.asarray([int(a) for a, _ in pairs], np.float64)
-    s = np.asarray([b for _, b in pairs], np.float64) / 7.0  # force ties
-    assert roc_auc(y, s) == pytest.approx(_auc_brute(y, s), abs=1e-9)
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.tuples(st.booleans(),
+                              st.integers(0, 20)), min_size=2, max_size=60))
+    def test_property_auc_matches_brute_force(pairs):
+        y = np.asarray([int(a) for a, _ in pairs], np.float64)
+        s = np.asarray([b for _, b in pairs], np.float64) / 7.0  # force ties
+        assert roc_auc(y, s) == pytest.approx(_auc_brute(y, s), abs=1e-9)
+else:
+    def test_property_auc_matches_brute_force():
+        pytest.importorskip("hypothesis")
 
 
 def test_auc_perfect_and_inverted():

@@ -108,6 +108,23 @@ def test_embed_fields_consistent_with_per_table(kind):
                                    rtol=1e-6, atol=1e-6)
 
 
+@pytest.mark.parametrize("kind", ["hashed_elem", "hashed_row", "lma"])
+def test_embed_fields_fused_path_bit_identical(kind):
+    """The fused global-id fast path (one gather over globalized ids) must
+    agree BIT-FOR-BIT with the per-table embed loop — same hash inputs, same
+    locations, same gather."""
+    cfg = _cfg(kind)
+    params = init_embedding(jax.random.key(0), cfg)
+    bufs = _buffers(cfg)
+    rng = np.random.default_rng(7)
+    ids = jnp.asarray(np.stack([rng.integers(0, v, 32) for v in VOCABS], 1)
+                      .astype(np.int32))
+    fused = np.asarray(embed_fields(cfg, params, bufs, ids))
+    for f in range(len(VOCABS)):
+        want = np.asarray(embed(cfg, params, bufs, f, ids[:, f]))
+        np.testing.assert_array_equal(fused[:, f], want)
+
+
 def test_lma_common_memory_semantics():
     """Same global id -> same embedding regardless of which table produced it;
     the common-memory pool is shared across tables (paper section 5)."""

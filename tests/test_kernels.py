@@ -88,6 +88,38 @@ def test_embedding_bag_sweep(V, d, B, L, dtype):
         np.testing.assert_allclose(got, want, **TOL[dtype])
 
 
+def test_embedding_bag_matches_core_embed_bag():
+    """Kernel (interpret) == core.embedding.embed_bag — the jnp path every
+    recsys model actually calls (gather + masked reduce, 'full' tables)."""
+    from repro.core.embedding import (EmbeddingConfig, embed_bag,
+                                      init_embedding)
+    cfg = EmbeddingConfig(kind="full", vocab_sizes=(640,), dim=32)
+    params = init_embedding(jax.random.key(3), cfg)
+    rng = np.random.default_rng(4)
+    ids = jnp.asarray(rng.integers(0, 640, (48, 12), dtype=np.int32))
+    mask = jnp.asarray(rng.random((48, 12)) < 0.6)
+    got = embedding_bag(params["table_0"], ids,
+                        mask.astype(jnp.float32), True)
+    want = embed_bag(cfg, params, {}, 0, ids, mask, "sum")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_lma_locations_pads_ragged_batch():
+    """B that neither divides nor fits under block_b (e.g. 300) must work:
+    the wrapper pads to the block multiple and slices — same values as the
+    reference on every real row."""
+    rng = np.random.default_rng(9)
+    sets = rng.integers(0, 2**31, (300, 16), dtype=np.uint32)
+    sets[5, 3:] = DenseSignatureStore.PAD
+    sets = jnp.asarray(sets)
+    p = LMAParams(d=8, m=4096, n_h=2, max_set=16)
+    got = np.asarray(lma_locations(p, sets, True))
+    want = np.asarray(lma_ref(p, sets))
+    assert got.shape == (300, 8)
+    np.testing.assert_array_equal(got, want)
+
+
 def test_embedding_bag_empty_bag_is_zero():
     table = _rand(jax.random.key(0), (128, 16), jnp.float32)
     ids = jnp.zeros((4, 6), jnp.int32)

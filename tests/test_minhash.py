@@ -6,7 +6,12 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # optional dev dep: only the property-based tests need it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 import jax.numpy as jnp
 
@@ -65,18 +70,22 @@ def test_chunking_invariance():
     np.testing.assert_array_equal(a, c)
 
 
-@settings(max_examples=25, deadline=None)
-@given(
-    a=st.sets(st.integers(0, 5000), min_size=1, max_size=40),
-    b=st.sets(st.integers(0, 5000), min_size=1, max_size=40),
-)
-def test_property_collision_rate_tracks_jaccard(a, b):
-    """For arbitrary set pairs the empirical collision rate concentrates on J."""
-    jt = true_jaccard(a, b)
-    sigs = _sigs_for_sets(a, b, n_hashes=1024, seed=2)
-    p_hat = float((sigs[0] == sigs[1]).mean())
-    tol = 4.0 * np.sqrt(max(jt * (1 - jt), 0.02) / 1024) + 0.02
-    assert abs(p_hat - jt) < tol
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        a=st.sets(st.integers(0, 5000), min_size=1, max_size=40),
+        b=st.sets(st.integers(0, 5000), min_size=1, max_size=40),
+    )
+    def test_property_collision_rate_tracks_jaccard(a, b):
+        """For arbitrary set pairs the empirical collision rate tracks J."""
+        jt = true_jaccard(a, b)
+        sigs = _sigs_for_sets(a, b, n_hashes=1024, seed=2)
+        p_hat = float((sigs[0] == sigs[1]).mean())
+        tol = 4.0 * np.sqrt(max(jt * (1 - jt), 0.02) / 1024) + 0.02
+        assert abs(p_hat - jt) < tol
+else:
+    def test_property_collision_rate_tracks_jaccard():
+        pytest.importorskip("hypothesis")
 
 
 def test_gather_ragged_sets_roundtrip():
