@@ -65,16 +65,27 @@ def timeit(f, *a):
 
 base = jax.jit(lambda m_, g: lookup(m_, alloc_lma(lma, store, g)))
 t_base = timeit(base, mem, gids)
+# pin the engine state per measurement so an inherited REPRO_FUSED_EMBED=0
+# cannot make both rows time the split path
+import repro.kernels.fused_embed.ops as feops
+feops.ENABLED = True
 with use_mesh(mesh):
     sh = jax.jit(lambda m_, s, l, g: sharded_lma_lookup(
         m_, s, l, g, lma, mesh, ("data",)))
-    t_sh = timeit(sh, mem, store.sets, store.lengths, gids)
+    t_fused = timeit(sh, mem, store.sets, store.lengths, gids)
+feops.ENABLED = False
+with use_mesh(mesh):
+    sh2 = jax.jit(lambda m_, s, l, g: sharded_lma_lookup(
+        m_, s, l, g, lma, mesh, ("data",)))
+    t_split = timeit(sh2, mem, store.sets, store.lengths, gids)
+feops.ENABLED = True
 
 n_dp, n_model = 2, 4
 print(json.dumps({
     "mesh": "2x4", "B": B, "d": D, "m": M,
     "replicated_us": round(t_base, 1),
-    "sharded_us": round(t_sh, 1),
+    "sharded_fused_us": round(t_fused, 1),
+    "sharded_split_us": round(t_split, 1),
     "replicated_gathered_bytes_per_device": B * D * 4,
     "sharded_gathered_bytes_per_device": (B // n_dp) * D * 4,
     "replicated_resident_memory_bytes": M * 4,
@@ -98,6 +109,24 @@ def bench_sharded_lookup() -> dict:
     return json.loads(r.stdout.strip().splitlines()[-1])
 
 
+def modeled_lookup_bytes(n: int, s: int, d: int) -> dict:
+    """Modeled HBM bytes moved per batch lookup (n values, set width s,
+    d locations each; 4-byte elements).
+
+    split: read sets + WRITE the [N, d] int32 location tensor + READ it back
+    + the gathered memory reads + write the [N, d] output.
+    fused: locations never leave VMEM — the 2 * N*d*4 location-tensor
+    round-trip disappears; sets stream in, gathers + output remain."""
+    loc_tensor = n * d * 4
+    gather_io = n * s * 4 + n * d * 4 + n * d * 4   # sets + gather + out
+    return {
+        "split": gather_io + 2 * loc_tensor,
+        "fused": gather_io,
+        "location_tensor_bytes": loc_tensor,
+        "saved": 2 * loc_tensor,
+    }
+
+
 def run() -> list[str]:
     out = []
     rows = []
@@ -111,6 +140,30 @@ def run() -> list[str]:
     rows.append(("lma_locations_ref", "4096x32xd32", round(us, 1)))
     out.append(f"kernels lma_locations ref 4096 values: {us:.0f} us "
                f"({4096 * p.n_raw_hashes * 32 / (us/1e6) / 1e9:.1f} Ghash/s)")
+
+    # fused engine vs the split kernel+take path, same 4096x32@m=2^21 shape
+    from repro.core.memory import init_memory
+    from repro.kernels.fused_embed import ops as fe
+    from repro.kernels.lma_locations.ops import lma_locations
+    mem = init_memory(jax.random.key(0), p.m, "normal", 0.1)
+    gids = jnp.asarray(rng.integers(0, 4096, (4096,), np.int32))
+    support = jnp.full((4096,), 32, jnp.int32)
+    spec = fe.lma_spec(p)
+    split = jax.jit(lambda m_, s: jnp.take(m_, lma_locations(p, s, True),
+                                           axis=0))
+    us_split = time_fn(split, mem, sets)
+    fused = jax.jit(lambda m_, s, g, su: fe.fused_lookup(spec, m_, g, s, su))
+    us_fused = time_fn(fused, mem, sets, gids, support)
+    rows.append(("lma_split_lookup", "4096x32@m=2^21", round(us_split, 1)))
+    rows.append(("lma_fused_lookup", "4096x32@m=2^21", round(us_fused, 1)))
+    hbm = modeled_lookup_bytes(4096, 32, p.d)
+    out.append(
+        f"kernels lma lookup 4096x32@m=2^21: fused {us_fused:.0f} us vs "
+        f"split {us_split:.0f} us ({us_split / max(us_fused, 1e-9):.2f}x); "
+        f"modeled HBM/lookup {hbm['fused']/2**10:.0f} KiB vs "
+        f"{hbm['split']/2**10:.0f} KiB "
+        f"(saves 2x the {hbm['location_tensor_bytes']/2**10:.0f} KiB "
+        f"[N,d] int32 location tensor)")
 
     table = jax.random.normal(jax.random.key(0), (65536, 64), jnp.float32)
     ids = jnp.asarray(rng.integers(0, 65536, (2048, 32), dtype=np.int32))
@@ -137,12 +190,16 @@ def run() -> list[str]:
 
     sharded = bench_sharded_lookup()
     if "error" not in sharded:
-        rows.append(("sharded_lma_lookup", "4096xd32@m=2^21/8dev",
-                     sharded["sharded_us"]))
+        rows.append(("sharded_lma_lookup_fused", "4096xd32@m=2^21/8dev",
+                     sharded["sharded_fused_us"]))
+        rows.append(("sharded_lma_lookup_split", "4096xd32@m=2^21/8dev",
+                     sharded["sharded_split_us"]))
         rows.append(("replicated_lma_lookup", "4096xd32@m=2^21/1dev",
                      sharded["replicated_us"]))
         out.append(
-            f"kernels sharded_lma_lookup 8dev: {sharded['sharded_us']:.0f} us "
+            f"kernels sharded_lma_lookup 8dev: fused "
+            f"{sharded['sharded_fused_us']:.0f} us vs split "
+            f"{sharded['sharded_split_us']:.0f} us "
             f"(gathered/device {sharded['sharded_gathered_bytes_per_device']/2**10:.0f} KiB "
             f"vs replicated {sharded['replicated_gathered_bytes_per_device']/2**10:.0f} KiB; "
             f"resident M/device {sharded['sharded_resident_memory_bytes']/2**20:.0f} MiB "
@@ -153,10 +210,12 @@ def run() -> list[str]:
     path = save_csv("kernels", ["kernel", "shape", "us"], rows)
     out.append(f"kernels -> {path}")
     # machine-readable ledger next to the CSV: the perf trajectory artifact
+    # (benchmarks/check_regression.py diffs fresh runs against this file)
     jpath = os.path.join(ART_DIR, "BENCH_kernels.json")
     with open(jpath, "w") as f:
         json.dump({"rows": [{"kernel": k, "shape": s, "us": u}
                             for k, s, u in rows],
+                   "modeled_hbm_bytes_per_lookup": hbm,
                    "sharded_lookup": sharded}, f, indent=1)
     out.append(f"kernels -> {jpath}")
     return out

@@ -1,0 +1,108 @@
+"""Kernel wall-time regression gate over experiments/bench/BENCH_kernels.json.
+
+Diffs a fresh kernel-bench ledger against the committed baseline and fails
+(exit 1) when any kernel row regresses by more than ``--max-ratio`` (default
+1.3x), or when a baseline row disappears from the fresh run.  New rows are
+allowed (they become baseline once committed).
+
+Usage:
+  python benchmarks/check_regression.py                 # re-run bench, diff
+  python benchmarks/check_regression.py --fresh F.json  # diff two ledgers
+
+Without ``--fresh``, ``bench_kernels.run()`` regenerates the ledger, the
+result is compared against the committed baseline, and the baseline file is
+then restored so a failed gate cannot silently become the new baseline on a
+re-run; the fresh ledger is kept next to it as ``BENCH_kernels.fresh.json``
+(copy it over the baseline and commit to ratchet).
+
+Interpret-mode CPU timings carry real run-to-run noise (a loaded machine can
+drift an untouched kernel past 1.3x), so regenerate the baseline on a quiet
+machine and treat a failure as a prompt to re-run before blaming the code;
+``--max-ratio`` loosens the gate for noisy CI hosts.
+
+``tests/test_check_regression.py`` keeps the compare logic under tier-1.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+BASELINE = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "bench", "BENCH_kernels.json")
+MAX_RATIO = 1.3
+
+
+def load_rows(path_or_doc) -> dict[tuple[str, str], float]:
+    """Ledger -> {(kernel, shape): us}.  Accepts a path or a parsed dict."""
+    doc = path_or_doc
+    if not isinstance(doc, dict):
+        with open(path_or_doc) as f:
+            doc = json.load(f)
+    return {(r["kernel"], r["shape"]): float(r["us"]) for r in doc["rows"]}
+
+
+def compare(baseline: dict, fresh: dict,
+            max_ratio: float = MAX_RATIO) -> list[str]:
+    """Return human-readable failures (empty == no regression)."""
+    failures = []
+    for key, base_us in sorted(baseline.items()):
+        kernel, shape = key
+        if key not in fresh:
+            failures.append(f"{kernel} [{shape}]: row missing from fresh run")
+            continue
+        us = fresh[key]
+        if base_us > 0 and us > max_ratio * base_us:
+            failures.append(
+                f"{kernel} [{shape}]: {us:.1f} us vs baseline "
+                f"{base_us:.1f} us ({us / base_us:.2f}x > {max_ratio:.2f}x)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--fresh", default=None,
+                    help="pre-generated ledger; omit to re-run bench_kernels")
+    ap.add_argument("--max-ratio", type=float, default=MAX_RATIO)
+    args = ap.parse_args(argv)
+
+    baseline = load_rows(args.baseline)
+    if args.fresh is not None:
+        fresh = load_rows(args.fresh)
+    else:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        sys.path.insert(0, root)                       # benchmarks.*
+        sys.path.insert(0, os.path.join(root, "src"))  # repro.*
+        csv_path = os.path.join(os.path.dirname(BASELINE), "kernels.csv")
+        committed = {p: open(p).read()
+                     for p in (BASELINE, csv_path) if os.path.exists(p)}
+        try:
+            from benchmarks.bench_kernels import run
+            for line in run():       # writes the repo ledger (BASELINE path)
+                print(line)
+            fresh = load_rows(BASELINE)
+            fresh_path = BASELINE.replace(".json", ".fresh.json")
+            os.replace(BASELINE, fresh_path)
+            print(f"fresh ledger -> {fresh_path}")
+        finally:
+            # even on a crashed/interrupted bench, the committed artifacts
+            # must not silently become the new baseline
+            for p, text in committed.items():
+                with open(p, "w") as f:
+                    f.write(text)
+
+    failures = compare(baseline, fresh, args.max_ratio)
+    if failures:
+        print(f"REGRESSION ({len(failures)} row(s)):")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print(f"OK: {len(fresh)} kernel rows within {args.max_ratio:.2f}x "
+          f"of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,7 +23,10 @@ from repro.core import allocation as alc
 from repro.core.allocation import LMAParams
 from repro.core.hashing import hash_u32, seed_stream
 from repro.core.memory import init_memory, lookup
+from repro.core.minhash import gather_ragged_sets
 from repro.core.signatures import DenseSignatureStore, SignatureStore
+
+_LOCATION_KINDS = ("hashed_elem", "hashed_row", "lma")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,8 +74,11 @@ class EmbeddingConfig:
             assert self.budget is not None
             n = 0
             for v in self.vocab_sizes:
-                mq = _qr_rows(v, self.dim, self.budget, self.total_vocab)
-                n += (mq + -(-v // mq)) * self.dim
+                mq, mr = _qr_rows(v, self.dim, self.budget, self.total_vocab)
+                assert mq + mr <= _qr_rows_budget(v, self.dim, self.budget,
+                                                  self.total_vocab), \
+                    (v, mq, mr, "qr tables exceed this table's budget share")
+                n += (mq + mr) * self.dim
             return n
         if self.kind == "md":
             assert self.md_dims is not None
@@ -81,14 +87,25 @@ class EmbeddingConfig:
         raise ValueError(self.kind)
 
 
-def _qr_rows(vocab: int, dim: int, budget: int, total_vocab: int) -> int:
-    """Quotient-remainder split sized against this table's share of the budget."""
+def _qr_rows_budget(vocab: int, dim: int, budget: int, total_vocab: int) -> int:
+    """Row budget for one table: its proportional share of the scalar budget."""
     share = max(budget * (vocab / max(total_vocab, 1)), 4 * dim)
-    rows_budget = max(int(share // dim), 4)
-    # minimize mq + vocab/mq subject to mq + ceil(vocab/mq) <= rows_budget approx
+    return max(int(share // dim), 4)
+
+
+def _qr_rows(vocab: int, dim: int, budget: int, total_vocab: int) -> tuple[int, int]:
+    """(quotient rows mq, remainder rows mr) with mq + mr <= rows_budget.
+
+    mq ~= sqrt(vocab) minimizes collisions; mr = ceil(vocab / mq) when the
+    budget allows (then ``(v // mq) % mr == v // mq`` — collision-free in the
+    quotient, identical to the unconstrained QR trick), else mr is clamped to
+    the remaining row budget and the quotient index wraps (hash-style
+    collisions instead of a blown budget)."""
+    rows_budget = _qr_rows_budget(vocab, dim, budget, total_vocab)
     mq = int(np.sqrt(max(vocab, 1)))
-    mq = max(2, min(mq, rows_budget - 1))
-    return mq
+    mq = max(2, min(mq, rows_budget - 2))
+    mr = max(2, min(-(-vocab // mq), rows_budget - mq))
+    return mq, mr
 
 
 def init_embedding(key: jax.Array, cfg: EmbeddingConfig) -> dict:
@@ -118,8 +135,7 @@ def init_embedding(key: jax.Array, cfg: EmbeddingConfig) -> dict:
         params = {}
         keys = jax.random.split(key, 2 * cfg.n_tables)
         for t, v in enumerate(cfg.vocab_sizes):
-            mq = _qr_rows(v, d, cfg.budget, cfg.total_vocab)
-            mr = -(-v // mq)
+            mq, mr = _qr_rows(v, d, cfg.budget, cfg.total_vocab)
             params[f"q_{t}"] = (jax.random.normal(keys[2 * t], (mq, d)) * scale).astype(dt)
             # remainder table multiplies element-wise; init around 1 so the product
             # starts near the quotient embedding
@@ -190,10 +206,71 @@ def _sharded_lookup(cfg: EmbeddingConfig, params: dict, buffers: dict,
                                  cfg.seed, mesh, dp, kind=cfg.kind)
 
 
-def _locations(cfg: EmbeddingConfig, buffers: dict, table: int,
-               flat_ids: jax.Array) -> jax.Array:
-    """[N] table-local ids -> [N, d] locations, for location-based schemes."""
-    return _locations_global(cfg, buffers, _global_ids(cfg, table, flat_ids))
+# ------------------------------------------------------- fused engine path
+
+def _use_fused(cfg: EmbeddingConfig, params: dict) -> bool:
+    """Dispatch the single-device hot path to the fused Pallas engine
+    (kernels/fused_embed): locations + pool gather in one VMEM pass."""
+    if cfg.kind not in _LOCATION_KINDS:
+        return False
+    mem = params.get("memory")
+    if mem is None or mem.ndim != 1:
+        return False
+    # the engine indexes mod the spec's m with no clipping: it is only the
+    # split path's bit-exact twin when the pool really has m slots
+    m_spec = cfg.lma.m if cfg.kind == "lma" else cfg.budget
+    if mem.shape[0] != m_spec:
+        return False
+    from repro.kernels.fused_embed import ops as fe
+    return fe.fused_enabled() and fe.fused_supported(mem.shape[0],
+                                                     mem.dtype.itemsize)
+
+
+def _fused_spec(cfg: EmbeddingConfig):
+    from repro.kernels.fused_embed import ops as fe
+    if cfg.kind == "lma":
+        return fe.lma_spec(cfg.lma)
+    return fe.hashed_spec(cfg.kind, cfg.dim, cfg.budget, cfg.seed)
+
+
+def _fused_rows(cfg: EmbeddingConfig, buffers: dict,
+                gids: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """D' rows + support for a flat [N] gid batch (LMA only), in the
+    PAD-sentinel form the kernel masks on — bit-identical inputs to
+    ``alloc_lma``'s."""
+    p = cfg.lma
+    if "store_sets" in buffers:
+        rows = jnp.take(buffers["store_sets"], gids, axis=0)[:, : p.max_set]
+    else:
+        elems, mask = gather_ragged_sets(buffers["store_flat"],
+                                         buffers["store_offsets"], gids,
+                                         p.max_set)
+        rows = jnp.where(mask, elems, DenseSignatureStore.PAD)
+    support = jnp.take(buffers["store_lengths"], gids, axis=0)
+    return rows, support
+
+
+def _fused_lookup_global(cfg: EmbeddingConfig, params: dict, buffers: dict,
+                         gids: jax.Array) -> jax.Array:
+    from repro.kernels.fused_embed import ops as fe
+    spec = _fused_spec(cfg)
+    if cfg.kind == "lma":
+        rows, support = _fused_rows(cfg, buffers, gids)
+        return fe.fused_lookup(spec, params["memory"], gids, rows, support)
+    return fe.fused_lookup(spec, params["memory"], gids)
+
+
+def _memory_lookup(cfg: EmbeddingConfig, params: dict, buffers: dict,
+                   gids: jax.Array) -> jax.Array:
+    """[N] global ids -> [N, d] for the common-memory schemes: sharded when a
+    mesh is installed, fused Pallas engine when supported, else the split
+    locations + jnp.take path."""
+    ctx = _sharded_ctx()
+    if ctx is not None:
+        return _sharded_lookup(cfg, params, buffers, gids, *ctx)
+    if _use_fused(cfg, params):
+        return _fused_lookup_global(cfg, params, buffers, gids)
+    return lookup(params["memory"], _locations_global(cfg, buffers, gids))
 
 
 def embed(cfg: EmbeddingConfig, params: dict, buffers: dict, table: int,
@@ -206,20 +283,17 @@ def embed(cfg: EmbeddingConfig, params: dict, buffers: dict, table: int,
     elif cfg.kind == "qr":
         v = flat.astype(jnp.int32)
         mq = params[f"q_{table}"].shape[0]
+        mr = params[f"r_{table}"].shape[0]
         eq = jnp.take(params[f"q_{table}"], v % mq, axis=0)
-        er = jnp.take(params[f"r_{table}"], v // mq, axis=0)
+        # % mr is the identity when the budget admitted mr == ceil(v / mq)
+        er = jnp.take(params[f"r_{table}"], (v // mq) % mr, axis=0)
         out = eq * er
     elif cfg.kind == "md":
         e = jnp.take(params[f"table_{table}"], flat.astype(jnp.int32), axis=0)
         out = e @ params[f"proj_{table}"]
     else:
-        ctx = _sharded_ctx()
-        if ctx is not None:
-            out = _sharded_lookup(cfg, params, buffers,
-                                  _global_ids(cfg, table, flat), *ctx)
-        else:
-            loc = _locations(cfg, buffers, table, flat)
-            out = lookup(params["memory"], loc)
+        out = _memory_lookup(cfg, params, buffers,
+                             _global_ids(cfg, table, flat))
     return out.reshape(*shape, cfg.dim)
 
 
@@ -232,15 +306,10 @@ def embed_fields(cfg: EmbeddingConfig, params: dict, buffers: dict,
     """
     B, F = ids.shape
     assert F == cfg.n_tables, (F, cfg.n_tables)
-    if cfg.kind in ("hashed_elem", "hashed_row", "lma"):
+    if cfg.kind in _LOCATION_KINDS:
         offs = jnp.asarray(cfg.table_offsets()[:-1], jnp.int32)
         gids = (ids.astype(jnp.int32) + offs[None, :]).reshape(-1)
-        ctx = _sharded_ctx()
-        if ctx is not None:
-            out = _sharded_lookup(cfg, params, buffers, gids, *ctx)
-        else:
-            loc = _locations_global(cfg, buffers, gids)
-            out = lookup(params["memory"], loc)
+        out = _memory_lookup(cfg, params, buffers, gids)
         return out.reshape(B, F, cfg.dim)
     cols = [embed(cfg, params, buffers, f, ids[:, f]) for f in range(F)]
     return jnp.stack(cols, axis=1)
@@ -262,18 +331,39 @@ def embed_bag(cfg: EmbeddingConfig, params: dict, buffers: dict, table: int,
               ids: jax.Array, mask: jax.Array, mode: str = "sum") -> jax.Array:
     """Multi-hot pooling: ids [B, L], mask [B, L] -> [B, dim].
 
-    JAX has no native EmbeddingBag; this is gather + masked reduce (and a Pallas
-    kernel in repro/kernels/embedding_bag for the TPU hot path).
+    JAX has no native EmbeddingBag.  Common-memory schemes pool inside the
+    fused Pallas engine (the [B, L, d] pre-pool tensor never leaves VMEM);
+    everything else is gather + masked reduce (plus the one-hot-matmul kernel
+    in repro/kernels/embedding_bag for full-table TPU bags).
     """
-    e = embed(cfg, params, buffers, table, ids)          # [B, L, d]
-    w = mask.astype(e.dtype)[..., None]
-    s = jnp.sum(e * w, axis=-2)
+    if _sharded_ctx() is None and _use_fused(cfg, params):
+        w = mask.astype(params["memory"].dtype)
+        s = _fused_bag_sum(cfg, params, buffers, table, ids, w)
+    else:
+        e = embed(cfg, params, buffers, table, ids)      # [B, L, d]
+        w = mask.astype(e.dtype)
+        s = jnp.sum(e * w[..., None], axis=-2)
     if mode == "sum":
         return s
     if mode == "mean":
-        n = jnp.maximum(jnp.sum(w, axis=-2), 1.0)
+        n = jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1.0)
         return s / n
     raise ValueError(mode)
+
+
+def _fused_bag_sum(cfg: EmbeddingConfig, params: dict, buffers: dict,
+                   table: int, ids: jax.Array, w: jax.Array) -> jax.Array:
+    """Weighted-sum bags through the fused engine (pooling in-kernel)."""
+    from repro.kernels.fused_embed import ops as fe
+    B, L = ids.shape
+    gids = _global_ids(cfg, table, ids.reshape(-1))
+    spec = _fused_spec(cfg)
+    if cfg.kind == "lma":
+        rows, support = _fused_rows(cfg, buffers, gids)
+        return fe.fused_embed_bag(spec, params["memory"], gids.reshape(B, L),
+                                  w, rows.reshape(B, L, -1),
+                                  support.reshape(B, L))
+    return fe.fused_embed_bag(spec, params["memory"], gids.reshape(B, L), w)
 
 
 def materialize_rows(cfg: EmbeddingConfig, params: dict, buffers: dict, table: int,

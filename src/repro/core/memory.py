@@ -5,9 +5,16 @@ allocation, cosine similarity of retrieved embeddings concentrates on the target
 kernel phi.  For end-to-end training we scale the +/-1 init (or use scaled normal)
 so downstream layers see unit-variance-ish activations.
 
-``lookup`` is the single-device path (jnp.take; transpose-of-gather gives the
-scatter-add gradient automatically).  The 512-chip sharded path lives in
-``repro/dist/sharded_memory.py`` (mask-local-gather + psum, O(B*d) traffic).
+``lookup`` is the split-path retrieval primitive: a materialized [.., d]
+location tensor gathered with jnp.take (transpose-of-gather gives the
+scatter-add gradient automatically).  The production hot path no longer
+routes through it — ``repro/kernels/fused_embed`` computes locations AND
+gathers (and bag-pools) in one Pallas VMEM pass with a scatter-add custom
+VJP, and ``repro/core/embedding.py`` dispatches there; ``lookup`` remains
+the oracle that path must match bit-for-bit, and the fallback when the pool
+exceeds the engine's VMEM budget.  The 512-chip sharded path lives in
+``repro/dist/sharded_memory.py`` (mask-local-gather + psum, O(B*d) traffic,
+fused per-slab kernel inside the shard_map).
 """
 from __future__ import annotations
 

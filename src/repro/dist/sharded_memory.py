@@ -14,6 +14,13 @@ across the dp axes) and a lookup runs as a ``shard_map``:
      single-device gather, and the transpose of (gather + psum) is exactly
      the sharded scatter-add the gradient needs — AD gives it for free.
 
+Steps 1-2 run inside the fused Pallas engine when the slab fits its VMEM
+budget (``repro/kernels/fused_embed``): locations are computed and masked-
+gathered per batch tile without the [n_local, d] location tensor touching
+HBM, and the engine's custom VJP scatter-adds straight into the slab
+gradient.  The split allocation + ``local_gather_psum`` path below remains
+the fallback (and the oracle the fused path must match bit-for-bit).
+
 Per-device traffic is O(n_local * d) — independent of m, the property
 ``benchmarks/bench_kernels.py`` records and ``tests/test_sharded.py`` checks
 against the single-device oracle (forward bit-identical, grads to 1e-6).
@@ -38,6 +45,19 @@ from repro.dist.sharding import shard_map
 
 def _model_size(mesh) -> int:
     return int(dict(mesh.shape).get("model", 1))
+
+
+def _fused_slab(mem_l) -> bool:
+    """Fused per-shard gather when the slab fits the engine's VMEM budget."""
+    from repro.kernels.fused_embed import ops as fe
+    return fe.fused_enabled() and fe.fused_supported(int(mem_l.shape[0]),
+                                                     mem_l.dtype.itemsize)
+
+
+def _slab_base(mem_l, axis_name="model") -> jax.Array:
+    """Global offset of this rank's slab (for the in-kernel ownership mask)."""
+    rank = jax.lax.axis_index(axis_name)
+    return (rank * mem_l.shape[0]).astype(jnp.int32).reshape(1)
 
 
 def _batch_axes(mesh, dp_axes, lead: int) -> tuple[str, ...]:
@@ -96,8 +116,13 @@ def sharded_hashed_lookup(memory: jax.Array, gids: jax.Array, d: int, m: int,
 
     def body(mem_l, gids_l):
         flat = gids_l.reshape(-1)
-        loc = alloc(flat, d, m, seed)
-        out = local_gather_psum(mem_l, loc)
+        if _fused_slab(mem_l):
+            from repro.kernels.fused_embed import ops as fe
+            part = fe.fused_lookup(fe.hashed_spec(kind, d, m, seed), mem_l,
+                                   flat, base=_slab_base(mem_l))
+            out = jax.lax.psum(part, "model")
+        else:
+            out = local_gather_psum(mem_l, alloc(flat, d, m, seed))
         return out.reshape(*gids_l.shape, d)
 
     fn = shard_map(body, mesh=mesh, in_specs=(P("model"), gspec),
@@ -131,8 +156,15 @@ def sharded_lma_lookup(memory: jax.Array, store_sets: jax.Array,
         flat = gids_l.reshape(-1)
         rows = local_gather_psum(sets_l, flat)       # [n, max_set] exact
         support = local_gather_psum(len_l, flat)     # [n] exact
-        loc = alc.alloc_lma_from_rows(params, rows, support, flat)
-        out = local_gather_psum(mem_l, loc)
+        if _fused_slab(mem_l):
+            from repro.kernels.fused_embed import ops as fe
+            part = fe.fused_lookup(fe.lma_spec(params), mem_l, flat,
+                                   rows[:, : params.max_set], support,
+                                   base=_slab_base(mem_l))
+            out = jax.lax.psum(part, "model")
+        else:
+            loc = alc.alloc_lma_from_rows(params, rows, support, flat)
+            out = local_gather_psum(mem_l, loc)
         return out.reshape(*gids_l.shape, params.d)
 
     fn = shard_map(

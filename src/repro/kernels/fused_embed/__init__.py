@@ -1,0 +1,9 @@
+"""Fused LMA embed engine: one Pallas pass from signature sets to (pooled)
+embeddings, with a scatter-add custom VJP.  See kernel.py for the design."""
+from repro.kernels.fused_embed.ops import (FusedSpec, fused_embed_bag,
+                                           fused_enabled, fused_lookup,
+                                           fused_supported, hashed_spec,
+                                           lma_spec)
+
+__all__ = ["FusedSpec", "fused_embed_bag", "fused_enabled", "fused_lookup",
+           "fused_supported", "hashed_spec", "lma_spec"]

@@ -1,0 +1,311 @@
+"""Pallas TPU kernel family: fused memory-pool embedding engine.
+
+One pass per batch tile, entirely in VMEM: signature sets -> minhash -> d
+locations -> gather from the memory pool M -> (optional) masked bag-pool.
+The ``[N, d]`` int32 location tensor and the ``[B, L, d]`` pre-pool tensor
+of the split path (``lma_locations`` kernel + ``jnp.take`` + masked reduce)
+never touch HBM.  This is the paper's bandwidth argument made literal: LMA
+trades hash ALU work for a pool small enough (16x compression) that M fits
+in VMEM, so the lookup is one streaming read of the batch inputs.
+
+The same engine serves all compressed schemes: ``hashed_elem`` /
+``hashed_row`` are degenerate no-minhash variants (locations come straight
+from the value id), and LMA's very-sparse fallback (support < min_support
+-> A_h) runs inside the tile so the dispatch is branch-free.
+
+Slab mode: the memory ref may be a 'model'-axis shard of M.  ``base_ref``
+holds the slab's global offset and out-of-slab locations gather 0, which is
+exactly the mask-local-gather of ``repro/dist/sharded_memory.py`` — a psum
+over 'model' outside the kernel assembles complete embeddings bit-identical
+to the single-device oracle.  Single-device callers pass base=0 (the mask
+is then all-true and the select is the identity).
+
+Backward is a Pallas scatter-add kernel into the memory gradient that
+*recomputes* locations in the tile (pure ALU) instead of saving the
+``[N, d]`` tensor — one full forward-sized HBM round-trip saved each way.
+
+The hash math is shared bit-for-bit with ``kernels/lma_locations`` (same
+murmur3-style primitives); the minhash loop here is chunk-vectorized
+([bB, S, chunk] per step) rather than one hash per fori_loop step, which is
+also what makes the fused engine faster in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.lma_locations.kernel import (_GOLDEN, _M1, _hash_u32, _u,
+                                                fmix32)
+
+_PAD = 0xFFFFFFFF
+_CHUNK = 16      # minhash seeds hashed per vectorized step ([bB, S, chunk])
+
+# location-input ref count per scheme: lma needs (sets, gids, support,
+# minhash seeds, rehash seeds, fallback seeds); hashed only (gids, seeds)
+N_LOC_INPUTS = {"lma": 6, "hashed_elem": 2, "hashed_row": 2}
+
+
+# --------------------------------------------------------------- locations
+
+def _elem_locations(gids, seeds, *, d: int, m: int):
+    """alloc_hashed_elem inside the tile: loc[n, i] = hash_pair(v, i) % m."""
+    v = gids.astype(jnp.uint32)[:, None]
+    i = jax.lax.broadcasted_iota(jnp.int32, (gids.shape[0], d), 1)
+    hx = _hash_u32(v, seeds[None, :])
+    h = _hash_u32(i.astype(jnp.uint32) ^ hx, seeds[None, :] ^ _u(_GOLDEN))
+    return (h % _u(m)).astype(jnp.int32)
+
+
+def _row_locations(gids, seeds, *, d: int, m: int):
+    """alloc_hashed_row inside the tile: whole rows collide."""
+    n_rows = max(m // d, 1)
+    row = _hash_u32(gids.astype(jnp.uint32), seeds[0]) % _u(n_rows)
+    i = jax.lax.broadcasted_iota(jnp.int32, (gids.shape[0], d), 1)
+    return row.astype(jnp.int32)[:, None] * d + i
+
+
+def _minhash_tile(sets, mask, seeds):
+    """[N, S] sets -> [N, R] minhash signatures, chunk-vectorized over R."""
+    R = seeds.shape[0]
+    sigs = []
+    for c0 in range(0, R, _CHUNK):
+        sc = seeds[c0:min(c0 + _CHUNK, R)]
+        h = _hash_u32(sets[:, :, None], sc[None, None, :])   # [N, S, c]
+        h = jnp.where(mask[:, :, None], h, _u(_PAD))
+        sigs.append(jnp.min(h, axis=1))
+    return sigs[0] if len(sigs) == 1 else jnp.concatenate(sigs, axis=1)
+
+
+def _lma_locations(sets, gids, support, seeds, rehash, fb_seeds, *,
+                   d: int, n_h: int, m: int, min_support: int,
+                   independent: bool):
+    """Full A_L with the very-sparse A_h fallback, bit-identical to
+    ``alloc_lma_from_rows`` (tests/test_fused_embed.py proves it)."""
+    N = sets.shape[0]
+    mask = sets != _u(_PAD)
+    sigs = _minhash_tile(sets, mask, seeds)                  # [N, R]
+    if independent:
+        grouped = sigs.reshape(N, d, n_h)
+    else:
+        idx = jnp.arange(d)[:, None] + jnp.arange(n_h)[None, :]
+        grouped = sigs[:, idx]                               # sliding windows
+    h = jnp.broadcast_to(rehash[None, :], (N, d)).astype(jnp.uint32)
+    for t in range(n_h):                                     # static unroll
+        h = (h ^ fmix32(grouped[:, :, t])) * _u(_M1) + _u(_GOLDEN)
+    loc = (fmix32(h) % _u(m)).astype(jnp.int32)
+    loc_fb = _elem_locations(gids, fb_seeds, d=d, m=m)
+    return jnp.where((support < min_support)[:, None], loc_fb, loc)
+
+
+def _tile_locations(scheme, loc_refs, *, d, n_h, m, min_support, independent):
+    """Read the location-input refs, flatten batch dims, return [N, d] int32
+    locations plus the batch block shape (bb,) or (bb, L)."""
+    if scheme == "lma":
+        sets_r, gids_r, support_r, seeds_r, rehash_r, fb_r = loc_refs
+        sets, gids, support = sets_r[...], gids_r[...], support_r[...]
+        bshape = gids.shape
+        N = math.prod(bshape)
+        loc = _lma_locations(
+            sets.reshape(N, sets.shape[-1]), gids.reshape(N),
+            support.reshape(N), seeds_r[...], rehash_r[...], fb_r[...],
+            d=d, n_h=n_h, m=m, min_support=min_support,
+            independent=independent)
+        return loc, bshape
+    gids_r, seeds_r = loc_refs
+    gids = gids_r[...]
+    bshape = gids.shape
+    fn = _elem_locations if scheme == "hashed_elem" else _row_locations
+    return fn(gids.reshape(math.prod(bshape)), seeds_r[...], d=d, m=m), bshape
+
+
+def _slab_gather(mem, loc, base):
+    """Masked slab gather: out-of-slab locations read 0 (mask-local-gather).
+
+    base=0 with a full [m] memory makes the mask all-true — the select is
+    then the identity and the result is bit-identical to jnp.take."""
+    n_local = mem.shape[0]
+    rel = loc - base
+    inb = (rel >= 0) & (rel < n_local)
+    vals = jnp.take(mem, jnp.clip(rel, 0, n_local - 1), axis=0)
+    return jnp.where(inb, vals, jnp.zeros((), mem.dtype))
+
+
+# ------------------------------------------------------------ kernel bodies
+
+def _fwd_kernel(*refs, scheme, d, n_h, m, min_support, independent, pool):
+    n_loc = N_LOC_INPUTS[scheme]
+    loc_refs = refs[:n_loc]
+    rest = refs[n_loc:]
+    if pool:
+        w_ref, base_ref, mem_ref, out_ref = rest
+    else:
+        base_ref, mem_ref, out_ref = rest
+    loc, bshape = _tile_locations(scheme, loc_refs, d=d, n_h=n_h, m=m,
+                                  min_support=min_support,
+                                  independent=independent)
+    e = _slab_gather(mem_ref[...], loc, base_ref[0])         # [N, d]
+    if pool:
+        bb, L = bshape
+        w = w_ref[...].astype(e.dtype)                       # [bb, L]
+        out_ref[...] = jnp.sum(e.reshape(bb, L, d) * w[:, :, None], axis=1)
+    else:
+        out_ref[...] = e
+
+
+def _scatter_kernel(*refs, scheme, d, n_h, m, min_support, independent, pool):
+    """dM[loc] += g (pool: += g * w), accumulated across batch tiles into the
+    revisited [m_local] output block; locations are recomputed, not loaded."""
+    n_loc = N_LOC_INPUTS[scheme]
+    loc_refs = refs[:n_loc]
+    rest = refs[n_loc:]
+    if pool:
+        w_ref, g_ref, base_ref, dmem_ref = rest
+    else:
+        g_ref, base_ref, dmem_ref = rest
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        dmem_ref[...] = jnp.zeros_like(dmem_ref)
+
+    loc, bshape = _tile_locations(scheme, loc_refs, d=d, n_h=n_h, m=m,
+                                  min_support=min_support,
+                                  independent=independent)
+    g = g_ref[...]                                           # [bb, d]
+    if pool:
+        bb, L = bshape
+        gflat = (g[:, None, :] * w_ref[...].astype(g.dtype)[:, :, None]
+                 ).reshape(bb * L, d)
+    else:
+        gflat = g
+    n_local = dmem_ref.shape[0]
+    rel = loc - base_ref[0]
+    inb = (rel >= 0) & (rel < n_local)
+    upd = jnp.where(inb, gflat.astype(dmem_ref.dtype), 0)
+    dmem_ref[...] = dmem_ref[...].at[
+        jnp.clip(rel, 0, n_local - 1).reshape(-1)].add(upd.reshape(-1))
+
+
+def _weight_grad_kernel(*refs, scheme, d, n_h, m, min_support, independent):
+    """dw[b, l] = <g[b], M[loc[b, l]]> for the bag's weight cotangent."""
+    n_loc = N_LOC_INPUTS[scheme]
+    loc_refs = refs[:n_loc]
+    g_ref, base_ref, mem_ref, dw_ref = refs[n_loc:]
+    loc, bshape = _tile_locations(scheme, loc_refs, d=d, n_h=n_h, m=m,
+                                  min_support=min_support,
+                                  independent=independent)
+    bb, L = bshape
+    e = _slab_gather(mem_ref[...], loc, base_ref[0]).reshape(bb, L, d)
+    g = g_ref[...].astype(e.dtype)                           # [bb, d]
+    dw_ref[...] = jnp.sum(e * g[:, None, :], axis=-1).astype(dw_ref.dtype)
+
+
+# ------------------------------------------------------------- call builders
+
+def _loc_specs(scheme, loc_inputs, bb, pool):
+    """BlockSpecs for the location inputs (batch-tiled data, broadcast seeds)."""
+    if scheme == "lma":
+        sets, gids, support = loc_inputs[:3]
+        if pool:
+            L, S = sets.shape[1], sets.shape[2]
+            data = [pl.BlockSpec((bb, L, S), lambda i: (i, 0, 0)),
+                    pl.BlockSpec((bb, L), lambda i: (i, 0)),
+                    pl.BlockSpec((bb, L), lambda i: (i, 0))]
+        else:
+            data = [pl.BlockSpec((bb, sets.shape[1]), lambda i: (i, 0)),
+                    pl.BlockSpec((bb,), lambda i: (i,)),
+                    pl.BlockSpec((bb,), lambda i: (i,))]
+        seeds = [pl.BlockSpec((a.shape[0],), lambda i: (0,))
+                 for a in loc_inputs[3:]]
+        return data + seeds
+    gids, seeds = loc_inputs
+    gspec = (pl.BlockSpec((bb, gids.shape[1]), lambda i: (i, 0)) if pool
+             else pl.BlockSpec((bb,), lambda i: (i,)))
+    return [gspec, pl.BlockSpec((seeds.shape[0],), lambda i: (0,))]
+
+
+def _static(scheme, d, n_h, m, min_support, independent):
+    return dict(scheme=scheme, d=d, n_h=n_h, m=m, min_support=min_support,
+                independent=independent)
+
+
+def fused_lookup_fwd_pallas(scheme, memory, loc_inputs, base, weights=None, *,
+                            d, n_h=4, m, min_support=2, independent=True,
+                            block_b=256, interpret=False):
+    """-> [B, d] embeddings (weights=None) or pooled bags (weights [B, L])."""
+    pool = weights is not None
+    B = loc_inputs[1].shape[0] if scheme == "lma" else loc_inputs[0].shape[0]
+    bb = min(block_b, B)
+    assert B % bb == 0, (B, bb)
+    kern = functools.partial(_fwd_kernel, pool=pool,
+                             **_static(scheme, d, n_h, m, min_support,
+                                       independent))
+    in_specs = _loc_specs(scheme, loc_inputs, bb, pool)
+    args = list(loc_inputs)
+    if pool:
+        in_specs.append(pl.BlockSpec((bb, weights.shape[1]),
+                                     lambda i: (i, 0)))
+        args.append(weights)
+    in_specs += [pl.BlockSpec((1,), lambda i: (0,)),
+                 pl.BlockSpec((memory.shape[0],), lambda i: (0,))]
+    args += [base, memory]
+    return pl.pallas_call(
+        kern, grid=(B // bb,), in_specs=in_specs,
+        out_specs=pl.BlockSpec((bb, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, d), memory.dtype),
+        interpret=interpret,
+    )(*args)
+
+
+def fused_scatter_add_pallas(scheme, g, loc_inputs, base, m_local, dtype,
+                             weights=None, *, d, n_h=4, m, min_support=2,
+                             independent=True, block_b=256, interpret=False):
+    """Cotangent g [B, d] -> dM [m_local], locations recomputed per tile."""
+    pool = weights is not None
+    B = g.shape[0]
+    bb = min(block_b, B)
+    assert B % bb == 0, (B, bb)
+    kern = functools.partial(_scatter_kernel, pool=pool,
+                             **_static(scheme, d, n_h, m, min_support,
+                                       independent))
+    in_specs = _loc_specs(scheme, loc_inputs, bb, pool)
+    args = list(loc_inputs)
+    if pool:
+        in_specs.append(pl.BlockSpec((bb, weights.shape[1]),
+                                     lambda i: (i, 0)))
+        args.append(weights)
+    in_specs += [pl.BlockSpec((bb, d), lambda i: (i, 0)),
+                 pl.BlockSpec((1,), lambda i: (0,))]
+    args += [g, base]
+    return pl.pallas_call(
+        kern, grid=(B // bb,), in_specs=in_specs,
+        out_specs=pl.BlockSpec((m_local,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((m_local,), dtype),
+        interpret=interpret,
+    )(*args)
+
+
+def fused_weight_grad_pallas(scheme, memory, g, loc_inputs, base, L, *,
+                             d, n_h=4, m, min_support=2, independent=True,
+                             block_b=256, interpret=False):
+    """Cotangent g [B, d] -> dweights [B, L] (bag pooling only)."""
+    B = g.shape[0]
+    bb = min(block_b, B)
+    assert B % bb == 0, (B, bb)
+    kern = functools.partial(_weight_grad_kernel,
+                             **_static(scheme, d, n_h, m, min_support,
+                                       independent))
+    in_specs = _loc_specs(scheme, loc_inputs, bb, pool=True)
+    in_specs += [pl.BlockSpec((bb, d), lambda i: (i, 0)),
+                 pl.BlockSpec((1,), lambda i: (0,)),
+                 pl.BlockSpec((memory.shape[0],), lambda i: (0,))]
+    args = list(loc_inputs) + [g, base, memory]
+    return pl.pallas_call(
+        kern, grid=(B // bb,), in_specs=in_specs,
+        out_specs=pl.BlockSpec((bb, L), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, L), g.dtype),
+        interpret=interpret,
+    )(*args)

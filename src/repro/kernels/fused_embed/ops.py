@@ -1,0 +1,271 @@
+"""Jit'd public wrappers for the fused embed engine, with a scatter-add VJP.
+
+``fused_lookup``  : signature sets / value ids -> [N, d] embeddings.
+``fused_embed_bag``: multi-hot [B, L] inputs -> [B, d] weighted-sum bags,
+                     the [B, L, d] pre-pool tensor never materialized.
+
+Both differentiate through a custom VJP whose backward is a Pallas
+scatter-add kernel into the memory gradient; locations are *recomputed* in
+the backward tile instead of saved, so training steps skip one full
+forward-sized HBM round-trip each way.  Non-memory inputs (sets, ids,
+support) are integer-typed and get float0 cotangents; bag weights get the
+exact ``<g, M[loc]>`` gradient from a third kernel.
+
+Slab mode (``base`` != 0, memory = a 'model'-axis shard of M): out-of-slab
+locations contribute 0 forward and scatter nothing backward — exactly the
+mask-local-gather contract of ``repro/dist/sharded_memory.py``.
+
+Dispatch: Pallas on TPU, interpret mode elsewhere.  ``fused_supported``
+gates on the slab fitting the VMEM working-set budget; callers fall back to
+the split ``locations + jnp.take`` path when it returns False.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.allocation import LMAParams
+from repro.core.hashing import seed_stream
+from repro.core.signatures import DenseSignatureStore
+from repro.kernels.fused_embed.kernel import (fused_lookup_fwd_pallas,
+                                              fused_scatter_add_pallas,
+                                              fused_weight_grad_pallas)
+
+# runtime kill-switch (tests toggle it; REPRO_FUSED_EMBED=0 disables)
+ENABLED = os.environ.get("REPRO_FUSED_EMBED", "1").lower() not in (
+    "0", "false", "off", "no")
+
+# slab bytes that may sit resident in VMEM alongside the batch tiles.  The
+# default tracks the smallest real TPU VMEM (~16 MiB/core): the paper-scale
+# pool (m=2^21 f32 = 8 MiB) fits with head-room for the tile working set,
+# and anything larger falls back to the split path instead of failing
+# Mosaic VMEM allocation at compile time.
+_MAX_MEM_MB = int(os.environ.get("REPRO_FUSED_MAX_MEM_MB", "16"))
+_TILE_RESERVE = 4 * 2**20   # VMEM kept free for the batch-tile working set
+
+_BLOCK_B = 256        # flat values per tile
+_BLOCK_ELEMS = 4096   # bag: bb chosen so bb * L <= this
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedSpec:
+    """Static (hashable) description of one fused lookup family."""
+
+    scheme: str            # lma | hashed_elem | hashed_row
+    d: int
+    m: int
+    seed: int
+    n_h: int = 4
+    max_set: int = 64
+    min_support: int = 2
+    independent: bool = True
+
+    @property
+    def n_raw_hashes(self) -> int:
+        return self.d * self.n_h if self.independent else self.d + self.n_h - 1
+
+
+def lma_spec(p: LMAParams) -> FusedSpec:
+    return FusedSpec("lma", p.d, p.m, p.seed, p.n_h, p.max_set,
+                     p.min_support, p.independent_hashes)
+
+
+def hashed_spec(kind: str, d: int, m: int, seed: int) -> FusedSpec:
+    assert kind in ("hashed_elem", "hashed_row"), kind
+    return FusedSpec(kind, d, m, seed)
+
+
+def fused_enabled() -> bool:
+    return ENABLED
+
+
+def fused_supported(m_local: int, itemsize: int = 4) -> bool:
+    """Does an [m_local] slab fit the fused engine's VMEM budget, with the
+    batch-tile working set (sets/locations/output blocks) reserved on top?"""
+    return m_local * itemsize + _TILE_RESERVE <= _MAX_MEM_MB * 2**20
+
+
+def _default_interpret(interpret):
+    return jax.default_backend() != "tpu" if interpret is None else interpret
+
+
+def _loc_inputs(spec: FusedSpec, sets, gids, support):
+    """Assemble the kernel's location-input arrays (seed streams included)."""
+    if spec.scheme == "lma":
+        return (sets, gids,
+                support.astype(jnp.int32),
+                seed_stream(spec.seed, spec.n_raw_hashes),
+                seed_stream(spec.seed ^ 0x7F4A7C15, spec.d),
+                seed_stream(spec.seed ^ 0x1234567, spec.d))
+    if spec.scheme == "hashed_elem":
+        return (gids, seed_stream(spec.seed, spec.d))
+    return (gids, seed_stream(spec.seed, 1))
+
+
+def _kern_kwargs(spec: FusedSpec, interpret: bool, block_b: int) -> dict:
+    return dict(d=spec.d, n_h=spec.n_h, m=spec.m,
+                min_support=spec.min_support, independent=spec.independent,
+                block_b=block_b, interpret=interpret)
+
+
+def _pad_batch(bb: int, *arrays):
+    """Pad dim 0 up to a multiple of ``bb``; PAD-fill uint32 set arrays so
+    padded rows hash as empty sets, 0-fill everything else."""
+    B = arrays[0].shape[0]
+    b_pad = -(-B // bb) * bb
+    if b_pad == B:
+        return arrays
+    out = []
+    for a in arrays:
+        fill = DenseSignatureStore.PAD if a.dtype == jnp.uint32 else 0
+        out.append(jnp.pad(a, ((0, b_pad - B),) + ((0, 0),) * (a.ndim - 1),
+                           constant_values=fill))
+    return tuple(out)
+
+
+def _f0(x):
+    """float0 cotangent for an integer-typed primal."""
+    return np.zeros(x.shape, dtype=jax.dtypes.float0)
+
+
+# ----------------------------------------------------------- flat lookup VJP
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _lookup(spec, interpret, memory, sets, gids, support, base):
+    B = gids.shape[0]
+    bb = min(_BLOCK_B, max(B, 1))
+    sets_p, gids_p, support_p = _pad_batch(bb, sets, gids, support)
+    out = fused_lookup_fwd_pallas(
+        spec.scheme, memory, _loc_inputs(spec, sets_p, gids_p, support_p),
+        base, **_kern_kwargs(spec, interpret, bb))
+    return out[:B]
+
+
+def _lookup_fwd(spec, interpret, memory, sets, gids, support, base):
+    out = _lookup(spec, interpret, memory, sets, gids, support, base)
+    # memory rides along only for its (shape, dtype); it is a live parameter,
+    # so this saves no extra buffer
+    return out, (sets, gids, support, base, memory)
+
+
+def _lookup_bwd(spec, interpret, res, g):
+    sets, gids, support, base, memory = res
+    m_local, mdtype = memory.shape[0], memory.dtype
+    B = gids.shape[0]
+    bb = min(_BLOCK_B, max(B, 1))
+    sets_p, gids_p, support_p, g_p = _pad_batch(bb, sets, gids, support, g)
+    dmem = fused_scatter_add_pallas(
+        spec.scheme, g_p.astype(mdtype),
+        _loc_inputs(spec, sets_p, gids_p, support_p), base, m_local, mdtype,
+        **_kern_kwargs(spec, interpret, bb))
+    return dmem, _f0(sets), _f0(gids), _f0(support), _f0(base)
+
+
+_lookup.defvjp(_lookup_fwd, _lookup_bwd)
+
+
+# ------------------------------------------------------------ bag lookup VJP
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _bag(spec, interpret, memory, sets, gids, support, weights, base):
+    B, L = gids.shape
+    bb = _bag_block(B, L)
+    sets_p, gids_p, support_p, w_p = _pad_batch(bb, sets, gids, support,
+                                                weights)
+    out = fused_lookup_fwd_pallas(
+        spec.scheme, memory, _loc_inputs(spec, sets_p, gids_p, support_p),
+        base, weights=w_p, **_kern_kwargs(spec, interpret, bb))
+    return out[:B]
+
+
+def _bag_fwd(spec, interpret, memory, sets, gids, support, weights, base):
+    out = _bag(spec, interpret, memory, sets, gids, support, weights, base)
+    return out, (memory, sets, gids, support, weights, base)
+
+
+def _bag_bwd(spec, interpret, res, g):
+    memory, sets, gids, support, weights, base = res
+    B, L = gids.shape
+    bb = _bag_block(B, L)
+    sets_p, gids_p, support_p, w_p, g_p = _pad_batch(
+        bb, sets, gids, support, weights, g)
+    loc_inputs = _loc_inputs(spec, sets_p, gids_p, support_p)
+    kw = _kern_kwargs(spec, interpret, bb)
+    dmem = fused_scatter_add_pallas(
+        spec.scheme, g_p.astype(memory.dtype), loc_inputs, base,
+        memory.shape[0], memory.dtype, weights=w_p, **kw)
+    dw = fused_weight_grad_pallas(
+        spec.scheme, memory, g_p, loc_inputs, base, L, **kw)[:B]
+    return (dmem, _f0(sets), _f0(gids), _f0(support),
+            dw.astype(weights.dtype), _f0(base))
+
+
+_bag.defvjp(_bag_fwd, _bag_bwd)
+
+
+def _bag_block(B: int, L: int) -> int:
+    return min(max(B, 1), max(_BLOCK_ELEMS // max(L, 1), 1))
+
+
+# ------------------------------------------------------------- public entry
+
+@partial(jax.jit, static_argnums=(0, 6))
+def _lookup_jit(spec, memory, sets, gids, support, base, interpret):
+    return _lookup(spec, interpret, memory, sets, gids, support, base)
+
+
+@partial(jax.jit, static_argnums=(0, 7))
+def _bag_jit(spec, memory, sets, gids, support, weights, base, interpret):
+    return _bag(spec, interpret, memory, sets, gids, support, weights, base)
+
+
+def _dummy_loc_state(spec, gids):
+    """hashed_* schemes carry no signature sets; feed typed placeholders so
+    the VJP arity stays uniform (they get float0 cotangents regardless)."""
+    if spec.scheme == "lma":
+        raise ValueError("lma lookups need sets + support")
+    return (jnp.zeros(gids.shape + (1,), jnp.uint32),
+            jnp.zeros(gids.shape, jnp.int32))
+
+
+def fused_lookup(spec: FusedSpec, memory: jax.Array, gids: jax.Array,
+                 sets: jax.Array | None = None,
+                 support: jax.Array | None = None,
+                 base: jax.Array | None = None,
+                 interpret: bool | None = None) -> jax.Array:
+    """One fused pass: gids [N] (+ sets [N, S], support [N] for lma) -> [N, d].
+
+    ``memory`` is the full [m] pool, or an [m / n_model] slab with ``base``
+    its global offset (out-of-slab positions return 0 for the psum)."""
+    interpret = _default_interpret(interpret)
+    gids = gids.astype(jnp.int32)
+    if base is None:
+        base = jnp.zeros((1,), jnp.int32)
+    if sets is None:
+        sets, support = _dummy_loc_state(spec, gids)
+    return _lookup_jit(spec, memory, sets.astype(jnp.uint32), gids,
+                       support.astype(jnp.int32), base, interpret)
+
+
+def fused_embed_bag(spec: FusedSpec, memory: jax.Array, gids: jax.Array,
+                    weights: jax.Array,
+                    sets: jax.Array | None = None,
+                    support: jax.Array | None = None,
+                    base: jax.Array | None = None,
+                    interpret: bool | None = None) -> jax.Array:
+    """gids [B, L], weights [B, L] (+ sets [B, L, S], support [B, L] for lma)
+    -> [B, d] weighted-sum bags, pooled inside the kernel tile."""
+    interpret = _default_interpret(interpret)
+    gids = gids.astype(jnp.int32)
+    if base is None:
+        base = jnp.zeros((1,), jnp.int32)
+    if sets is None:
+        sets, support = _dummy_loc_state(spec, gids)
+    return _bag_jit(spec, memory, sets.astype(jnp.uint32), gids,
+                    support.astype(jnp.int32), weights, base, interpret)

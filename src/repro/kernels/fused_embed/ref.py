@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the fused embed engine: the split path it replaces.
+
+Composes the existing allocation functions + ``jnp.take`` (+ masked reduce
+for bags) so tests can assert the fused kernel is bit-identical forward and
+1e-6-close through the VJP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import allocation as alc
+from repro.core.allocation import LMAParams
+
+
+def _lma_params(spec) -> LMAParams:
+    return LMAParams(d=spec.d, m=spec.m, n_h=spec.n_h, seed=spec.seed,
+                     max_set=spec.max_set, min_support=spec.min_support,
+                     independent_hashes=spec.independent)
+
+
+def locations_ref(spec, gids, sets=None, support=None) -> jax.Array:
+    """[N] ids (+ lma set rows) -> [N, d] locations via the jnp allocators."""
+    if spec.scheme == "hashed_elem":
+        return alc.alloc_hashed_elem(gids, spec.d, spec.m, spec.seed)
+    if spec.scheme == "hashed_row":
+        return alc.alloc_hashed_row(gids, spec.d, spec.m, spec.seed)
+    return alc.alloc_lma_from_rows(_lma_params(spec), sets, support, gids)
+
+
+def fused_lookup_ref(spec, memory, gids, sets=None, support=None) -> jax.Array:
+    """Split-path oracle: locations tensor materialized, then jnp.take."""
+    return jnp.take(memory, locations_ref(spec, gids, sets, support), axis=0)
+
+
+def fused_embed_bag_ref(spec, memory, gids, weights, sets=None,
+                        support=None) -> jax.Array:
+    """Split-path bag oracle: [B, L, d] gathered, then the masked reduce."""
+    B, L = gids.shape
+    flat_sets = None if sets is None else sets.reshape(B * L, -1)
+    flat_sup = None if support is None else support.reshape(B * L)
+    e = fused_lookup_ref(spec, memory, gids.reshape(B * L), flat_sets,
+                         flat_sup).reshape(B, L, spec.d)
+    return jnp.sum(e * weights.astype(e.dtype)[:, :, None], axis=1)

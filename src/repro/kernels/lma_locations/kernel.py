@@ -9,8 +9,11 @@ grid, keep the [bB, max_set] set tile and the [bB, R] signature accumulator in
 VMEM, iterate hash seeds with fori_loop (seeds live in SMEM via scalar
 prefetch-like small VMEM block).
 
-The gather from M itself stays an XLA gather (TPU's native sparse-access
-engine); ``ops.lma_gather`` fuses kernel locations + jnp.take.
+This kernel emits the [B, d] location tensor to HBM for a separate gather
+(``ops.lma_gather`` = kernel locations + jnp.take) — the *split* lookup.
+The production path is ``repro/kernels/fused_embed``, which keeps the
+locations in VMEM and gathers from M (and bag-pools) in the same pass; this
+kernel remains the location oracle and the standalone-locations entry point.
 """
 from __future__ import annotations
 

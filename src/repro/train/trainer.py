@@ -18,6 +18,7 @@ Fault-tolerance posture (1000+-node design, exercised at container scale):
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import signal
 import time
@@ -65,7 +66,8 @@ class Trainer:
         self.mgr = (CheckpointManager(cfg.ckpt_dir, cfg.keep)
                     if cfg.ckpt_dir else None)
         self._preempted = False
-        self._step_times: list[float] = []
+        self._step_times: collections.deque[float] = collections.deque(
+            maxlen=256)
         self.straggler_steps = 0
 
         def _train_step(params, opt_state, batch):
@@ -144,9 +146,7 @@ class Trainer:
                 "straggler_steps": self.straggler_steps}
 
     def _track_straggler(self, dt: float):
-        self._step_times.append(dt)
-        if len(self._step_times) > 256:
-            self._step_times.pop(0)
+        self._step_times.append(dt)   # deque(maxlen=256): O(1) ring buffer
         if len(self._step_times) >= 16:
             med = float(np.median(self._step_times))
             if dt > self.cfg.straggler_factor * med:

@@ -1,0 +1,53 @@
+"""Tier-1 smoke for benchmarks/check_regression.py: the compare logic and
+the committed BENCH_kernels.json baseline it gates on."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.check_regression import BASELINE, compare, load_rows
+
+
+def _rows(**kernels):
+    return {("k_" + name, "shape"): us for name, us in kernels.items()}
+
+
+def test_within_ratio_passes():
+    base = _rows(a=100.0, b=50.0)
+    fresh = _rows(a=120.0, b=64.9)          # 1.2x / 1.298x
+    assert compare(base, fresh, 1.3) == []
+
+
+def test_regression_flagged():
+    base = _rows(a=100.0, b=50.0)
+    fresh = _rows(a=131.0, b=50.0)          # 1.31x > 1.3x
+    failures = compare(base, fresh, 1.3)
+    assert len(failures) == 1
+    assert "k_a" in failures[0] and "1.31x" in failures[0]
+
+
+def test_missing_row_flagged_new_row_allowed():
+    base = _rows(a=100.0)
+    fresh = _rows(b=10.0)                   # a vanished, b is new
+    failures = compare(base, fresh, 1.3)
+    assert len(failures) == 1
+    assert "missing" in failures[0]
+
+
+def test_committed_baseline_has_fused_rows():
+    """The acceptance artifact: fused rows (single-device and sharded) are in
+    the committed ledger, and the fused single-device lookup beats the split
+    path at the bench shape."""
+    rows = load_rows(BASELINE)
+    fused = rows[("lma_fused_lookup", "4096x32@m=2^21")]
+    split = rows[("lma_split_lookup", "4096x32@m=2^21")]
+    assert fused < split, (fused, split)
+    assert ("sharded_lma_lookup_fused", "4096xd32@m=2^21/8dev") in rows
+    with open(BASELINE) as f:
+        doc = json.load(f)
+    hbm = doc["modeled_hbm_bytes_per_lookup"]
+    # fused removes at least the [N, d] int32 location-tensor traffic
+    assert hbm["split"] - hbm["fused"] >= hbm["location_tensor_bytes"]

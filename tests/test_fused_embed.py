@@ -1,0 +1,240 @@
+"""Fused embed engine vs the split path it replaces.
+
+Forward must be BIT-identical to ``lma_locations``-style allocation +
+``jnp.take`` (interpret mode, ragged batches, all three schemes); the
+scatter-add custom VJP must match the jnp.take transpose to 1e-6, including
+through ``embed_bag`` sum/mean modes.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.allocation import LMAParams
+from repro.core.memory import init_memory, lookup
+from repro.core.signatures import (DenseSignatureStore, densify_store,
+                                   synthetic_dense_store,
+                                   synthetic_signature_store)
+from repro.kernels.fused_embed import ops as fe
+from repro.kernels.fused_embed import ref as fref
+from repro.kernels.lma_locations.ops import lma_locations
+
+N_VALUES = 512
+M, D = 8192, 16
+
+
+def _fixture(seed=0, max_set=16):
+    rng = np.random.default_rng(seed)
+    mem = init_memory(jax.random.key(seed), M, "normal", 0.1)
+    p = LMAParams(d=D, m=M, n_h=4, max_set=max_set, seed=7)
+    store = synthetic_dense_store(N_VALUES, 8, max_set=max_set, seed=1)
+    return rng, mem, p, store
+
+
+def _lma_inputs(p, store, gids):
+    rows = jnp.take(store.sets, gids, axis=0)[:, : p.max_set]
+    support = jnp.take(store.lengths, gids, axis=0)
+    return rows, support
+
+
+# ------------------------------------------------------------------ forward
+
+@pytest.mark.parametrize("B", [8, 256, 300, 517])
+def test_lma_fused_bit_identical_to_split(B):
+    """Fused pass == lma_locations kernel + jnp.take, bit for bit, for every
+    row whose support clears min_support (ragged B exercises the padding)."""
+    rng, mem, p, store = _fixture(B)
+    gids = jnp.asarray(rng.integers(0, N_VALUES, (B,), np.int32))
+    rows, support = _lma_inputs(p, store, gids)
+    spec = fe.lma_spec(p)
+    got = np.asarray(fe.fused_lookup(spec, mem, gids, rows, support))
+    # split path: Pallas locations kernel -> HBM -> separate gather
+    split = np.asarray(jnp.take(mem, lma_locations(p, rows, True), axis=0))
+    dense = (np.asarray(support) >= p.min_support)
+    np.testing.assert_array_equal(got[dense], split[dense])
+    # and the full jnp oracle (incl. the very-sparse A_h fallback rows)
+    want = np.asarray(fref.fused_lookup_ref(spec, mem, gids, rows, support))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("scheme", ["hashed_elem", "hashed_row"])
+@pytest.mark.parametrize("B", [64, 300])
+def test_hashed_fused_bit_identical(scheme, B):
+    """The degenerate no-minhash variants share the engine."""
+    rng, mem, _, _ = _fixture(B)
+    gids = jnp.asarray(rng.integers(0, N_VALUES, (B,), np.int32))
+    spec = fe.hashed_spec(scheme, D, M, 3)
+    got = np.asarray(fe.fused_lookup(spec, mem, gids))
+    want = np.asarray(fref.fused_lookup_ref(spec, mem, gids))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_lma_sparse_fallback_rows_match_oracle():
+    """Rows with |D_v| < min_support must take the A_h fallback inside the
+    kernel, bit-identical to alloc_lma's jnp fallback."""
+    rng, mem, _, _ = _fixture(3)
+    p = LMAParams(d=D, m=M, n_h=2, max_set=16, seed=7, min_support=4)
+    # CSR store with planted short sets, then densified
+    csr = synthetic_signature_store(64, 4, samples_per_value=2, seed=2)
+    store = densify_store(csr, 16)
+    gids = jnp.asarray(rng.integers(0, 64, (40,), np.int32))
+    rows, support = _lma_inputs(p, store, gids)
+    assert (np.asarray(support) < p.min_support).all()
+    spec = fe.lma_spec(p)
+    got = np.asarray(fe.fused_lookup(spec, mem, gids, rows, support))
+    want = np.asarray(fref.fused_lookup_ref(spec, mem, gids, rows, support))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_slab_mode_psum_reconstructs_oracle():
+    """Four slabs with base offsets, summed == single-pool gather (the
+    sharded mask-local-gather contract)."""
+    rng, mem, p, store = _fixture(5)
+    gids = jnp.asarray(rng.integers(0, N_VALUES, (96,), np.int32))
+    rows, support = _lma_inputs(p, store, gids)
+    spec = fe.lma_spec(p)
+    n_local = M // 4
+    parts = [
+        fe.fused_lookup(spec, mem[r * n_local:(r + 1) * n_local], gids, rows,
+                        support, base=jnp.asarray([r * n_local], jnp.int32))
+        for r in range(4)
+    ]
+    want = fref.fused_lookup_ref(spec, mem, gids, rows, support)
+    np.testing.assert_array_equal(np.asarray(sum(parts)), np.asarray(want))
+
+
+# ----------------------------------------------------------------- gradient
+
+@pytest.mark.parametrize("scheme", ["lma", "hashed_elem", "hashed_row"])
+def test_scatter_add_vjp_matches_take_transpose(scheme):
+    rng, mem, p, store = _fixture(11)
+    gids = jnp.asarray(rng.integers(0, N_VALUES, (300,), np.int32))
+    spec = (fe.lma_spec(p) if scheme == "lma"
+            else fe.hashed_spec(scheme, D, M, 3))
+    args = _lma_inputs(p, store, gids) if scheme == "lma" else ()
+    cot = jnp.asarray(rng.normal(0, 1, (300, D)).astype(np.float32))
+    g_fused = jax.grad(
+        lambda mm: jnp.vdot(fe.fused_lookup(spec, mm, gids, *args), cot))(mem)
+    g_split = jax.grad(
+        lambda mm: jnp.vdot(fref.fused_lookup_ref(spec, mm, gids, *args),
+                            cot))(mem)
+    np.testing.assert_allclose(np.asarray(g_fused), np.asarray(g_split),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_bag_vjp_memory_and_weight_grads():
+    """Pooled bags: dM (scatter of g*w) and dw (<g, M[loc]>) both match the
+    materialized [B, L, d] oracle."""
+    rng, mem, p, store = _fixture(13)
+    B, L = 24, 10
+    gids = jnp.asarray(rng.integers(0, N_VALUES, (B, L), np.int32))
+    rows, support = _lma_inputs(p, store, gids.reshape(-1))
+    rows, support = rows.reshape(B, L, -1), support.reshape(B, L)
+    w = jnp.asarray(rng.random((B, L)).astype(np.float32))
+    spec = fe.lma_spec(p)
+    out = fe.fused_embed_bag(spec, mem, gids, w, rows, support)
+    want = fref.fused_embed_bag_ref(spec, mem, gids, w, rows, support)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+    cot = jnp.asarray(rng.normal(0, 1, (B, D)).astype(np.float32))
+    gm_f, gw_f = jax.grad(
+        lambda mm, ww: jnp.vdot(
+            fe.fused_embed_bag(spec, mm, gids, ww, rows, support), cot),
+        argnums=(0, 1))(mem, w)
+    gm_s, gw_s = jax.grad(
+        lambda mm, ww: jnp.vdot(
+            fref.fused_embed_bag_ref(spec, mm, gids, ww, rows, support), cot),
+        argnums=(0, 1))(mem, w)
+    np.testing.assert_allclose(np.asarray(gm_f), np.asarray(gm_s),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(gw_f), np.asarray(gw_s),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------- through core.embedding
+
+def _embed_cfg(kind):
+    from repro.core.embedding import EmbeddingConfig
+    lma = LMAParams(d=D, m=M, n_h=2, max_set=16) if kind == "lma" else None
+    return EmbeddingConfig(kind=kind, vocab_sizes=(97, 131), dim=D,
+                           budget=M, lma=lma)
+
+
+@pytest.mark.parametrize("kind", ["lma", "hashed_elem", "hashed_row"])
+def test_embed_dispatch_bit_identical_to_legacy(kind):
+    """core.embedding.embed with the engine enabled == engine disabled."""
+    from repro.core import embedding as emb
+    cfg = _embed_cfg(kind)
+    params = emb.init_embedding(jax.random.key(0), cfg)
+    bufs = {}
+    if kind == "lma":
+        store = synthetic_dense_store(cfg.total_vocab, 8, max_set=16, seed=1)
+        bufs = emb.make_buffers(cfg, store)
+    rng = np.random.default_rng(17)
+    ids = jnp.asarray(rng.integers(0, 97, (33,), np.int32))
+    assert emb._use_fused(cfg, params)
+    got = np.asarray(emb.embed(cfg, params, bufs, 0, ids))
+    old = fe.ENABLED
+    fe.ENABLED = False
+    try:
+        want = np.asarray(emb.embed(cfg, params, bufs, 0, ids))
+    finally:
+        fe.ENABLED = old
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("kind", ["lma", "hashed_elem"])
+@pytest.mark.parametrize("mode", ["sum", "mean"])
+def test_embed_bag_grads_match_legacy(kind, mode):
+    """embed_bag fused pooling: forward AND memory grads track the legacy
+    gather + masked-reduce path to 1e-6 in both pooling modes."""
+    from repro.core import embedding as emb
+    cfg = _embed_cfg(kind)
+    params = emb.init_embedding(jax.random.key(1), cfg)
+    bufs = {}
+    if kind == "lma":
+        store = synthetic_dense_store(cfg.total_vocab, 8, max_set=16, seed=1)
+        bufs = emb.make_buffers(cfg, store)
+    rng = np.random.default_rng(23)
+    ids = jnp.asarray(rng.integers(0, 97, (12, 7), np.int32))
+    mask = jnp.asarray(rng.random((12, 7)) < 0.6)
+
+    def loss(p):
+        return jnp.sum(emb.embed_bag(cfg, p, bufs, 0, ids, mask, mode) ** 2)
+
+    out_f, g_f = jax.value_and_grad(loss)(params)
+    old = fe.ENABLED
+    fe.ENABLED = False
+    try:
+        out_s, g_s = jax.value_and_grad(loss)(params)
+    finally:
+        fe.ENABLED = old
+    np.testing.assert_allclose(float(out_f), float(out_s), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(g_f["memory"]),
+                               np.asarray(g_s["memory"]),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_csr_store_fused_path_matches_dense():
+    """The CSR D' store (mask -> PAD conversion) feeds the engine the same
+    rows the dense store does."""
+    from repro.core import embedding as emb
+    cfg = _embed_cfg("lma")
+    params = emb.init_embedding(jax.random.key(2), cfg)
+    csr = synthetic_signature_store(cfg.total_vocab, 8, samples_per_value=12,
+                                    seed=4)
+    bufs_csr = emb.make_buffers(cfg, csr)
+    bufs_dense = emb.make_buffers(cfg, densify_store(csr, 16))
+    rng = np.random.default_rng(29)
+    ids = jnp.asarray(rng.integers(0, 97, (21,), np.int32))
+    a = np.asarray(emb.embed(cfg, params, bufs_csr, 0, ids))
+    b = np.asarray(emb.embed(cfg, params, bufs_dense, 0, ids))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_fused_supported_gates_on_pool_bytes():
+    assert fe.fused_supported(1 << 21, 4)            # the bench shape: 8 MiB
+    assert not fe.fused_supported(1 << 28, 4)        # 1 GiB pool: fall back

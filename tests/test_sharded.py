@@ -99,6 +99,44 @@ with use_mesh(mesh3):
 np.testing.assert_array_equal(np.asarray(got3), np.asarray(want))
 print("multi-pod OK")
 
+# ---- fused per-shard gather: the default body must actually run the fused
+# slab kernel (slab fits VMEM budget), and flipping to the legacy split
+# (alloc + local_gather_psum) path must not change a single bit — both equal
+# the single-device oracle computed above
+import repro.kernels.fused_embed.ops as feops
+from repro.dist.sharded_memory import _fused_slab
+assert feops.fused_enabled()
+assert _fused_slab(mem[: M_BUDGET // 4])
+
+feops.ENABLED = False
+try:
+    with use_mesh(mesh):
+        got_split = sharded_lma_lookup(mem, store.sets, store.lengths, gids,
+                                       lma, mesh, ("data",))
+    g_split = jax.grad(loss_sharded)(mem)
+finally:
+    feops.ENABLED = True
+np.testing.assert_array_equal(np.asarray(got_split), np.asarray(want))
+np.testing.assert_array_equal(np.asarray(got_split), np.asarray(got))
+np.testing.assert_allclose(np.asarray(g_split), np.asarray(g_got),
+                           rtol=1e-6, atol=1e-6)
+for kind in ("hashed_elem", "hashed_row"):
+    alloc = alloc_hashed_elem if kind == "hashed_elem" else alloc_hashed_row
+    want_h = lookup(mem, alloc(gids, D, M_BUDGET, 3))
+    feops.ENABLED = False
+    try:
+        with use_mesh(mesh):
+            split_h = sharded_hashed_lookup(mem, gids, D, M_BUDGET, 3, mesh,
+                                            ("data",), kind=kind)
+    finally:
+        feops.ENABLED = True
+    with use_mesh(mesh):
+        fused_h = sharded_hashed_lookup(mem, gids, D, M_BUDGET, 3, mesh,
+                                        ("data",), kind=kind)
+    np.testing.assert_array_equal(np.asarray(fused_h), np.asarray(want_h))
+    np.testing.assert_array_equal(np.asarray(fused_h), np.asarray(split_h))
+print("fused-vs-split slab gather OK")
+
 print("ALL_SHARDED_CHECKS_PASSED")
 """
 
