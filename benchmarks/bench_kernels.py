@@ -127,6 +127,34 @@ def modeled_lookup_bytes(n: int, s: int, d: int) -> dict:
     }
 
 
+def bench_scheme_sweep(rows: list, out: list) -> None:
+    """Registry-driven embed micro-bench: every *registered* scheme — not a
+    hand-kept kind list — gets a ``scheme_embed_<kind>`` row, so registering
+    a new scheme (e.g. ``freq``) benches it automatically and
+    ``check_regression.py`` can assert the sweep covers the registry."""
+    from repro.core.signatures import synthetic_dense_store
+    from repro.embed import EmbeddingTable, get_scheme, list_schemes
+
+    vocabs, dim, budget = (24576, 8192), 16, 65536
+    shape = f"2048x{dim}@m={budget}"
+    rng = np.random.default_rng(3)
+    ids = jnp.asarray(rng.integers(0, vocabs[0], (2048,), np.int32))
+    for kind in list_schemes():
+        scheme = get_scheme(kind)
+        table = EmbeddingTable(scheme.build_config(vocabs, dim, budget,
+                                                   seed=5))
+        params = table.init(jax.random.key(5))
+        store = synthetic_dense_store(table.config.total_vocab, 16,
+                                      max_set=32, seed=2) \
+            if scheme.needs_signature_store else None
+        bufs = table.make_buffers(store)
+        f = jax.jit(lambda p, i, t=table, b=bufs: t.embed(p, b, 0, i))
+        us = time_fn(f, params, ids)
+        rows.append((f"scheme_embed_{kind}", shape, round(us, 1)))
+        out.append(f"kernels scheme_embed[{kind}] {shape}: {us:.0f} us "
+                   f"(alpha {table.describe()['expansion_rate']:.1f})")
+
+
 def run() -> list[str]:
     out = []
     rows = []
@@ -187,6 +215,8 @@ def run() -> list[str]:
     us = time_fn(f, xk, x0, wc)
     rows.append(("cin_ref", "512x200x39x10", round(us, 1)))
     out.append(f"kernels cin ref: {us:.0f} us")
+
+    bench_scheme_sweep(rows, out)
 
     sharded = bench_sharded_lookup()
     if "error" not in sharded:

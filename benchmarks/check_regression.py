@@ -2,8 +2,11 @@
 
 Diffs a fresh kernel-bench ledger against the committed baseline and fails
 (exit 1) when any kernel row regresses by more than ``--max-ratio`` (default
-1.3x), or when a baseline row disappears from the fresh run.  New rows are
-allowed (they become baseline once committed).
+1.3x), when a baseline row disappears from the fresh run, or when a
+registered embedding scheme has no ``scheme_embed_*`` row in the fresh sweep
+(the sweep enumerates ``repro.embed.list_schemes()``, so a newly registered
+scheme is benched — and gated — automatically).  New rows are allowed (they
+become baseline once committed).
 
 Usage:
   python benchmarks/check_regression.py                 # re-run bench, diff
@@ -41,6 +44,19 @@ def load_rows(path_or_doc) -> dict[tuple[str, str], float]:
         with open(path_or_doc) as f:
             doc = json.load(f)
     return {(r["kernel"], r["shape"]): float(r["us"]) for r in doc["rows"]}
+
+
+def missing_schemes(fresh: dict) -> list[str]:
+    """Registered schemes with no ``scheme_embed_<kind>`` row in the fresh
+    ledger — a newly registered scheme must show up in the registry-driven
+    bench sweep (bench_kernels.bench_scheme_sweep).  Returns [] when the
+    registry is unimportable (standalone ledger-diff use)."""
+    try:
+        from repro.embed import list_schemes
+    except ImportError:
+        return []
+    benched = {k for (k, _shape) in fresh}
+    return [k for k in list_schemes() if f"scheme_embed_{k}" not in benched]
 
 
 def compare(baseline: dict, fresh: dict,
@@ -94,6 +110,8 @@ def main(argv=None) -> int:
                     f.write(text)
 
     failures = compare(baseline, fresh, args.max_ratio)
+    failures += [f"registered scheme {k!r} missing from the bench sweep"
+                 for k in missing_schemes(fresh)]
     if failures:
         print(f"REGRESSION ({len(failures)} row(s)):")
         for f in failures:

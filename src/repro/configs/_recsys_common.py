@@ -7,8 +7,7 @@ candidates against field 0 by convention.
 """
 from __future__ import annotations
 
-from repro.core.allocation import LMAParams
-from repro.core.embedding import EmbeddingConfig
+from repro.embed import EmbeddingConfig, get_scheme
 
 CRITEO_VOCABS = (
     10131227, 1460, 583, 2202608, 305, 24, 12517, 633, 3, 93145, 5683,
@@ -30,31 +29,33 @@ RECSYS_SHAPE_TABLE = {
 }
 
 
-def lma_embedding(vocab_sizes: tuple[int, ...], dim: int,
-                  expansion: float = 16.0, n_h: int = 4, max_set: int = 32,
-                  seed: int = 0) -> EmbeddingConfig:
-    """Paper defaults: common memory across tables, alpha=16, n_h=4."""
+def matched_budget(vocab_sizes: tuple[int, ...], dim: int,
+                   expansion: float) -> int:
+    """Scalar budget m at compression alpha, rounded so it stays divisible
+    by every mesh axis combination (the sharded lookup shard_maps the memory
+    over the model axis)."""
     total = sum(vocab_sizes)
     m = max(int(total * dim / expansion), 4096)
-    m = -(-m // 4096) * 4096   # divisible by every mesh axis combination
-    return EmbeddingConfig(
-        kind="lma", vocab_sizes=tuple(vocab_sizes), dim=dim, budget=m,
-        lma=LMAParams(d=dim, m=m, n_h=n_h, max_set=max_set, seed=seed),
-        memory_init="bernoulli", seed=seed)
+    return -(-m // 4096) * 4096
 
 
 def embedding_of_kind(kind: str, vocab_sizes: tuple[int, ...], dim: int,
                       expansion: float = 16.0, **kw) -> EmbeddingConfig:
-    """Build full / hashed / qr / lma embedding configs at matched budget."""
-    if kind == "full":
-        return EmbeddingConfig(kind="full", vocab_sizes=tuple(vocab_sizes), dim=dim)
-    if kind == "lma":
-        return lma_embedding(vocab_sizes, dim, expansion, **kw)
-    total = sum(vocab_sizes)
-    m = max(int(total * dim / expansion), 4096)
-    m = -(-m // 4096) * 4096
-    return EmbeddingConfig(kind=kind, vocab_sizes=tuple(vocab_sizes), dim=dim,
-                           budget=m)
+    """Any *registered* scheme at a matched budget — the registry (not a
+    hand-kept kind list) decides what is buildable, so a newly registered
+    scheme (e.g. ``freq``) is immediately selectable by every recsys config.
+    """
+    budget = matched_budget(vocab_sizes, dim, expansion)
+    return get_scheme(kind).build_config(tuple(vocab_sizes), dim, budget,
+                                         **kw)
+
+
+def lma_embedding(vocab_sizes: tuple[int, ...], dim: int,
+                  expansion: float = 16.0, n_h: int = 4, max_set: int = 32,
+                  seed: int = 0) -> EmbeddingConfig:
+    """Paper defaults: common memory across tables, alpha=16, n_h=4."""
+    return embedding_of_kind("lma", vocab_sizes, dim, expansion, n_h=n_h,
+                             max_set=max_set, seed=seed)
 
 
 def smoke_vocabs(n_fields: int) -> tuple[int, ...]:

@@ -10,15 +10,6 @@ from repro.core.allocation import (
     lma_signatures,
     locations_from_signatures,
 )
-from repro.core.embedding import (
-    EmbeddingConfig,
-    embed,
-    embed_bag,
-    embed_fields,
-    init_embedding,
-    make_buffers,
-    materialize_rows,
-)
 from repro.core.hashing import fmix32, hash_to_range, hash_u32, seed_stream
 from repro.core.memory import cosine, init_memory, lookup
 from repro.core.minhash import gather_ragged_sets, jaccard_from_sets, minhash_dense
@@ -31,6 +22,21 @@ from repro.core.signatures import (
     synthetic_signature_store,
     table_offsets,
 )
+
+# The embedding layer lives in repro.embed (repro.core.embedding is a shim);
+# resolve its names lazily so importing any core submodule from repro.embed
+# does not re-enter the shim mid-import (PEP 562).
+_EMBEDDING_NAMES = ("EmbeddingConfig", "EmbeddingTable", "embed", "embed_bag",
+                    "embed_fields", "init_embedding", "make_buffers",
+                    "materialize_rows")
+
+
+def __getattr__(name):
+    if name in _EMBEDDING_NAMES:
+        from repro.core import embedding as _e
+        return getattr(_e, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 __all__ = [
     "LMAParams", "alloc_full", "alloc_hashed_elem", "alloc_hashed_row", "alloc_lma",

@@ -1,374 +1,43 @@
-"""Pluggable embedding schemes: full | hashed_elem | hashed_row | qr | lma | md.
+"""Back-compat shim over ``repro.embed`` — the pluggable embedding subsystem.
 
-This is the integration surface of the paper: every model in ``repro.models`` draws
-its categorical embeddings through this layer, so LMA (and each baseline from paper
-section 6) is a config switch, not a model rewrite.
-
-Common memory across tables (paper section 5): all compressed schemes operate on a
-*global* value-id space (``table_offsets[t] + v``) over one shared parameter pool.
-
-Params (trainable) vs buffers (non-trainable device arrays: D' store, offsets) are
-kept in separate pytrees so optimizers and sharding rules only see floats.
+The implementation moved: schemes (full | hashed_elem | hashed_row | qr |
+lma | md | freq | ...) live in a decorator registry
+(``repro.embed.registry``), backend choice (split oracle / fused Pallas /
+sharded psum) in ``repro.embed.backends``, and the
+:class:`~repro.embed.table.EmbeddingTable` facade in ``repro.embed.table``.
+This module re-exports the original functional surface so pre-existing
+imports, checkpoints (param pytree key names are unchanged), and the
+fused/sharded kernels keep working; new code should import from
+``repro.embed``.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional, Sequence
-
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core import allocation as alc
-from repro.core.allocation import LMAParams
-from repro.core.hashing import hash_u32, seed_stream
-from repro.core.memory import init_memory, lookup
-from repro.core.minhash import gather_ragged_sets
-from repro.core.signatures import DenseSignatureStore, SignatureStore
+from repro.embed.backends import (fused_eligible as _fused_eligible,
+                                  resolve_backend, sharded_ctx as _sharded_ctx)
+from repro.embed.config import EmbeddingConfig
+from repro.embed.registry import get_scheme, list_schemes, register_scheme
+from repro.embed.schemes import LMAScheme, _qr_rows, _qr_rows_budget
+from repro.embed.table import (EmbeddingTable, _global_ids, _memory_lookup,
+                               embed, embed_bag, embed_fields, init_embedding,
+                               make_buffers, materialize_rows)
 
-_LOCATION_KINDS = ("hashed_elem", "hashed_row", "lma")
+__all__ = [
+    "EmbeddingConfig", "EmbeddingTable", "embed", "embed_bag", "embed_fields",
+    "init_embedding", "make_buffers", "materialize_rows", "get_scheme",
+    "list_schemes", "register_scheme", "resolve_backend",
+]
 
+_store_from_buffers = LMAScheme.store_from_buffers
 
-@dataclasses.dataclass(frozen=True)
-class EmbeddingConfig:
-    kind: str                      # full | hashed_elem | hashed_row | qr | lma | md
-    vocab_sizes: tuple[int, ...]   # one entry per table
-    dim: int
-    budget: Optional[int] = None   # total scalar budget m for compressed kinds
-    lma: Optional[LMAParams] = None
-    seed: int = 0
-    init_scale: Optional[float] = None   # None -> scheme default
-    memory_init: str = "normal"          # for lma: "bernoulli" (Thm 2) or "normal"
-    md_dims: Optional[tuple[int, ...]] = None  # mixed-dimension per-table dims
-    dtype: str = "float32"
-
-    @property
-    def n_tables(self) -> int:
-        return len(self.vocab_sizes)
-
-    @property
-    def total_vocab(self) -> int:
-        return int(sum(self.vocab_sizes))
-
-    @property
-    def jdtype(self):
-        return jnp.dtype(self.dtype)
-
-    def table_offsets(self) -> np.ndarray:
-        return np.concatenate([[0], np.cumsum(np.asarray(self.vocab_sizes, np.int64))])
-
-    @property
-    def expansion_rate(self) -> float:
-        """alpha = simulated size / budget (paper section 7.1)."""
-        if self.budget is None:
-            return 1.0
-        return self.total_vocab * self.dim / self.budget
-
-    def param_count(self) -> int:
-        if self.kind == "full":
-            return self.total_vocab * self.dim
-        if self.kind in ("hashed_elem", "hashed_row", "lma"):
-            assert self.budget is not None
-            return int(self.budget)
-        if self.kind == "qr":
-            assert self.budget is not None
-            n = 0
-            for v in self.vocab_sizes:
-                mq, mr = _qr_rows(v, self.dim, self.budget, self.total_vocab)
-                assert mq + mr <= _qr_rows_budget(v, self.dim, self.budget,
-                                                  self.total_vocab), \
-                    (v, mq, mr, "qr tables exceed this table's budget share")
-                n += (mq + mr) * self.dim
-            return n
-        if self.kind == "md":
-            assert self.md_dims is not None
-            return int(sum(v * d + d * self.dim
-                           for v, d in zip(self.vocab_sizes, self.md_dims)))
-        raise ValueError(self.kind)
-
-
-def _qr_rows_budget(vocab: int, dim: int, budget: int, total_vocab: int) -> int:
-    """Row budget for one table: its proportional share of the scalar budget."""
-    share = max(budget * (vocab / max(total_vocab, 1)), 4 * dim)
-    return max(int(share // dim), 4)
-
-
-def _qr_rows(vocab: int, dim: int, budget: int, total_vocab: int) -> tuple[int, int]:
-    """(quotient rows mq, remainder rows mr) with mq + mr <= rows_budget.
-
-    mq ~= sqrt(vocab) minimizes collisions; mr = ceil(vocab / mq) when the
-    budget allows (then ``(v // mq) % mr == v // mq`` — collision-free in the
-    quotient, identical to the unconstrained QR trick), else mr is clamped to
-    the remaining row budget and the quotient index wraps (hash-style
-    collisions instead of a blown budget)."""
-    rows_budget = _qr_rows_budget(vocab, dim, budget, total_vocab)
-    mq = int(np.sqrt(max(vocab, 1)))
-    mq = max(2, min(mq, rows_budget - 2))
-    mr = max(2, min(-(-vocab // mq), rows_budget - mq))
-    return mq, mr
-
-
-def init_embedding(key: jax.Array, cfg: EmbeddingConfig) -> dict:
-    """Trainable parameters for the chosen scheme."""
-    d = cfg.dim
-    dt = cfg.jdtype
-    if cfg.kind == "full":
-        scale = cfg.init_scale if cfg.init_scale is not None else 1.0 / np.sqrt(d)
-        keys = jax.random.split(key, cfg.n_tables)
-        return {
-            f"table_{t}": (jax.random.normal(keys[t], (v, d)) * scale).astype(dt)
-            for t, v in enumerate(cfg.vocab_sizes)
-        }
-    if cfg.kind in ("hashed_elem", "hashed_row"):
-        assert cfg.budget is not None, f"{cfg.kind} needs a budget"
-        scale = cfg.init_scale if cfg.init_scale is not None else 1.0 / np.sqrt(d)
-        return {"memory": init_memory(key, cfg.budget, "normal", scale, dt)}
-    if cfg.kind == "lma":
-        assert cfg.budget is not None and cfg.lma is not None
-        scale = cfg.init_scale
-        if scale is None:
-            scale = 1.0 / np.sqrt(d) if cfg.memory_init == "bernoulli" else 1.0 / np.sqrt(d)
-        return {"memory": init_memory(key, cfg.budget, cfg.memory_init, scale, dt)}
-    if cfg.kind == "qr":
-        assert cfg.budget is not None
-        scale = cfg.init_scale if cfg.init_scale is not None else 1.0 / np.sqrt(d)
-        params = {}
-        keys = jax.random.split(key, 2 * cfg.n_tables)
-        for t, v in enumerate(cfg.vocab_sizes):
-            mq, mr = _qr_rows(v, d, cfg.budget, cfg.total_vocab)
-            params[f"q_{t}"] = (jax.random.normal(keys[2 * t], (mq, d)) * scale).astype(dt)
-            # remainder table multiplies element-wise; init around 1 so the product
-            # starts near the quotient embedding
-            params[f"r_{t}"] = (1.0 + jax.random.normal(keys[2 * t + 1], (mr, d))
-                                * scale).astype(dt)
-        return params
-    if cfg.kind == "md":
-        assert cfg.md_dims is not None
-        params = {}
-        keys = jax.random.split(key, 2 * cfg.n_tables)
-        for t, (v, dt_dim) in enumerate(zip(cfg.vocab_sizes, cfg.md_dims)):
-            scale = cfg.init_scale if cfg.init_scale is not None else 1.0 / np.sqrt(dt_dim)
-            params[f"table_{t}"] = (jax.random.normal(keys[2 * t], (v, dt_dim))
-                                    * scale).astype(cfg.jdtype)
-            params[f"proj_{t}"] = (jax.random.normal(keys[2 * t + 1], (dt_dim, d))
-                                   / np.sqrt(dt_dim)).astype(cfg.jdtype)
-        return params
-    raise ValueError(cfg.kind)
-
-
-def make_buffers(cfg: EmbeddingConfig, store=None) -> dict:
-    """Non-trainable device buffers (empty for schemes that need none)."""
-    bufs: dict = {}
-    if cfg.kind == "lma":
-        assert store is not None, "LMA needs a SignatureStore (D')"
-        if isinstance(store, DenseSignatureStore):
-            bufs["store_sets"] = store.sets
-            bufs["store_lengths"] = store.lengths
-        else:
-            bufs["store_flat"] = store.flat
-            bufs["store_offsets"] = store.offsets
-            bufs["store_lengths"] = store.lengths
-    return bufs
-
-
-def _store_from_buffers(buffers: dict):
-    if "store_sets" in buffers:
-        return DenseSignatureStore(buffers["store_sets"], buffers["store_lengths"])
-    return SignatureStore(buffers["store_flat"], buffers["store_offsets"],
-                          buffers["store_lengths"])
-
-
-def _global_ids(cfg: EmbeddingConfig, table: int, ids: jax.Array) -> jax.Array:
-    base = int(cfg.table_offsets()[table])
-    return ids.astype(jnp.int32) + jnp.int32(base)
-
-
-def _sharded_ctx():
-    """(mesh, dp_axes) when a distribution mesh is installed, else None."""
-    from repro.dist import context as dctx
-    mesh = dctx.current_mesh()
-    if mesh is None:
-        return None
-    return mesh, dctx.dp_axes(mesh)
-
-
-def _sharded_lookup(cfg: EmbeddingConfig, params: dict, buffers: dict,
-                    gids: jax.Array, mesh, dp) -> jax.Array:
-    from repro.dist.sharded_memory import (sharded_hashed_lookup,
-                                           sharded_lma_lookup)
-    if cfg.kind == "lma":
-        assert "store_sets" in buffers, (
-            "the sharded LMA path needs the dense D' store (densify_store)")
-        return sharded_lma_lookup(params["memory"], buffers["store_sets"],
-                                  buffers["store_lengths"], gids, cfg.lma,
-                                  mesh, dp)
-    return sharded_hashed_lookup(params["memory"], gids, cfg.dim, cfg.budget,
-                                 cfg.seed, mesh, dp, kind=cfg.kind)
-
-
-# ------------------------------------------------------- fused engine path
 
 def _use_fused(cfg: EmbeddingConfig, params: dict) -> bool:
-    """Dispatch the single-device hot path to the fused Pallas engine
-    (kernels/fused_embed): locations + pool gather in one VMEM pass."""
-    if cfg.kind not in _LOCATION_KINDS:
-        return False
-    mem = params.get("memory")
-    if mem is None or mem.ndim != 1:
-        return False
-    # the engine indexes mod the spec's m with no clipping: it is only the
-    # split path's bit-exact twin when the pool really has m slots
-    m_spec = cfg.lma.m if cfg.kind == "lma" else cfg.budget
-    if mem.shape[0] != m_spec:
-        return False
-    from repro.kernels.fused_embed import ops as fe
-    return fe.fused_enabled() and fe.fused_supported(mem.shape[0],
-                                                     mem.dtype.itemsize)
-
-
-def _fused_spec(cfg: EmbeddingConfig):
-    from repro.kernels.fused_embed import ops as fe
-    if cfg.kind == "lma":
-        return fe.lma_spec(cfg.lma)
-    return fe.hashed_spec(cfg.kind, cfg.dim, cfg.budget, cfg.seed)
-
-
-def _fused_rows(cfg: EmbeddingConfig, buffers: dict,
-                gids: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """D' rows + support for a flat [N] gid batch (LMA only), in the
-    PAD-sentinel form the kernel masks on — bit-identical inputs to
-    ``alloc_lma``'s."""
-    p = cfg.lma
-    if "store_sets" in buffers:
-        rows = jnp.take(buffers["store_sets"], gids, axis=0)[:, : p.max_set]
-    else:
-        elems, mask = gather_ragged_sets(buffers["store_flat"],
-                                         buffers["store_offsets"], gids,
-                                         p.max_set)
-        rows = jnp.where(mask, elems, DenseSignatureStore.PAD)
-    support = jnp.take(buffers["store_lengths"], gids, axis=0)
-    return rows, support
-
-
-def _fused_lookup_global(cfg: EmbeddingConfig, params: dict, buffers: dict,
-                         gids: jax.Array) -> jax.Array:
-    from repro.kernels.fused_embed import ops as fe
-    spec = _fused_spec(cfg)
-    if cfg.kind == "lma":
-        rows, support = _fused_rows(cfg, buffers, gids)
-        return fe.fused_lookup(spec, params["memory"], gids, rows, support)
-    return fe.fused_lookup(spec, params["memory"], gids)
-
-
-def _memory_lookup(cfg: EmbeddingConfig, params: dict, buffers: dict,
-                   gids: jax.Array) -> jax.Array:
-    """[N] global ids -> [N, d] for the common-memory schemes: sharded when a
-    mesh is installed, fused Pallas engine when supported, else the split
-    locations + jnp.take path."""
-    ctx = _sharded_ctx()
-    if ctx is not None:
-        return _sharded_lookup(cfg, params, buffers, gids, *ctx)
-    if _use_fused(cfg, params):
-        return _fused_lookup_global(cfg, params, buffers, gids)
-    return lookup(params["memory"], _locations_global(cfg, buffers, gids))
-
-
-def embed(cfg: EmbeddingConfig, params: dict, buffers: dict, table: int,
-          ids: jax.Array) -> jax.Array:
-    """ids [...]: int -> embeddings [..., dim]."""
-    shape = ids.shape
-    flat = ids.reshape(-1)
-    if cfg.kind == "full":
-        out = jnp.take(params[f"table_{table}"], flat.astype(jnp.int32), axis=0)
-    elif cfg.kind == "qr":
-        v = flat.astype(jnp.int32)
-        mq = params[f"q_{table}"].shape[0]
-        mr = params[f"r_{table}"].shape[0]
-        eq = jnp.take(params[f"q_{table}"], v % mq, axis=0)
-        # % mr is the identity when the budget admitted mr == ceil(v / mq)
-        er = jnp.take(params[f"r_{table}"], (v // mq) % mr, axis=0)
-        out = eq * er
-    elif cfg.kind == "md":
-        e = jnp.take(params[f"table_{table}"], flat.astype(jnp.int32), axis=0)
-        out = e @ params[f"proj_{table}"]
-    else:
-        out = _memory_lookup(cfg, params, buffers,
-                             _global_ids(cfg, table, flat))
-    return out.reshape(*shape, cfg.dim)
-
-
-def embed_fields(cfg: EmbeddingConfig, params: dict, buffers: dict,
-                 ids: jax.Array) -> jax.Array:
-    """Per-field lookup: ids [B, F] (field f's id in its own vocab) -> [B, F, d].
-
-    Location-based schemes (hashed/lma) take the fast path: one vectorized call
-    over globalized ids — a single fused gather instead of F table gathers.
-    """
-    B, F = ids.shape
-    assert F == cfg.n_tables, (F, cfg.n_tables)
-    if cfg.kind in _LOCATION_KINDS:
-        offs = jnp.asarray(cfg.table_offsets()[:-1], jnp.int32)
-        gids = (ids.astype(jnp.int32) + offs[None, :]).reshape(-1)
-        out = _memory_lookup(cfg, params, buffers, gids)
-        return out.reshape(B, F, cfg.dim)
-    cols = [embed(cfg, params, buffers, f, ids[:, f]) for f in range(F)]
-    return jnp.stack(cols, axis=1)
+    """Legacy gate (now ``repro.embed.backends.fused_eligible``)."""
+    return _fused_eligible(cfg, get_scheme(cfg.kind), params)
 
 
 def _locations_global(cfg: EmbeddingConfig, buffers: dict,
                       gids: jax.Array) -> jax.Array:
     """Locations for already-globalized ids [N] -> [N, d]."""
-    if cfg.kind == "hashed_elem":
-        return alc.alloc_hashed_elem(gids, cfg.dim, cfg.budget, cfg.seed)
-    if cfg.kind == "hashed_row":
-        return alc.alloc_hashed_row(gids, cfg.dim, cfg.budget, cfg.seed)
-    if cfg.kind == "lma":
-        return alc.alloc_lma(cfg.lma, _store_from_buffers(buffers), gids)
-    raise ValueError(cfg.kind)
-
-
-def embed_bag(cfg: EmbeddingConfig, params: dict, buffers: dict, table: int,
-              ids: jax.Array, mask: jax.Array, mode: str = "sum") -> jax.Array:
-    """Multi-hot pooling: ids [B, L], mask [B, L] -> [B, dim].
-
-    JAX has no native EmbeddingBag.  Common-memory schemes pool inside the
-    fused Pallas engine (the [B, L, d] pre-pool tensor never leaves VMEM);
-    everything else is gather + masked reduce (plus the one-hot-matmul kernel
-    in repro/kernels/embedding_bag for full-table TPU bags).
-    """
-    if _sharded_ctx() is None and _use_fused(cfg, params):
-        w = mask.astype(params["memory"].dtype)
-        s = _fused_bag_sum(cfg, params, buffers, table, ids, w)
-    else:
-        e = embed(cfg, params, buffers, table, ids)      # [B, L, d]
-        w = mask.astype(e.dtype)
-        s = jnp.sum(e * w[..., None], axis=-2)
-    if mode == "sum":
-        return s
-    if mode == "mean":
-        n = jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1.0)
-        return s / n
-    raise ValueError(mode)
-
-
-def _fused_bag_sum(cfg: EmbeddingConfig, params: dict, buffers: dict,
-                   table: int, ids: jax.Array, w: jax.Array) -> jax.Array:
-    """Weighted-sum bags through the fused engine (pooling in-kernel)."""
-    from repro.kernels.fused_embed import ops as fe
-    B, L = ids.shape
-    gids = _global_ids(cfg, table, ids.reshape(-1))
-    spec = _fused_spec(cfg)
-    if cfg.kind == "lma":
-        rows, support = _fused_rows(cfg, buffers, gids)
-        return fe.fused_embed_bag(spec, params["memory"], gids.reshape(B, L),
-                                  w, rows.reshape(B, L, -1),
-                                  support.reshape(B, L))
-    return fe.fused_embed_bag(spec, params["memory"], gids.reshape(B, L), w)
-
-
-def materialize_rows(cfg: EmbeddingConfig, params: dict, buffers: dict, table: int,
-                     n_rows: int | None = None) -> jax.Array:
-    """Materialize [V, d] virtual table rows (LM output heads / small vocabs only)."""
-    v = cfg.vocab_sizes[table] if n_rows is None else n_rows
-    ids = jnp.arange(v, dtype=jnp.int32)
-    return embed(cfg, params, buffers, table, ids)
+    return get_scheme(cfg.kind).locations(cfg, buffers, gids)

@@ -7,14 +7,15 @@ so downstream layers see unit-variance-ish activations.
 
 ``lookup`` is the split-path retrieval primitive: a materialized [.., d]
 location tensor gathered with jnp.take (transpose-of-gather gives the
-scatter-add gradient automatically).  The production hot path no longer
-routes through it — ``repro/kernels/fused_embed`` computes locations AND
-gathers (and bag-pools) in one Pallas VMEM pass with a scatter-add custom
-VJP, and ``repro/core/embedding.py`` dispatches there; ``lookup`` remains
-the oracle that path must match bit-for-bit, and the fallback when the pool
-exceeds the engine's VMEM budget.  The 512-chip sharded path lives in
-``repro/dist/sharded_memory.py`` (mask-local-gather + psum, O(B*d) traffic,
-fused per-slab kernel inside the shard_map).
+scatter-add gradient automatically).  It is the ``split`` LookupBackend of
+``repro.embed.backends`` — the bit-exact oracle every other backend must
+match — and the fallback when the pool exceeds the fused engine's VMEM
+budget.  The production hot path is the ``fused`` backend
+(``repro/kernels/fused_embed``: locations AND gather, plus bag-pooling, in
+one Pallas VMEM pass with a scatter-add custom VJP); the 512-chip ``sharded``
+backend lives in ``repro/dist/sharded_memory.py`` (mask-local-gather + psum,
+O(B*d) traffic, fused per-slab kernel inside the shard_map).  Backend choice
+is resolved per lookup by ``repro.embed.backends.resolve_backend``.
 """
 from __future__ import annotations
 

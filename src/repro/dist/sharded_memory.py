@@ -28,6 +28,10 @@ against the single-device oracle (forward bit-identical, grads to 1e-6).
 For LMA the D' store rows are sharded over 'model' the same way and each
 batch row's D_v set is reconstructed with the same gather + psum before the
 location hashes run (integer psum: exact).
+
+Dispatch here is owned by ``repro.embed.backends.ShardedBackend``: schemes
+with a bespoke path (lma, hashed_*) plug in directly; any other registered
+pure-location scheme rides ``sharded_location_lookup``.
 """
 from __future__ import annotations
 
@@ -94,6 +98,34 @@ def local_gather_psum(shard: jax.Array, idx: jax.Array,
     mask = mine.reshape(mine.shape + (1,) * (vals.ndim - mine.ndim))
     return jax.lax.psum(jnp.where(mask, vals, jnp.zeros((), vals.dtype)),
                         axis_name)
+
+
+def sharded_location_lookup(memory: jax.Array, gids: jax.Array, loc_fn,
+                            d: int, mesh, dp_axes) -> jax.Array:
+    """Generic sharded lookup for any pure-location scheme.
+
+    ``loc_fn``: [n] flat global ids -> [n, d] int32 locations; it must be
+    communication-free (pure hashing / replicated-buffer math), because it
+    runs per rank inside the shard_map.  This is the path registry schemes
+    get for free (``repro.embed.backends.ShardedBackend``) when they don't
+    provide a bespoke one.  Bit-identical to ``lookup(memory, loc_fn(gids))``.
+    """
+    m = int(memory.shape[0])
+    n_model = _model_size(mesh)
+    if n_model <= 1 or m % n_model != 0:
+        return lookup(memory, loc_fn(gids.reshape(-1))).reshape(*gids.shape, d)
+    batch = _batch_axes(mesh, dp_axes, int(gids.shape[0]))
+    bspec = _bspec(batch)
+    gspec = P(bspec, *([None] * (gids.ndim - 1)))
+
+    def body(mem_l, gids_l):
+        out = local_gather_psum(mem_l, loc_fn(gids_l.reshape(-1)))
+        return out.reshape(*gids_l.shape, d)
+
+    fn = shard_map(body, mesh=mesh, in_specs=(P("model"), gspec),
+                   out_specs=P(bspec, *([None] * gids.ndim)),
+                   check_vma=False)
+    return fn(memory, gids)
 
 
 def sharded_hashed_lookup(memory: jax.Array, gids: jax.Array, d: int, m: int,

@@ -1,0 +1,51 @@
+"""repro.embed — the pluggable embedding subsystem.
+
+Two orthogonal protocols over one facade:
+
+  * :class:`~repro.embed.registry.Scheme` — the *allocation policy* (paper
+    Definitions 1-2): full | hashed_elem | hashed_row | qr | lma | md | freq,
+    discovered via the ``@register_scheme`` decorator registry.  Adding a
+    scheme is one registered class in its own module (see
+    ``repro/embed/freq.py`` and README "Adding an embedding scheme").
+  * ``LookupBackend`` — the *execution strategy* for memory-family schemes:
+    split bit-exact oracle, fused Pallas engine, sharded
+    mask-local-gather+psum, chosen by :func:`resolve_backend`.
+
+Models hold an :class:`EmbeddingTable` (frozen, hashable) and call
+``.init`` / ``.embed`` / ``.embed_fields`` / ``.embed_bag`` /
+``.describe()``.  ``repro.core.embedding`` remains a thin re-export shim for
+pre-existing imports; param pytree key names are checkpoint-stable.
+"""
+from repro.embed.backends import (FUSED, SPLIT, FusedBackend, ShardedBackend,
+                                  SplitBackend, fused_eligible,
+                                  resolve_backend)
+from repro.embed.config import EmbeddingConfig
+from repro.embed.registry import (Scheme, get_scheme, list_schemes,
+                                  register_scheme)
+from repro.embed.table import (EmbeddingTable, embed, embed_bag, embed_fields,
+                               init_embedding, make_buffers, materialize_rows)
+
+# built-in + in-repo schemes register on import (third-party modules
+# self-register the same way when imported by their users)
+from repro.embed import schemes as _schemes  # noqa: E402,F401  (side-effect)
+from repro.embed import freq as _freq        # noqa: E402,F401  (side-effect)
+
+__all__ = [
+    "EmbeddingConfig",
+    "EmbeddingTable",
+    "FusedBackend",
+    "Scheme",
+    "ShardedBackend",
+    "SplitBackend",
+    "embed",
+    "embed_bag",
+    "embed_fields",
+    "fused_eligible",
+    "get_scheme",
+    "init_embedding",
+    "list_schemes",
+    "make_buffers",
+    "materialize_rows",
+    "register_scheme",
+    "resolve_backend",
+]

@@ -1,0 +1,137 @@
+"""Lookup backends for memory-family schemes, and the explicit resolver.
+
+Three interchangeable implementations of "[N] global ids -> [N, d]":
+
+``split``
+    The bit-exact oracle: materialize the [N, d] location tensor
+    (``scheme.locations``) and gather with ``jnp.take`` (transpose-of-gather
+    gives the scatter-add gradient automatically).
+
+``fused``
+    The Pallas engine (``repro/kernels/fused_embed``): locations + pool
+    gather (+ bag-pool) in one VMEM pass with a scatter-add custom VJP.
+    Eligible only when the scheme publishes a :class:`FusedSpec`, the pool
+    really has the spec's ``m`` slots, and the slab fits the engine's VMEM
+    budget.
+
+``sharded``
+    Mask-local-gather + psum over the 'model' axis
+    (``repro/dist/sharded_memory``), selected whenever a distribution mesh is
+    installed.  Schemes may provide a bespoke sharded path (lma reconstructs
+    D' rows first); others fall back to a generic location-based
+    mask-local-gather.
+
+``resolve_backend`` is the promoted, testable form of the old implicit
+``_use_fused`` / ``_sharded_ctx`` gating chain in ``core/embedding.py``.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.memory import lookup
+from repro.embed.config import EmbeddingConfig
+from repro.embed.registry import Scheme, get_scheme
+
+
+def sharded_ctx():
+    """(mesh, dp_axes) when a distribution mesh is installed, else None."""
+    from repro.dist import context as dctx
+    mesh = dctx.current_mesh()
+    if mesh is None:
+        return None
+    return mesh, dctx.dp_axes(mesh)
+
+
+def fused_eligible(cfg: EmbeddingConfig, scheme: Scheme, params: dict) -> bool:
+    """Single-device fused-engine gate (bit-exact twin of the split path)."""
+    spec = scheme.fused_spec(cfg)
+    if spec is None:
+        return False
+    mem = params.get("memory")
+    if mem is None or mem.ndim != 1:
+        return False
+    # the engine indexes mod the spec's m with no clipping: it is only the
+    # split path's bit-exact twin when the pool really has m slots
+    if mem.shape[0] != scheme.memory_slots(cfg):
+        return False
+    from repro.kernels.fused_embed import ops as fe
+    return fe.fused_enabled() and fe.fused_supported(mem.shape[0],
+                                                     mem.dtype.itemsize)
+
+
+class SplitBackend:
+    name = "split"
+
+    def lookup(self, cfg: EmbeddingConfig, scheme: Scheme, params: dict,
+               buffers: dict, gids: jax.Array) -> jax.Array:
+        return lookup(params["memory"], scheme.locations(cfg, buffers, gids))
+
+
+class FusedBackend:
+    name = "fused"
+
+    def lookup(self, cfg: EmbeddingConfig, scheme: Scheme, params: dict,
+               buffers: dict, gids: jax.Array) -> jax.Array:
+        from repro.kernels.fused_embed import ops as fe
+        spec = scheme.fused_spec(cfg)
+        extra = scheme.fused_inputs(cfg, buffers, gids)
+        return fe.fused_lookup(spec, params["memory"], gids, *extra)
+
+    def bag(self, cfg: EmbeddingConfig, scheme: Scheme, params: dict,
+            buffers: dict, gids: jax.Array, weights: jax.Array) -> jax.Array:
+        """Weighted-sum bags pooled inside the kernel tile.
+
+        ``gids``: [B, L] already-globalized ids, ``weights``: [B, L].
+        """
+        from repro.kernels.fused_embed import ops as fe
+        B, L = gids.shape
+        flat = gids.reshape(-1)
+        spec = scheme.fused_spec(cfg)
+        extra = scheme.fused_inputs(cfg, buffers, flat)
+        extra = tuple(a.reshape(B, L, *a.shape[1:]) for a in extra)
+        return fe.fused_embed_bag(spec, params["memory"], gids, weights,
+                                  *extra)
+
+
+class ShardedBackend:
+    name = "sharded"
+
+    def __init__(self, mesh, dp_axes):
+        self.mesh = mesh
+        self.dp_axes = dp_axes
+
+    def lookup(self, cfg: EmbeddingConfig, scheme: Scheme, params: dict,
+               buffers: dict, gids: jax.Array) -> jax.Array:
+        out = scheme.sharded_lookup(cfg, params, buffers, gids, self.mesh,
+                                    self.dp_axes)
+        if out is NotImplemented:
+            from repro.dist.sharded_memory import sharded_location_lookup
+            out = sharded_location_lookup(
+                params["memory"], gids,
+                lambda g: scheme.locations(cfg, buffers, g),
+                cfg.dim, self.mesh, self.dp_axes)
+        return out
+
+
+SPLIT = SplitBackend()
+FUSED = FusedBackend()
+
+
+def resolve_backend(cfg: EmbeddingConfig, params: dict,
+                    scheme: Scheme | None = None):
+    """The dispatch policy, in one inspectable place.
+
+    Returns the backend for a memory-family lookup, or ``None`` for
+    table-family schemes (they embed directly, no shared pool).  Priority:
+    sharded (a mesh is installed) > fused (engine enabled + spec + VMEM fit)
+    > split.
+    """
+    scheme = get_scheme(cfg.kind) if scheme is None else scheme
+    if scheme.family != "memory":
+        return None
+    ctx = sharded_ctx()
+    if ctx is not None:
+        return ShardedBackend(*ctx)
+    if fused_eligible(cfg, scheme, params):
+        return FUSED
+    return SPLIT

@@ -1,0 +1,83 @@
+"""EmbeddingConfig: the one declarative description of an embedding subsystem.
+
+``kind`` selects a registered :class:`~repro.embed.registry.Scheme` (the
+allocation policy: how value ids map to trainable parameters) — the paper's
+whole pitch is that this is a *config switch*, not a model rewrite.  Backend
+choice (split oracle / fused Pallas / sharded psum) is orthogonal and resolved
+at lookup time by ``repro.embed.backends``.
+
+Common memory across tables (paper section 5): memory-family schemes operate
+on a *global* value-id space (``table_offsets[t] + v``) over one shared
+parameter pool.
+
+Scheme-specific hyper-parameters that the core config does not know about
+(e.g. the ``freq`` scheme's hot-token count) travel in ``options`` — a frozen
+``(name, value)`` tuple so the config stays hashable and third-party schemes
+never need an edit here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.allocation import LMAParams
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingConfig:
+    kind: str                      # any registered scheme kind (see list_schemes)
+    vocab_sizes: tuple[int, ...]   # one entry per table
+    dim: int
+    budget: Optional[int] = None   # total scalar budget m for compressed kinds
+    lma: Optional[LMAParams] = None
+    seed: int = 0
+    init_scale: Optional[float] = None   # None -> scheme default
+    memory_init: str = "normal"          # for lma: "bernoulli" (Thm 2) or "normal"
+    md_dims: Optional[tuple[int, ...]] = None  # mixed-dimension per-table dims
+    dtype: str = "float32"
+    options: tuple[tuple[str, Any], ...] = ()  # scheme-specific hypers
+
+    @property
+    def n_tables(self) -> int:
+        return len(self.vocab_sizes)
+
+    @property
+    def total_vocab(self) -> int:
+        return int(sum(self.vocab_sizes))
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    def table_offsets(self) -> np.ndarray:
+        return np.concatenate([[0], np.cumsum(np.asarray(self.vocab_sizes, np.int64))])
+
+    def opt(self, name: str, default: Any = None) -> Any:
+        """Scheme-specific option lookup (see ``options``)."""
+        for k, v in self.options:
+            if k == name:
+                return v
+        return default
+
+    def scale_or_default(self, d: int | None = None) -> float:
+        """``init_scale`` if set, else the 1/sqrt(d) activation default."""
+        d = self.dim if d is None else d
+        return self.init_scale if self.init_scale is not None \
+            else 1.0 / np.sqrt(d)
+
+    @property
+    def expansion_rate(self) -> float:
+        """alpha = simulated size / actual parameters (paper section 7.1).
+
+        Computed from ``param_count()`` — not the nominal budget — so kinds
+        whose real footprint differs from ``budget`` (qr, md) report their
+        honest compression in dryrun/bench tables.
+        """
+        return self.total_vocab * self.dim / max(self.param_count(), 1)
+
+    def param_count(self) -> int:
+        from repro.embed.registry import get_scheme
+        return get_scheme(self.kind).param_count(self)

@@ -1,0 +1,125 @@
+"""``freq``: RecShard-inspired frequency-tiered hashed-row scheme.
+
+The access-frequency skew of recommendation ids is extreme (RecShard, arXiv
+2201.10095: the hottest ~1% of rows serve most lookups).  This scheme splits
+the shared pool into two tiers over the global value-id space:
+
+  * **hot tier** — the top-k hot ids each own a dedicated, collision-free
+    d-slot row at the front of the pool (slots ``[rank*d, rank*d + d)``);
+  * **tail tier** — every other id row-hashes into the remaining
+    ``(budget - k*d) / d`` rows (whole-row collisions, like ``hashed_row``).
+
+Hot-id membership is a sorted int32 buffer (``freq_hot_ids``) built by
+``make_buffers`` from observed id counts; with no counts the first ``k``
+global ids are taken (synthetic generators plant their head there).  Lookup
+is a binary search against that buffer + one hash — pure location math, so
+the split oracle and the generic sharded mask-local-gather both apply.
+
+This module is the registry's extensibility proof: it registers itself via
+``@register_scheme`` and is never imported by ``repro.embed.table`` or the
+backend resolver — deleting this file removes the scheme and nothing else.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hashing import hash_u32, seed_stream
+from repro.core.memory import init_memory
+from repro.embed.config import EmbeddingConfig
+from repro.embed.registry import Scheme, register_scheme
+
+DEFAULT_HOT_K = 1024
+
+
+@register_scheme
+class FreqScheme(Scheme):
+    """Frequency-tiered rows: dedicated head, hashed-row tail, one pool."""
+
+    kind = "freq"
+    buffer_source = "id_counts"
+
+    def validate(self, cfg):
+        super().validate(cfg)
+        assert cfg.budget >= 2 * cfg.dim, (
+            f"freq needs budget >= 2*dim (one hot row + one tail row), "
+            f"got {cfg.budget} < {2 * cfg.dim}")
+
+    def build_config(self, vocab_sizes, dim, budget, hot_k: int | None = None,
+                     **kw):
+        if hot_k is not None:
+            # an explicit kwarg wins: strip any pre-existing entry (opt()
+            # returns the first match)
+            rest = tuple(kv for kv in kw.get("options", ())
+                         if kv[0] != "hot_k")
+            kw["options"] = (("hot_k", hot_k),) + rest
+        return super().build_config(vocab_sizes, dim, budget, **kw)
+
+    def hot_k(self, cfg: EmbeddingConfig) -> int:
+        """Static hot-tier size: the requested top-k, clamped so at least
+        one tail row survives in the budget."""
+        k = int(cfg.opt("hot_k", DEFAULT_HOT_K))
+        max_k = cfg.budget // cfg.dim - 1     # keep >= 1 tail row
+        return max(0, min(k, max_k, cfg.total_vocab))
+
+    def tail_rows(self, cfg: EmbeddingConfig) -> int:
+        return (cfg.budget - self.hot_k(cfg) * cfg.dim) // cfg.dim
+
+    def param_count(self, cfg):
+        assert cfg.budget is not None
+        return int(cfg.budget)
+
+    def init_params(self, key, cfg):
+        self.validate(cfg)
+        return {"memory": init_memory(key, cfg.budget, "normal",
+                                      cfg.scale_or_default(), cfg.jdtype)}
+
+    def buffer_specs(self, cfg, n_store_rows):
+        return {"freq_hot_ids": ((self.hot_k(cfg),), "int32")}
+
+    def make_buffers(self, cfg, store=None):
+        """``store``: optional per-global-id counts ([total_vocab] ints).
+
+        The top-k ids by count (ties -> lower id) become the hot tier,
+        stored sorted for the binary-search membership test.  ``store=None``
+        defaults to the first k global ids.
+        """
+        k = self.hot_k(cfg)
+        if store is None:
+            hot = np.arange(k, dtype=np.int32)
+        else:
+            counts = np.asarray(store)
+            assert counts.ndim == 1 and counts.shape[0] >= cfg.total_vocab, (
+                "freq expects per-global-id counts", counts.shape)
+            counts = counts[: cfg.total_vocab]
+            order = np.lexsort((np.arange(counts.shape[0]), -counts))
+            hot = np.sort(order[:k]).astype(np.int32)
+        return {"freq_hot_ids": jnp.asarray(hot)}
+
+    def _hot_ids(self, cfg, buffers) -> jax.Array:
+        hot = buffers.get("freq_hot_ids")
+        if hot is None:     # buffer-less default: first k global ids
+            hot = jnp.arange(self.hot_k(cfg), dtype=jnp.int32)
+        return hot
+
+    def locations(self, cfg, buffers, gids):
+        d = cfg.dim
+        hot = self._hot_ids(cfg, buffers)
+        k = int(hot.shape[0])
+        tail_rows = (cfg.budget - k * d) // d
+        lane = jnp.arange(d, dtype=jnp.int32)[None, :]
+        gi = gids.astype(jnp.int32)
+        seeds = seed_stream(cfg.seed ^ 0x0F5EC, 1)
+        row = (hash_u32(gids.astype(jnp.uint32), seeds[0])
+               % jnp.uint32(max(tail_rows, 1))).astype(jnp.int32)
+        tail_loc = (k + row)[:, None] * d + lane
+        if k == 0:
+            return tail_loc
+        rank = jnp.clip(jnp.searchsorted(hot, gi), 0, k - 1).astype(jnp.int32)
+        is_hot = jnp.take(hot, rank) == gi
+        hot_loc = rank[:, None] * d + lane
+        return jnp.where(is_hot[:, None], hot_loc, tail_loc)
+
+    def extra_describe(self, cfg):
+        return {"hot_k": self.hot_k(cfg), "tail_rows": self.tail_rows(cfg)}

@@ -1,0 +1,161 @@
+"""The EmbeddingTable facade — the only embedding API models touch.
+
+One frozen dataclass wraps an :class:`EmbeddingConfig` and exposes
+``.init(key)`` / ``.make_buffers(store)`` / ``.embed`` / ``.embed_fields`` /
+``.embed_bag`` / ``.materialize_rows`` / ``.param_count`` / ``.describe()``.
+Scheme (allocation policy) and backend (split / fused / sharded) are both
+resolved per call through the registry and ``backends.resolve_backend`` —
+this module never branches on a kind string, which is what lets a new scheme
+register itself from its own module with zero edits here.
+
+The module-level functions are the functional form of the same API
+(``repro.core.embedding`` re-exports them for back-compat).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.embed import backends as bke
+from repro.embed.config import EmbeddingConfig
+from repro.embed.registry import get_scheme
+
+
+def _global_ids(cfg: EmbeddingConfig, table: int, ids: jax.Array) -> jax.Array:
+    base = int(cfg.table_offsets()[table])
+    return ids.astype(jnp.int32) + jnp.int32(base)
+
+
+def init_embedding(key: jax.Array, cfg: EmbeddingConfig) -> dict:
+    """Trainable parameters for the configured scheme."""
+    return get_scheme(cfg.kind).init_params(key, cfg)
+
+
+def make_buffers(cfg: EmbeddingConfig, store=None) -> dict:
+    """Non-trainable device buffers (empty for schemes that need none)."""
+    return get_scheme(cfg.kind).make_buffers(cfg, store)
+
+
+def _memory_lookup(cfg: EmbeddingConfig, params: dict, buffers: dict,
+                   gids: jax.Array) -> jax.Array:
+    """[N] global ids -> [N, d] via the resolved backend (memory family)."""
+    scheme = get_scheme(cfg.kind)
+    backend = bke.resolve_backend(cfg, params, scheme)
+    return backend.lookup(cfg, scheme, params, buffers, gids)
+
+
+def embed(cfg: EmbeddingConfig, params: dict, buffers: dict, table: int,
+          ids: jax.Array) -> jax.Array:
+    """ids [...]: int -> embeddings [..., dim]."""
+    scheme = get_scheme(cfg.kind)
+    shape = ids.shape
+    flat = ids.reshape(-1)
+    if scheme.family == "memory":
+        out = _memory_lookup(cfg, params, buffers,
+                             _global_ids(cfg, table, flat))
+    else:
+        out = scheme.embed_rows(cfg, params, table, flat)
+    return out.reshape(*shape, cfg.dim)
+
+
+def embed_fields(cfg: EmbeddingConfig, params: dict, buffers: dict,
+                 ids: jax.Array) -> jax.Array:
+    """Per-field lookup: ids [B, F] (field f's id in its own vocab) -> [B, F, d].
+
+    Memory-family schemes take the fast path: one vectorized call over
+    globalized ids — a single fused gather instead of F table gathers.
+    """
+    B, F = ids.shape
+    assert F == cfg.n_tables, (F, cfg.n_tables)
+    scheme = get_scheme(cfg.kind)
+    if scheme.family == "memory":
+        offs = jnp.asarray(cfg.table_offsets()[:-1], jnp.int32)
+        gids = (ids.astype(jnp.int32) + offs[None, :]).reshape(-1)
+        out = _memory_lookup(cfg, params, buffers, gids)
+        return out.reshape(B, F, cfg.dim)
+    cols = [embed(cfg, params, buffers, f, ids[:, f]) for f in range(F)]
+    return jnp.stack(cols, axis=1)
+
+
+def embed_bag(cfg: EmbeddingConfig, params: dict, buffers: dict, table: int,
+              ids: jax.Array, mask: jax.Array, mode: str = "sum") -> jax.Array:
+    """Multi-hot pooling: ids [B, L], mask [B, L] -> [B, dim].
+
+    JAX has no native EmbeddingBag.  When the fused backend resolves, bags
+    pool inside the Pallas engine (the [B, L, d] pre-pool tensor never leaves
+    VMEM); everything else is gather + masked reduce (plus the one-hot-matmul
+    kernel in repro/kernels/embedding_bag for full-table TPU bags).
+    """
+    scheme = get_scheme(cfg.kind)
+    backend = bke.resolve_backend(cfg, params, scheme)
+    if backend is bke.FUSED:
+        w = mask.astype(params["memory"].dtype)
+        gids = _global_ids(cfg, table, ids.reshape(-1)).reshape(ids.shape)
+        s = backend.bag(cfg, scheme, params, buffers, gids, w)
+    else:
+        e = embed(cfg, params, buffers, table, ids)      # [B, L, d]
+        w = mask.astype(e.dtype)
+        s = jnp.sum(e * w[..., None], axis=-2)
+    if mode == "sum":
+        return s
+    if mode == "mean":
+        n = jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1.0)
+        return s / n
+    raise ValueError(mode)
+
+
+def materialize_rows(cfg: EmbeddingConfig, params: dict, buffers: dict,
+                     table: int, n_rows: int | None = None) -> jax.Array:
+    """Materialize [V, d] virtual table rows (LM output heads / small vocabs only)."""
+    v = cfg.vocab_sizes[table] if n_rows is None else n_rows
+    ids = jnp.arange(v, dtype=jnp.int32)
+    return embed(cfg, params, buffers, table, ids)
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingTable:
+    """Facade over (config, scheme, backend): what models hold and call.
+
+    Frozen and hashable (wraps only the hashable config), so it is safe to
+    close over in jitted functions and to rebuild per call.
+    """
+
+    config: EmbeddingConfig
+
+    @property
+    def scheme(self):
+        return get_scheme(self.config.kind)
+
+    @property
+    def param_count(self) -> int:
+        return self.config.param_count()
+
+    def init(self, key: jax.Array) -> dict:
+        """Trainable parameter pytree (key names are checkpoint-stable)."""
+        return init_embedding(key, self.config)
+
+    def make_buffers(self, store=None) -> dict:
+        return make_buffers(self.config, store)
+
+    def embed(self, params: dict, buffers: dict, table: int,
+              ids: jax.Array) -> jax.Array:
+        return embed(self.config, params, buffers, table, ids)
+
+    def embed_fields(self, params: dict, buffers: dict,
+                     ids: jax.Array) -> jax.Array:
+        return embed_fields(self.config, params, buffers, ids)
+
+    def embed_bag(self, params: dict, buffers: dict, table: int,
+                  ids: jax.Array, mask: jax.Array,
+                  mode: str = "sum") -> jax.Array:
+        return embed_bag(self.config, params, buffers, table, ids, mask, mode)
+
+    def materialize_rows(self, params: dict, buffers: dict, table: int,
+                         n_rows: int | None = None) -> jax.Array:
+        return materialize_rows(self.config, params, buffers, table, n_rows)
+
+    def describe(self) -> dict:
+        """JSON-serializable introspection (dryrun meta / bench tables)."""
+        return self.scheme.describe(self.config)

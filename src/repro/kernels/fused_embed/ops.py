@@ -16,8 +16,11 @@ locations contribute 0 forward and scatter nothing backward — exactly the
 mask-local-gather contract of ``repro/dist/sharded_memory.py``.
 
 Dispatch: Pallas on TPU, interpret mode elsewhere.  ``fused_supported``
-gates on the slab fitting the VMEM working-set budget; callers fall back to
-the split ``locations + jnp.take`` path when it returns False.
+gates on the slab fitting the VMEM working-set budget.  Engine selection is
+owned by ``repro.embed.backends.resolve_backend``: a registered scheme
+publishes a :class:`FusedSpec` via ``Scheme.fused_spec`` and the resolver
+routes to this engine when eligible, else to the split
+``locations + jnp.take`` oracle (or the sharded psum path under a mesh).
 """
 from __future__ import annotations
 

@@ -164,6 +164,11 @@ def run_cell(arch_id: str, shape_id: str, multi_pod: bool,
         print(f"  collectives/device: {colls['total_bytes']/2**20:.1f} MiB over "
               + ", ".join(f"{k}:{v['count']}" for k, v in colls.items()
                           if isinstance(v, dict) and v["count"]))
+        emb = bundle.meta.get("embedding")
+        if emb:   # registry describe(): honest alpha from param_count()
+            print(f"  embedding: {emb['kind']} ({emb['family']}) "
+                  f"params {emb['param_count']:,} "
+                  f"alpha {emb['expansion_rate']:.1f}")
     if save:
         os.makedirs(ARTIFACT_DIR, exist_ok=True)
         fname = f"{arch_id}__{shape_id}__{mesh_name}.json"

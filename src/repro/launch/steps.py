@@ -182,12 +182,16 @@ def _recsys_batch_specs(rcfg, B: int, mesh):
 
 
 def _recsys_buffer_specs(rcfg, mesh):
+    """Buffer specs come from the scheme (Scheme.buffer_specs), not a
+    hard-coded kind list — a registered scheme's buffers show up in every
+    bundle automatically (lma's D' store, freq's hot-id table, ...)."""
+    from repro.embed import get_scheme
     e = rcfg.embedding
-    if e.kind != "lma":
+    specs = get_scheme(e.kind).buffer_specs(e, store_rows(e.total_vocab))
+    if not specs:
         return {}, {}
-    total = store_rows(e.total_vocab)
-    bufs = {"store_sets": SDS((total, e.lma.max_set), jnp.uint32),
-            "store_lengths": SDS((total,), jnp.int32)}
+    bufs = {name: SDS(shape, jnp.dtype(dt))
+            for name, (shape, dt) in specs.items()}
     sh = _shardings(mesh, bufs, shd.buffer_rules())
     return bufs, sh
 
@@ -225,7 +229,9 @@ def _recsys_bundle(arch: ArchConfig, shape_id: str, mesh) -> Bundle:
             (param_shapes, opt_shapes, bufs, batch),
             (param_sh, opt_sh, bufs_sh, batch_sh),
             (param_sh, opt_sh, NamedSharding(mesh, P())),
-            donate=(0, 1), meta={"kind": "train", "examples": B})
+            donate=(0, 1),
+            meta={"kind": "train", "examples": B,
+                  "embedding": rcfg.table.describe()})
 
     if t["kind"] == "serve":
         B = t["batch"]
@@ -240,7 +246,8 @@ def _recsys_bundle(arch: ArchConfig, shape_id: str, mesh) -> Bundle:
             arch.arch_id, shape_id, serve_step,
             (param_shapes, bufs, batch),
             (param_sh, bufs_sh, batch_sh),
-            out_sh, meta={"kind": "serve", "examples": B})
+            out_sh, meta={"kind": "serve", "examples": B,
+                          "embedding": rcfg.table.describe()})
 
     # retrieval: one context vs n_candidates, chunked inside
     C = t["n_candidates"]
@@ -260,7 +267,8 @@ def _recsys_bundle(arch: ArchConfig, shape_id: str, mesh) -> Bundle:
         (param_shapes, bufs, batch, cand),
         (param_sh, bufs_sh, batch_sh, cand_sh),
         NamedSharding(mesh, P()),
-        meta={"kind": "retrieval", "examples": C})
+        meta={"kind": "retrieval", "examples": C,
+              "embedding": rcfg.table.describe()})
 
 
 # ------------------------------------------------------------------------ GNN

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import get_config
-from repro.core.embedding import make_buffers
+from repro.core.embedding import get_scheme, make_buffers
 from repro.core.signatures import build_signature_store, densify_store
 from repro.data.lm_data import LMGenerator
 from repro.data.metrics import StreamingEval
@@ -46,12 +46,21 @@ def _recsys_setup(arch, cfg, n_s: int, batch: int):
         spec = CTRSpec(n_fields=cfg.n_fields, n_dense=cfg.n_dense,
                        vocab_sizes=e.vocab_sizes, seed=0)
         gen = CTRGenerator(spec)
+    # data preparation keyed on the scheme's declared buffer source, so a
+    # registered scheme's buffers build here without a kind check
+    scheme = get_scheme(e.kind)
     bufs = {}
-    if e.kind == "lma":
+    if scheme.buffer_source == "signatures":
         print(f"building D' ({n_s} rows)...")
         store = build_signature_store(gen.rows_for_signatures(n_s),
                                       e.total_vocab, max_per_value=e.lma.max_set)
         bufs = make_buffers(e, densify_store(store, e.lma.max_set))
+    elif scheme.buffer_source == "id_counts":
+        print(f"counting observed ids ({n_s} rows)...")
+        counts = np.zeros(e.total_vocab, np.int64)
+        for row in gen.rows_for_signatures(n_s):
+            np.add.at(counts, np.asarray(row, np.int64), 1)
+        bufs = make_buffers(e, counts)
 
     def batch_fn(step):
         return {k: jnp.asarray(v) for k, v in gen.batch(batch, step).items()}
@@ -62,6 +71,9 @@ def _recsys_setup(arch, cfg, n_s: int, batch: int):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="lma-dlrm-criteo")
+    ap.add_argument("--embedding-kind", default=None,
+                    help="override the arch's embedding scheme (any "
+                         "registered kind, e.g. freq); recsys archs only")
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced config (required for LM archs here)")
     ap.add_argument("--steps", type=int, default=300)
@@ -72,8 +84,10 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     arch = get_config(args.arch)
-    cfg = arch.make_smoke() if (args.smoke or arch.family == "lm") \
-        else arch.make_model(None)
+    kind_kw = {} if args.embedding_kind is None \
+        else {"embedding_kind": args.embedding_kind}
+    cfg = arch.make_smoke(**kind_kw) if (args.smoke or arch.family == "lm") \
+        else arch.make_model(None, **kind_kw)
 
     if arch.family == "recsys":
         gen, bufs, batch_fn, loss_fn = _recsys_setup(

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.embedding import EmbeddingConfig, embed, init_embedding
+from repro.embed import EmbeddingConfig, EmbeddingTable
 from repro.nn.modules import dense_init, mlp, mlp_init
 
 
@@ -49,7 +49,7 @@ def init(key, cfg: GATConfig) -> dict:
     params = {}
     keys = jax.random.split(key, cfg.n_layers + 2)
     if cfg.node_id_embedding is not None:
-        params["node_embed"] = init_embedding(keys[-1], cfg.node_id_embedding)
+        params["node_embed"] = EmbeddingTable(cfg.node_id_embedding).init(keys[-1])
     d_prev = cfg.d_in
     for li in range(cfg.n_layers):
         last = li == cfg.n_layers - 1
@@ -117,8 +117,9 @@ def forward(params: dict, cfg: GATConfig, batch: dict) -> jax.Array:
     """batch: {features [N,F] | node_ids [N], src [E], dst [E], n_nodes,
     (graph_ids [N], n_graphs for readout)} -> logits."""
     if cfg.node_id_embedding is not None:
-        x = embed(cfg.node_id_embedding, params["node_embed"],
-                  batch.get("buffers", {}), 0, batch["node_ids"])
+        x = EmbeddingTable(cfg.node_id_embedding).embed(
+            params["node_embed"], batch.get("buffers", {}), 0,
+            batch["node_ids"])
     else:
         x = batch["features"].astype(cfg.jdtype)
     src, dst = batch["src"], batch["dst"]

@@ -1,7 +1,8 @@
 """RecSys / CTR model zoo: DLRM, DCN-v2, xDeepFM, DIN.
 
-Every model draws categorical embeddings through ``repro.core.embedding`` — the
-paper's LMA (and each baseline: full / hashed / QR / MD) is a config switch on
+Every model draws categorical embeddings through one ``repro.embed``
+:class:`EmbeddingTable` — the paper's LMA (and every registered baseline:
+full / hashed / QR / MD / freq / ...) is a config switch on
 ``EmbeddingConfig.kind``, with one common memory across all fields ("Common
 Memory", paper section 5).
 
@@ -27,8 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.embedding import (EmbeddingConfig, embed, embed_bag,
-                                  embed_fields, init_embedding, make_buffers)
+from repro.embed import EmbeddingConfig, EmbeddingTable
 from repro.nn.modules import dense, dense_init, mlp, mlp_init
 
 
@@ -54,6 +54,10 @@ class RecsysConfig:
     @property
     def n_fields(self) -> int:
         return self.embedding.n_tables
+
+    @property
+    def table(self) -> EmbeddingTable:
+        return EmbeddingTable(self.embedding)
 
     @property
     def jdtype(self):
@@ -87,7 +91,7 @@ def init(key, cfg: RecsysConfig) -> dict:
     keys = jax.random.split(key, 8)
     d = cfg.embedding.dim
     F = cfg.n_fields
-    params: dict = {"embedding": init_embedding(keys[0], cfg.embedding)}
+    params: dict = {"embedding": cfg.table.init(keys[0])}
     if cfg.model == "dlrm":
         params["bot"] = mlp_init(keys[1], [cfg.n_dense, *cfg.bot_mlp])
         n_feats = F + 1                      # fields + bottom-mlp output
@@ -112,7 +116,7 @@ def init(key, cfg: RecsysConfig) -> dict:
         params["cin_out"] = dense_init(keys[2], sum(cfg.cin_layers), 1)
         params["deep"] = mlp_init(keys[3], [F * d, *cfg.deep_mlp, 1])
         # first-order (wide) term: dim-1 embedding per field, common memory too
-        params["linear"] = init_embedding(keys[4], _linear_cfg(cfg))
+        params["linear"] = EmbeddingTable(_linear_cfg(cfg)).init(keys[4])
     elif cfg.model == "din":
         att_in = 4 * d
         params["att"] = mlp_init(keys[1], [att_in, *cfg.attn_mlp, 1])
@@ -143,10 +147,10 @@ def forward(params: dict, cfg: RecsysConfig, batch: dict,
             buffers: dict | None = None) -> jax.Array:
     """-> logits [B]."""
     buffers = buffers or {}
-    e = cfg.embedding
     if cfg.model == "din":
         return _din_forward(params, cfg, batch, buffers)
-    feats = embed_fields(e, params["embedding"], buffers, batch["sparse"])  # [B,F,d]
+    feats = cfg.table.embed_fields(params["embedding"], buffers,
+                                   batch["sparse"])              # [B,F,d]
     B = feats.shape[0]
     if cfg.model == "dlrm":
         bot = mlp(params["bot"], batch["dense"].astype(cfg.jdtype), act=jax.nn.relu,
@@ -172,8 +176,8 @@ def forward(params: dict, cfg: RecsysConfig, batch: dict,
             pools.append(jnp.sum(xk, axis=-1))                              # [B, Ho]
         cin_logit = dense(params["cin_out"], jnp.concatenate(pools, -1))[:, 0]
         deep_logit = mlp(params["deep"], feats.reshape(B, -1))[:, 0]
-        lin = embed_fields(_linear_cfg(cfg), params["linear"], buffers,
-                           batch["sparse"])                                 # [B,F,1]
+        lin = EmbeddingTable(_linear_cfg(cfg)).embed_fields(
+            params["linear"], buffers, batch["sparse"])                     # [B,F,1]
         lin_logit = jnp.sum(lin, axis=(1, 2))
         return cin_logit + deep_logit + lin_logit
     raise ValueError(cfg.model)
@@ -190,9 +194,9 @@ def _din_attention(params, cfg, e_hist, mask, e_t):
 
 
 def _din_forward(params, cfg, batch, buffers):
-    e = cfg.embedding
-    e_hist = embed(e, params["embedding"], buffers, 0, batch["hist"])   # [B,L,d]
-    e_t = embed(e, params["embedding"], buffers, 0, batch["target"])    # [B,d]
+    t = cfg.table
+    e_hist = t.embed(params["embedding"], buffers, 0, batch["hist"])    # [B,L,d]
+    e_t = t.embed(params["embedding"], buffers, 0, batch["target"])     # [B,d]
     pooled = _din_attention(params, cfg, e_hist, batch["hist_mask"], e_t)
     head_in = [pooled, e_t, pooled * e_t]
     if cfg.n_dense:

@@ -6,7 +6,7 @@ qwen1.5-32b, tinyllama-1.1b, deepseek-v3-671b, llama4-scout-17b-16e):
   * dense FFN, or MoE (shared + routed, top-k, sigmoid/softmax router), with
     ``first_k_dense`` leading dense layers and ``moe_freq`` interleaving
   * optional LMA-compressed vocab embedding (the paper's technique applied to
-    the token table) via ``repro.core.embedding``
+    the token table) via a ``repro.embed`` EmbeddingTable
 
 Layers with identical structure are *stacked* (params carry a leading layer
 axis) and executed with ``lax.scan`` — compile time stays flat in depth, which
@@ -24,8 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.embedding import (EmbeddingConfig, embed, init_embedding,
-                                  make_buffers, materialize_rows)
+from repro.embed import EmbeddingConfig, EmbeddingTable
 from repro.nn.attention import (GQAConfig, MLAConfig, gqa_decode, gqa_init,
                                 gqa_train, mla_decode, mla_init, mla_train)
 from repro.nn.modules import (dense, dense_init, glu_ffn, glu_ffn_init,
@@ -118,7 +117,7 @@ def init(key, cfg: TransformerConfig) -> dict:
         params["embed"] = {"table_0": (jax.random.normal(
             keys[0], (cfg.vocab_size, cfg.d_model)) * scale).astype(cfg.jdtype)}
     else:
-        params["embed"] = init_embedding(keys[0], cfg.embedding)
+        params["embed"] = EmbeddingTable(cfg.embedding).init(keys[0])
     if not cfg.tied_embeddings:
         params["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.vocab_size,
                                        bias=False, dtype=cfg.jdtype)
@@ -172,7 +171,8 @@ def embed_tokens(params: dict, cfg: TransformerConfig, tokens: jax.Array,
                  buffers: dict | None = None) -> jax.Array:
     if cfg.embedding is None:
         return jnp.take(params["embed"]["table_0"], tokens, axis=0)
-    return embed(cfg.embedding, params["embed"], buffers or {}, 0, tokens)
+    return EmbeddingTable(cfg.embedding).embed(params["embed"],
+                                               buffers or {}, 0, tokens)
 
 
 def _output_table(params: dict, cfg: TransformerConfig, buffers: dict | None):
@@ -181,7 +181,8 @@ def _output_table(params: dict, cfg: TransformerConfig, buffers: dict | None):
         return params["lm_head"]["kernel"].T
     if cfg.embedding is None:
         return params["embed"]["table_0"]
-    return materialize_rows(cfg.embedding, params["embed"], buffers or {}, 0)
+    return EmbeddingTable(cfg.embedding).materialize_rows(
+        params["embed"], buffers or {}, 0)
 
 
 def forward(params: dict, cfg: TransformerConfig, tokens: jax.Array,

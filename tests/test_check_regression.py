@@ -8,7 +8,8 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.check_regression import BASELINE, compare, load_rows
+from benchmarks.check_regression import (BASELINE, compare, load_rows,
+                                         missing_schemes)
 
 
 def _rows(**kernels):
@@ -35,6 +36,17 @@ def test_missing_row_flagged_new_row_allowed():
     failures = compare(base, fresh, 1.3)
     assert len(failures) == 1
     assert "missing" in failures[0]
+
+
+def test_missing_scheme_row_flagged():
+    """The registry-coverage gate: a ledger whose sweep lacks a registered
+    scheme fails; one row per registered scheme passes."""
+    from repro.embed import list_schemes
+    full = {(f"scheme_embed_{k}", "s"): 1.0 for k in list_schemes()}
+    assert missing_schemes(full) == []
+    partial = dict(full)
+    partial.pop(("scheme_embed_freq", "s"))
+    assert missing_schemes(partial) == ["freq"]
 
 
 def test_committed_baseline_has_fused_rows():
