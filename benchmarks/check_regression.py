@@ -2,11 +2,14 @@
 
 Diffs a fresh kernel-bench ledger against the committed baseline and fails
 (exit 1) when any kernel row regresses by more than ``--max-ratio`` (default
-1.3x), when a baseline row disappears from the fresh run, or when a
+1.3x), when a baseline row disappears from the fresh run, when a
 registered embedding scheme has no ``scheme_embed_*`` row in the fresh sweep
 (the sweep enumerates ``repro.embed.list_schemes()``, so a newly registered
-scheme is benched — and gated — automatically).  New rows are allowed (they
-become baseline once committed).
+scheme is benched — and gated — automatically), or when the sparse
+memory-pool update loses its edge over the dense O(m) step
+(``sparse_speedup_failures``: modeled per-step HBM traffic must stay >= 3x
+better AND measured wall-clock strictly faster).  New rows are allowed
+(they become baseline once committed).
 
 Usage:
   python benchmarks/check_regression.py                 # re-run bench, diff
@@ -35,6 +38,16 @@ import sys
 BASELINE = os.path.join(os.path.dirname(__file__), "..", "experiments",
                         "bench", "BENCH_kernels.json")
 MAX_RATIO = 1.3
+# the sparse memory-pool optimizer step must stay >= this much faster than
+# the dense O(m) step at the paper shape (4096x32 @ m=2^21), measured on the
+# modeled per-step HBM bytes (bench_kernels.modeled_update_bytes — the
+# bandwidth quantity the engine optimizes and the only one stable across
+# backends; XLA:CPU wall-clock is scatter-serialization bound and
+# understates the win) ...
+SPARSE_SPEEDUP_MIN = 3.0
+# ... while the measured wall-clock must still show the sparse update
+# strictly beating dense on this machine
+SPARSE_WALL_MIN = 1.15
 
 
 def load_rows(path_or_doc) -> dict[tuple[str, str], float]:
@@ -57,6 +70,49 @@ def missing_schemes(fresh: dict) -> list[str]:
         return []
     benched = {k for (k, _shape) in fresh}
     return [k for k in list_schemes() if f"scheme_embed_{k}" not in benched]
+
+
+def sparse_speedup_failures(fresh: dict, fresh_doc: dict | None = None,
+                            min_ratio: float = SPARSE_SPEEDUP_MIN,
+                            min_wall: float = SPARSE_WALL_MIN) -> list[str]:
+    """The absolute perf claim of the sparse-update engine, enforced on the
+    fresh ledger itself (not just ratcheted against the baseline):
+
+      * the modeled per-step HBM traffic advantage
+        (``modeled_update_bytes_per_step.speedup``) must be >= min_ratio;
+      * at every shared shape the measured sparse_update_adagrad wall time
+        must beat dense_update_adagrad by >= min_wall.
+    """
+    sparse = {s: us for (k, s), us in fresh.items()
+              if k == "sparse_update_adagrad"}
+    dense = {s: us for (k, s), us in fresh.items()
+             if k == "dense_update_adagrad"}
+    if not sparse:
+        return ["sparse_update_adagrad row missing from the fresh ledger "
+                "(the sparse-vs-dense gate cannot run)"]
+    failures = []
+    if fresh_doc is not None:
+        modeled = fresh_doc.get("modeled_update_bytes_per_step")
+        if not modeled:
+            failures.append("modeled_update_bytes_per_step missing from the "
+                            "fresh ledger (the sparse-update gate cannot run)")
+        elif modeled["speedup"] < min_ratio:
+            failures.append(
+                f"sparse update modeled speedup {modeled['speedup']:.2f}x < "
+                f"{min_ratio:.1f}x ({modeled['sparse']} vs "
+                f"{modeled['dense']} bytes/step)")
+    for shape, s_us in sorted(sparse.items()):
+        if shape not in dense:
+            failures.append(f"dense_update_adagrad [{shape}]: row missing "
+                            f"(no dense twin for the sparse-update gate)")
+            continue
+        ratio = dense[shape] / max(s_us, 1e-9)
+        if ratio < min_wall:
+            failures.append(
+                f"sparse_update_adagrad [{shape}]: {ratio:.2f}x vs dense "
+                f"({s_us:.1f} us vs {dense[shape]:.1f} us; wall gate "
+                f"requires >= {min_wall:.2f}x)")
+    return failures
 
 
 def compare(baseline: dict, fresh: dict,
@@ -86,7 +142,9 @@ def main(argv=None) -> int:
 
     baseline = load_rows(args.baseline)
     if args.fresh is not None:
-        fresh = load_rows(args.fresh)
+        with open(args.fresh) as f:
+            fresh_doc = json.load(f)
+        fresh = load_rows(fresh_doc)
     else:
         root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
         sys.path.insert(0, root)                       # benchmarks.*
@@ -98,7 +156,9 @@ def main(argv=None) -> int:
             from benchmarks.bench_kernels import run
             for line in run():       # writes the repo ledger (BASELINE path)
                 print(line)
-            fresh = load_rows(BASELINE)
+            with open(BASELINE) as f:
+                fresh_doc = json.load(f)
+            fresh = load_rows(fresh_doc)
             fresh_path = BASELINE.replace(".json", ".fresh.json")
             os.replace(BASELINE, fresh_path)
             print(f"fresh ledger -> {fresh_path}")
@@ -112,6 +172,7 @@ def main(argv=None) -> int:
     failures = compare(baseline, fresh, args.max_ratio)
     failures += [f"registered scheme {k!r} missing from the bench sweep"
                  for k in missing_schemes(fresh)]
+    failures += sparse_speedup_failures(fresh, fresh_doc)
     if failures:
         print(f"REGRESSION ({len(failures)} row(s)):")
         for f in failures:

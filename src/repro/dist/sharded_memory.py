@@ -163,6 +163,80 @@ def sharded_hashed_lookup(memory: jax.Array, gids: jax.Array, d: int, m: int,
     return fn(memory, gids)
 
 
+# ------------------------------------------------------- sparse slab updates
+#
+# The sparse-gradient pipeline (repro/optim/sparse.py) replaces the dense
+# psum'd [m_local] pool gradient with one replicated (indices, values) pair —
+# K = touched slots << m.  Each device then applies a *masked local* sparse
+# update to its own slab: gather the in-slab subset, run the O(K) moment
+# math, scatter back; out-of-slab entries route to a dropped sentinel index.
+# (The all-to-all alternative — exchanging only each rank's owned slice of
+# (indices, values) — trades the replicated K vectors for index traffic; at
+# the 2x4 bench shape the masked-local form wins because K is already tiny
+# next to the slab, so it is the one wired here.  Revisit if K grows past
+# m_local.)  Untouched slots never see a write, so per-device HBM traffic is
+# O(K), not O(m_local).
+
+
+def _slab_mask(idx, n_local, axis_name="model"):
+    """(local gather idx, drop-sentinel scatter idx, in-slab mask)."""
+    rank = jax.lax.axis_index(axis_name)
+    rel = idx - rank * n_local
+    mine = (rel >= 0) & (rel < n_local)
+    return jnp.clip(rel, 0, n_local - 1), jnp.where(mine, rel, n_local), mine
+
+
+def sharded_sparse_update(algo: str, indices, values, states: tuple,
+                          hyper: dict, mesh):
+    """Run one sparse optimizer update on 'model'-sharded moment slabs.
+
+    ``indices [K]`` / ``values [K, ...]`` follow the SparseGrad contract
+    (sorted unique, sentinel-padded).  Returns (update_values [K, ...]
+    replicated via psum — exactly one rank owns each live slot — and the new
+    slab tree).  Must be called OUTSIDE shard_map (it opens its own).
+    """
+    from repro.kernels.sparse_update.ops import sparse_update
+
+    # traced hyper-parameters (adam's step-dependent bias corrections) must
+    # enter the shard_map as explicit replicated inputs, not closures
+    tkeys = sorted(k for k, v in hyper.items() if isinstance(v, jax.Array))
+    static = {k: v for k, v in hyper.items() if k not in tkeys}
+    targs = [jnp.asarray(hyper[k]) for k in tkeys]
+
+    def body(idx, vals, *rest):
+        tvals, st_l = rest[: len(tkeys)], rest[len(tkeys):]
+        n_local = st_l[0].shape[0]
+        _, scat, mine = _slab_mask(idx, n_local)
+        vmask = mine.reshape(mine.shape + (1,) * (vals.ndim - 1))
+        lvals = jnp.where(vmask, vals, 0)
+        u, new_st = sparse_update(algo, scat, lvals, st_l,
+                                  **dict(static, **dict(zip(tkeys, tvals))))
+        return (jax.lax.psum(u, "model"),) + tuple(new_st)
+
+    nst = len(states)
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(), P()) + (P(),) * len(tkeys)
+                   + (P("model"),) * nst,
+                   out_specs=(P(),) + (P("model"),) * nst,
+                   check_vma=False)
+    out = fn(indices, values, *targs, *states)
+    return out[0], tuple(out[1:])
+
+
+def sharded_sparse_apply(param: jax.Array, indices, values, mesh):
+    """Masked local scatter-add of SparseGrad update values into the
+    'model'-sharded parameter slab (the sparse ``apply_updates``)."""
+
+    def body(p_l, idx, vals):
+        _, scat, mine = _slab_mask(idx, p_l.shape[0])
+        vmask = mine.reshape(mine.shape + (1,) * (vals.ndim - 1))
+        return p_l.at[scat].add(jnp.where(vmask, vals, 0), mode="drop")
+
+    fn = shard_map(body, mesh=mesh, in_specs=(P("model"), P(), P()),
+                   out_specs=P("model"), check_vma=False)
+    return fn(param, indices, values)
+
+
 def sharded_lma_lookup(memory: jax.Array, store_sets: jax.Array,
                        store_lengths: jax.Array, gids: jax.Array,
                        params: LMAParams, mesh, dp_axes) -> jax.Array:

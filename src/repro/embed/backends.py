@@ -117,6 +117,23 @@ SPLIT = SplitBackend()
 FUSED = FusedBackend()
 
 
+def sparse_locations(cfg: EmbeddingConfig, scheme: Scheme, params: dict,
+                     buffers: dict, gids: jax.Array) -> jax.Array:
+    """[N] gids -> [N, d] locations for sparse-gradient recording.
+
+    This is the per-backend form of the sparse-grads flag: when the fused
+    engine is eligible its in-VMEM location kernel emits the tensor (the
+    same hash math the scatter kernel would have recomputed to *consume*);
+    otherwise the scheme's split oracle computes it.  Either way the result
+    is bit-identical to ``scheme.locations``."""
+    if sharded_ctx() is None and fused_eligible(cfg, scheme, params):
+        from repro.kernels.fused_embed import ops as fe
+        spec = scheme.fused_spec(cfg)
+        extra = scheme.fused_inputs(cfg, buffers, gids)
+        return fe.fused_locations(spec, gids, *extra)
+    return scheme.locations(cfg, buffers, gids)
+
+
 def resolve_backend(cfg: EmbeddingConfig, params: dict,
                     scheme: Scheme | None = None):
     """The dispatch policy, in one inspectable place.

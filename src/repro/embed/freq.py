@@ -103,23 +103,26 @@ class FreqScheme(Scheme):
             hot = jnp.arange(self.hot_k(cfg), dtype=jnp.int32)
         return hot
 
-    def locations(self, cfg, buffers, gids):
-        d = cfg.dim
+    def sparse_row_ids(self, cfg, buffers, gids):
+        """Pool row per gid (hot rank or k + tail hash) — the row index of
+        ``locations``, shared bit-for-bit."""
         hot = self._hot_ids(cfg, buffers)
         k = int(hot.shape[0])
-        tail_rows = (cfg.budget - k * d) // d
-        lane = jnp.arange(d, dtype=jnp.int32)[None, :]
+        tail_rows = (cfg.budget - k * cfg.dim) // cfg.dim
         gi = gids.astype(jnp.int32)
         seeds = seed_stream(cfg.seed ^ 0x0F5EC, 1)
         row = (hash_u32(gids.astype(jnp.uint32), seeds[0])
                % jnp.uint32(max(tail_rows, 1))).astype(jnp.int32)
-        tail_loc = (k + row)[:, None] * d + lane
         if k == 0:
-            return tail_loc
+            return row
         rank = jnp.clip(jnp.searchsorted(hot, gi), 0, k - 1).astype(jnp.int32)
         is_hot = jnp.take(hot, rank) == gi
-        hot_loc = rank[:, None] * d + lane
-        return jnp.where(is_hot[:, None], hot_loc, tail_loc)
+        return jnp.where(is_hot, rank, k + row)
+
+    def locations(self, cfg, buffers, gids):
+        lane = jnp.arange(cfg.dim, dtype=jnp.int32)[None, :]
+        return self.sparse_row_ids(cfg, buffers, gids)[:, None] * cfg.dim \
+            + lane
 
     def extra_describe(self, cfg):
         return {"hot_k": self.hot_k(cfg), "tail_rows": self.tail_rows(cfg)}

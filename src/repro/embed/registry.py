@@ -134,6 +134,19 @@ class Scheme:
         mask-local-gather over ``locations`` (dist.sharded_memory)."""
         return NotImplemented
 
+    def sparse_row_ids(self, cfg: "EmbeddingConfig", buffers: dict,
+                       gids: jax.Array):
+        """[N] pool row ids when this scheme's locations are d-aligned rows
+        (``locations == rows[:, None] * dim + arange(dim)``), else None.
+
+        Row-aligned schemes (hashed_row, freq) let the sparse-gradient
+        pipeline carry one index per row instead of d element locations —
+        d-times smaller index traffic and a contiguous-row scatter, the
+        layout production DLRM sparse optimizers (row-wise Adagrad/Adam)
+        assume.  Semantics are unchanged: Adagrad/SGD moments stay
+        elementwise within the row."""
+        return None
+
     # -------------------------------------------- table-family embed hook
     def embed_rows(self, cfg: "EmbeddingConfig", params: dict, table: int,
                    flat_ids: jax.Array) -> jax.Array:

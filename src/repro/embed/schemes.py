@@ -90,6 +90,15 @@ class HashedRowScheme(_HashedBase):
     def locations(self, cfg, buffers, gids):
         return alc.alloc_hashed_row(gids, cfg.dim, cfg.budget, cfg.seed)
 
+    def sparse_row_ids(self, cfg, buffers, gids):
+        # the row index of alloc_hashed_row, bit-for-bit
+        from repro.core.hashing import hash_u32, seed_stream
+        n_rows = max(cfg.budget // cfg.dim, 1)
+        seeds = seed_stream(cfg.seed, 1)
+        row = hash_u32(gids.astype(jnp.uint32), seeds[0]) \
+            % jnp.uint32(n_rows)
+        return row.astype(jnp.int32)
+
 
 # ---------------------------------------------------------------------- lma
 

@@ -40,8 +40,34 @@ def make_buffers(cfg: EmbeddingConfig, store=None) -> dict:
 
 def _memory_lookup(cfg: EmbeddingConfig, params: dict, buffers: dict,
                    gids: jax.Array) -> jax.Array:
-    """[N] global ids -> [N, d] via the resolved backend (memory family)."""
+    """[N] global ids -> [N, d] via the resolved backend (memory family).
+
+    Under an active sparse-gradient trace (``repro.optim.sparse``) the
+    lookup cooperates with the two-pass engine: the *record* pass emits the
+    [N, d] location tensor (everything else dead-codes away) and the
+    *provide* pass runs the real lookup with the pool behind stop_gradient
+    plus an additive zero tap whose cotangent carries the sparse values —
+    the dense zeros(m) pool gradient is never materialized.
+    """
+    from repro.optim import sparse as _sparse
     scheme = get_scheme(cfg.kind)
+    st = _sparse.active()
+    if st is not None and st.mode == "record":
+        rows = scheme.sparse_row_ids(cfg, buffers, gids)
+        # row mode needs the pool to tile exactly into d-wide rows; a
+        # ragged budget (m % d != 0) falls back to element-level records
+        if rows is not None and scheme.memory_slots(cfg) % cfg.dim == 0:
+            st.record_rows(params["memory"], rows, cfg.dim)
+        else:
+            loc = bke.sparse_locations(cfg, scheme, params, buffers, gids)
+            st.record(params["memory"], loc)
+        return jnp.zeros((gids.shape[0], cfg.dim), params["memory"].dtype)
+    if st is not None and st.mode == "provide":
+        tap = st.next_tap((gids.shape[0], cfg.dim))
+        params = dict(params,
+                      memory=jax.lax.stop_gradient(params["memory"]))
+        backend = bke.resolve_backend(cfg, params, scheme)
+        return backend.lookup(cfg, scheme, params, buffers, gids) + tap
     backend = bke.resolve_backend(cfg, params, scheme)
     return backend.lookup(cfg, scheme, params, buffers, gids)
 
@@ -88,9 +114,13 @@ def embed_bag(cfg: EmbeddingConfig, params: dict, buffers: dict, table: int,
     VMEM); everything else is gather + masked reduce (plus the one-hot-matmul
     kernel in repro/kernels/embedding_bag for full-table TPU bags).
     """
+    from repro.optim import sparse as _sparse
     scheme = get_scheme(cfg.kind)
     backend = bke.resolve_backend(cfg, params, scheme)
-    if backend is bke.FUSED:
+    if backend is bke.FUSED and _sparse.active() is None:
+        # under a sparse-grad trace bags decompose into embed + masked
+        # reduce, so the per-element lookup carries the tap and the values
+        # cotangent arrives pre-weighted (g[b] * w[b, l]) for free
         w = mask.astype(params["memory"].dtype)
         gids = _global_ids(cfg, table, ids.reshape(-1)).reshape(ids.shape)
         s = backend.bag(cfg, scheme, params, buffers, gids, w)

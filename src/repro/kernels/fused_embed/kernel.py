@@ -189,6 +189,19 @@ def _scatter_kernel(*refs, scheme, d, n_h, m, min_support, independent, pool):
         jnp.clip(rel, 0, n_local - 1).reshape(-1)].add(upd.reshape(-1))
 
 
+def _locations_kernel(*refs, scheme, d, n_h, m, min_support, independent):
+    """Emit the [bb, d] int32 location block — the same in-tile hash math the
+    scatter kernel recomputes, emitted instead of consumed.  This is what the
+    sparse-gradient pipeline (repro/optim/sparse.py) records: indices for a
+    SparseGrad whose values are the lookup-output cotangent."""
+    n_loc = N_LOC_INPUTS[scheme]
+    out_ref = refs[n_loc]
+    loc, bshape = _tile_locations(scheme, refs[:n_loc], d=d, n_h=n_h, m=m,
+                                  min_support=min_support,
+                                  independent=independent)
+    out_ref[...] = loc.reshape(*bshape, d)
+
+
 def _weight_grad_kernel(*refs, scheme, d, n_h, m, min_support, independent):
     """dw[b, l] = <g[b], M[loc[b, l]]> for the bag's weight cotangent."""
     n_loc = N_LOC_INPUTS[scheme]
@@ -258,6 +271,24 @@ def fused_lookup_fwd_pallas(scheme, memory, loc_inputs, base, weights=None, *,
         out_shape=jax.ShapeDtypeStruct((B, d), memory.dtype),
         interpret=interpret,
     )(*args)
+
+
+def fused_locations_pallas(scheme, loc_inputs, *, d, n_h=4, m, min_support=2,
+                           independent=True, block_b=256, interpret=False):
+    """-> [B, d] int32 locations, hashed per batch tile in VMEM."""
+    B = loc_inputs[1].shape[0] if scheme == "lma" else loc_inputs[0].shape[0]
+    bb = min(block_b, B)
+    assert B % bb == 0, (B, bb)
+    kern = functools.partial(_locations_kernel,
+                             **_static(scheme, d, n_h, m, min_support,
+                                       independent))
+    return pl.pallas_call(
+        kern, grid=(B // bb,),
+        in_specs=_loc_specs(scheme, loc_inputs, bb, pool=False),
+        out_specs=pl.BlockSpec((bb, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, d), jnp.int32),
+        interpret=interpret,
+    )(*loc_inputs)
 
 
 def fused_scatter_add_pallas(scheme, g, loc_inputs, base, m_local, dtype,

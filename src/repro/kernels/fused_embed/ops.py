@@ -3,6 +3,13 @@
 ``fused_lookup``  : signature sets / value ids -> [N, d] embeddings.
 ``fused_embed_bag``: multi-hot [B, L] inputs -> [B, d] weighted-sum bags,
                      the [B, L, d] pre-pool tensor never materialized.
+``fused_locations``: the backward pass's in-tile location recomputation
+                     *emitted* as a [N, d] tensor — the indices of the
+                     sparse-gradient pipeline (``repro.optim.sparse``).
+
+Batches are padded to power-of-two buckets OUTSIDE the jitted entries
+(``_pad_batch``), so serving/eval batch-size jitter compiles at most
+log2(B) engine variants instead of one per batch size.
 
 Both differentiate through a custom VJP whose backward is a Pallas
 scatter-add kernel into the memory gradient; locations are *recomputed* in
@@ -36,7 +43,8 @@ import jax.numpy as jnp
 from repro.core.allocation import LMAParams
 from repro.core.hashing import seed_stream
 from repro.core.signatures import DenseSignatureStore
-from repro.kernels.fused_embed.kernel import (fused_lookup_fwd_pallas,
+from repro.kernels.fused_embed.kernel import (fused_locations_pallas,
+                                              fused_lookup_fwd_pallas,
                                               fused_scatter_add_pallas,
                                               fused_weight_grad_pallas)
 
@@ -117,11 +125,25 @@ def _kern_kwargs(spec: FusedSpec, interpret: bool, block_b: int) -> dict:
                 block_b=block_b, interpret=interpret)
 
 
-def _pad_batch(bb: int, *arrays):
-    """Pad dim 0 up to a multiple of ``bb``; PAD-fill uint32 set arrays so
-    padded rows hash as empty sets, 0-fill everything else."""
+def _pow2_ceil(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def _pow2_floor(n: int) -> int:
+    return 1 << (max(n, 1).bit_length() - 1)
+
+
+def _pad_batch(b_pad: int, *arrays):
+    """Pad dim 0 up to exactly ``b_pad``; PAD-fill uint32 set arrays so
+    padded rows hash as empty sets, 0-fill everything else.
+
+    Batches are bucketed to the next power of two (``_pow2_ceil``) *outside*
+    the jitted engine entry points, so serving/eval batch-size jitter hits at
+    most log2(B) distinct shapes instead of compiling a fresh Pallas kernel
+    per batch size (``tests/test_sparse_update.py`` counts compilations).
+    Padded rows read 0 forward and carry a 0 cotangent backward, so results
+    are bit-identical to the unpadded oracle."""
     B = arrays[0].shape[0]
-    b_pad = -(-B // bb) * bb
     if b_pad == B:
         return arrays
     out = []
@@ -138,16 +160,18 @@ def _f0(x):
 
 
 # ----------------------------------------------------------- flat lookup VJP
+#
+# The VJP pair operates on the already-bucketed batch (the public wrappers
+# pad to a power of two and slice, OUTSIDE the jitted entry points): the
+# engine compiles once per bucket, and the slice transpose 0-pads the
+# cotangent for free.
 
 @partial(jax.custom_vjp, nondiff_argnums=(0, 1))
 def _lookup(spec, interpret, memory, sets, gids, support, base):
-    B = gids.shape[0]
-    bb = min(_BLOCK_B, max(B, 1))
-    sets_p, gids_p, support_p = _pad_batch(bb, sets, gids, support)
-    out = fused_lookup_fwd_pallas(
-        spec.scheme, memory, _loc_inputs(spec, sets_p, gids_p, support_p),
+    bb = min(_BLOCK_B, max(gids.shape[0], 1))
+    return fused_lookup_fwd_pallas(
+        spec.scheme, memory, _loc_inputs(spec, sets, gids, support),
         base, **_kern_kwargs(spec, interpret, bb))
-    return out[:B]
 
 
 def _lookup_fwd(spec, interpret, memory, sets, gids, support, base):
@@ -160,12 +184,10 @@ def _lookup_fwd(spec, interpret, memory, sets, gids, support, base):
 def _lookup_bwd(spec, interpret, res, g):
     sets, gids, support, base, memory = res
     m_local, mdtype = memory.shape[0], memory.dtype
-    B = gids.shape[0]
-    bb = min(_BLOCK_B, max(B, 1))
-    sets_p, gids_p, support_p, g_p = _pad_batch(bb, sets, gids, support, g)
+    bb = min(_BLOCK_B, max(gids.shape[0], 1))
     dmem = fused_scatter_add_pallas(
-        spec.scheme, g_p.astype(mdtype),
-        _loc_inputs(spec, sets_p, gids_p, support_p), base, m_local, mdtype,
+        spec.scheme, g.astype(mdtype),
+        _loc_inputs(spec, sets, gids, support), base, m_local, mdtype,
         **_kern_kwargs(spec, interpret, bb))
     return dmem, _f0(sets), _f0(gids), _f0(support), _f0(base)
 
@@ -178,13 +200,11 @@ _lookup.defvjp(_lookup_fwd, _lookup_bwd)
 @partial(jax.custom_vjp, nondiff_argnums=(0, 1))
 def _bag(spec, interpret, memory, sets, gids, support, weights, base):
     B, L = gids.shape
-    bb = _bag_block(B, L)
-    sets_p, gids_p, support_p, w_p = _pad_batch(bb, sets, gids, support,
-                                                weights)
     out = fused_lookup_fwd_pallas(
-        spec.scheme, memory, _loc_inputs(spec, sets_p, gids_p, support_p),
-        base, weights=w_p, **_kern_kwargs(spec, interpret, bb))
-    return out[:B]
+        spec.scheme, memory, _loc_inputs(spec, sets, gids, support),
+        base, weights=weights, **_kern_kwargs(spec, interpret,
+                                              _bag_block(B, L)))
+    return out
 
 
 def _bag_fwd(spec, interpret, memory, sets, gids, support, weights, base):
@@ -195,16 +215,13 @@ def _bag_fwd(spec, interpret, memory, sets, gids, support, weights, base):
 def _bag_bwd(spec, interpret, res, g):
     memory, sets, gids, support, weights, base = res
     B, L = gids.shape
-    bb = _bag_block(B, L)
-    sets_p, gids_p, support_p, w_p, g_p = _pad_batch(
-        bb, sets, gids, support, weights, g)
-    loc_inputs = _loc_inputs(spec, sets_p, gids_p, support_p)
-    kw = _kern_kwargs(spec, interpret, bb)
+    loc_inputs = _loc_inputs(spec, sets, gids, support)
+    kw = _kern_kwargs(spec, interpret, _bag_block(B, L))
     dmem = fused_scatter_add_pallas(
-        spec.scheme, g_p.astype(memory.dtype), loc_inputs, base,
-        memory.shape[0], memory.dtype, weights=w_p, **kw)
+        spec.scheme, g.astype(memory.dtype), loc_inputs, base,
+        memory.shape[0], memory.dtype, weights=weights, **kw)
     dw = fused_weight_grad_pallas(
-        spec.scheme, memory, g_p, loc_inputs, base, L, **kw)[:B]
+        spec.scheme, memory, g, loc_inputs, base, L, **kw)
     return (dmem, _f0(sets), _f0(gids), _f0(support),
             dw.astype(weights.dtype), _f0(base))
 
@@ -213,7 +230,8 @@ _bag.defvjp(_bag_fwd, _bag_bwd)
 
 
 def _bag_block(B: int, L: int) -> int:
-    return min(max(B, 1), max(_BLOCK_ELEMS // max(L, 1), 1))
+    """Power-of-two bag tile (divides the pow2-bucketed batch evenly)."""
+    return min(max(B, 1), _pow2_floor(max(_BLOCK_ELEMS // max(L, 1), 1)))
 
 
 # ------------------------------------------------------------- public entry
@@ -226,6 +244,14 @@ def _lookup_jit(spec, memory, sets, gids, support, base, interpret):
 @partial(jax.jit, static_argnums=(0, 7))
 def _bag_jit(spec, memory, sets, gids, support, weights, base, interpret):
     return _bag(spec, interpret, memory, sets, gids, support, weights, base)
+
+
+@partial(jax.jit, static_argnums=(0, 4))
+def _locations_jit(spec, sets, gids, support, interpret):
+    bb = min(_BLOCK_B, max(gids.shape[0], 1))
+    return fused_locations_pallas(
+        spec.scheme, _loc_inputs(spec, sets, gids, support),
+        **_kern_kwargs(spec, interpret, bb))
 
 
 def _dummy_loc_state(spec, gids):
@@ -252,8 +278,12 @@ def fused_lookup(spec: FusedSpec, memory: jax.Array, gids: jax.Array,
         base = jnp.zeros((1,), jnp.int32)
     if sets is None:
         sets, support = _dummy_loc_state(spec, gids)
-    return _lookup_jit(spec, memory, sets.astype(jnp.uint32), gids,
-                       support.astype(jnp.int32), base, interpret)
+    B = gids.shape[0]
+    sets, gids, support = _pad_batch(_pow2_ceil(max(B, 1)),
+                                     sets.astype(jnp.uint32), gids,
+                                     support.astype(jnp.int32))
+    return _lookup_jit(spec, memory, sets, gids, support, base,
+                       interpret)[:B]
 
 
 def fused_embed_bag(spec: FusedSpec, memory: jax.Array, gids: jax.Array,
@@ -270,5 +300,30 @@ def fused_embed_bag(spec: FusedSpec, memory: jax.Array, gids: jax.Array,
         base = jnp.zeros((1,), jnp.int32)
     if sets is None:
         sets, support = _dummy_loc_state(spec, gids)
-    return _bag_jit(spec, memory, sets.astype(jnp.uint32), gids,
-                    support.astype(jnp.int32), weights, base, interpret)
+    B = gids.shape[0]
+    sets, gids, support, weights = _pad_batch(
+        _pow2_ceil(max(B, 1)), sets.astype(jnp.uint32), gids,
+        support.astype(jnp.int32), weights)
+    return _bag_jit(spec, memory, sets, gids, support, weights, base,
+                    interpret)[:B]
+
+
+def fused_locations(spec: FusedSpec, gids: jax.Array,
+                    sets: jax.Array | None = None,
+                    support: jax.Array | None = None,
+                    interpret: bool | None = None) -> jax.Array:
+    """gids [N] (+ sets/support for lma) -> [N, d] int32 locations.
+
+    The scatter kernel's in-tile hash recomputation, *emitted* instead of
+    consumed: the sparse-gradient pipeline pairs these indices with the
+    lookup-output cotangent to form a SparseGrad, skipping the dense
+    zeros(m) scatter entirely.  Bit-identical to ``Scheme.locations``."""
+    interpret = _default_interpret(interpret)
+    gids = gids.astype(jnp.int32)
+    if sets is None:
+        sets, support = _dummy_loc_state(spec, gids)
+    B = gids.shape[0]
+    sets, gids, support = _pad_batch(_pow2_ceil(max(B, 1)),
+                                     sets.astype(jnp.uint32), gids,
+                                     support.astype(jnp.int32))
+    return _locations_jit(spec, sets, gids, support, interpret)[:B]

@@ -1,0 +1,1 @@
+"""Sparse optimizer-update kernels: O(K) gather -> moment-update -> scatter."""

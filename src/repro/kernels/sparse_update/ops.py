@@ -1,0 +1,73 @@
+"""Dispatch for the sparse optimizer update: Pallas on TPU, jnp elsewhere.
+
+``sparse_update(algo, indices, values, states, **hyper)`` is the one entry
+point the optimizers call (``repro/optim/sparse.py``).  On TPU the fused
+Pallas gather -> moment-update -> scatter kernel runs compiled (flat [m]
+slabs — the memory-pool family); everywhere else the jnp reference is
+already the optimal lowering (XLA's native 1-D gather/scatter), so unlike
+the fused-embed engine there is no interpret-mode win to chase — interpret
+mode here exists for kernel-parity tests only (pass ``interpret=True``).
+
+Contract (shared with ``ref.py`` / ``kernel.py``): ``indices [K]`` sorted
+unique, sentinel-padded with ``m``; ``values [K, ...]`` segment-summed, 0 at
+padded slots; states touched only at live slots (add-of-delta scatters).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels.sparse_update import kernel as _k
+from repro.kernels.sparse_update import ref as _r
+
+ALGOS = ("sgd", "adagrad", "adam")
+
+# same VMEM budget knob as the fused embed engine: the no-grid kernel holds
+# every state slab + the K vectors resident at once, so ALL of them must fit
+_MAX_MEM_MB = int(os.environ.get("REPRO_FUSED_MAX_MEM_MB", "16"))
+_TILE_RESERVE = 2 * 2**20
+
+
+def _pallas_ok(indices, values, states) -> bool:
+    """TPU auto-dispatch gate: flat slabs only, and the whole working set
+    (all state slabs + index/value/update vectors) must fit the VMEM
+    budget — an over-budget pool falls back to the jnp reference (XLA
+    scatter), mirroring the fused engine's ``fused_supported`` gate.
+    Explicit ``interpret=`` calls (kernel tests) bypass the size gate."""
+    if values.ndim != 1 or any(s.ndim != 1 for s in states):
+        return False
+    resident = (sum(s.size * s.dtype.itemsize for s in states)
+                + indices.size * 4 + 2 * values.size * values.dtype.itemsize)
+    return resident + _TILE_RESERVE <= _MAX_MEM_MB * 2**20
+
+
+def sparse_update(algo: str, indices, values, states: tuple, *,
+                  interpret: bool | None = None, **hyper):
+    """-> (update_values [K, ...], new_states tuple).
+
+    ``interpret=None``: Pallas (compiled) on TPU when eligible, jnp ref
+    elsewhere.  ``interpret=True`` forces the Pallas kernel in interpret
+    mode (test hook); ``interpret=False`` forces compiled Pallas.
+    """
+    assert algo in ALGOS, algo
+    flat = values.ndim == 1 and all(s.ndim == 1 for s in states)
+    use_pallas = (interpret is not None and flat) or (
+        jax.default_backend() == "tpu"
+        and _pallas_ok(indices, values, states))
+    if use_pallas and states:
+        interp = bool(interpret)
+        if algo == "sgd":
+            return _k.sparse_sgd_pallas(indices, values, states[0],
+                                        interpret=interp, **hyper)
+        if algo == "adagrad":
+            return _k.sparse_adagrad_pallas(indices, values, states[0],
+                                            interpret=interp, **hyper)
+        return _k.sparse_adam_pallas(indices, values, *states,
+                                     interpret=interp, **hyper)
+    if algo == "sgd":
+        mo = states[0] if states else None
+        return _r.sparse_sgd_ref(indices, values, mo, **hyper)
+    if algo == "adagrad":
+        return _r.sparse_adagrad_ref(indices, values, states[0], **hyper)
+    return _r.sparse_adam_ref(indices, values, *states, **hyper)

@@ -1,0 +1,96 @@
+"""jnp reference for the sparse optimizer update (and the CPU fast path).
+
+One contract for every algorithm: given deduped ``indices [K]`` (sorted
+unique slot ids, padded at the tail with the sentinel ``state.shape[0]``),
+``values [K, ...]`` (segment-summed gradient contributions, 0 at padded
+slots) and the dense moment slab(s), produce
+
+  * ``update_values [K, ...]`` — the additive parameter delta per touched
+    slot (0 at padded slots), to be scattered by ``apply_updates``;
+  * the new moment slab(s), touched only at the K live slots.
+
+All moment writes are **add-of-delta** scatters (``new - old`` added at the
+gathered slot) rather than ``.set``: clipped sentinel indices then add an
+exact 0.0, so duplicates racing on the clip target are harmless and padded
+tails leave the slab bit-identical — the "untouched slots' state untouched"
+invariant ``tests/test_sparse_update.py`` checks.  The Pallas kernels in
+``kernel.py`` use the same formulation so the two cannot drift.
+
+Semantics are the classic *lazy* sparse rules: only touched slots see a
+moment decay/accumulate.  For Adagrad and momentum-less SGD this is exactly
+the dense update (untouched slots get a 0 update there too); for Adam it is
+SparseAdam semantics (global-step bias correction, stale moments on
+untouched slots).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _gather(state, safe, trailing_ndim: int):
+    g = jnp.take(state, safe, axis=0)
+    if state.ndim == 1 and trailing_ndim:           # rowwise state vs [K, t]
+        g = g.reshape(g.shape + (1,) * trailing_ndim)
+    return g
+
+
+def _keep(indices, m: int, values):
+    k = indices < m
+    return k.reshape(k.shape + (1,) * (values.ndim - 1))
+
+
+def sparse_sgd_ref(indices, values, mo=None, *, lr, momentum=0.0):
+    """-> (update_values, (mo,) or ())."""
+    m = None if mo is None else mo.shape[0]
+    if momentum == 0.0 or mo is None:
+        return -lr * values, ()
+    safe = jnp.minimum(indices, m - 1)
+    keep = _keep(indices, m, values)
+    old = _gather(mo, safe, 0)
+    new = momentum * old + values
+    mo = mo.at[safe].add(jnp.where(keep, new - old, 0.0))
+    return jnp.where(keep, -lr * new, 0.0), (mo,)
+
+
+def sparse_adagrad_ref(indices, values, acc, *, lr, eps=1e-10):
+    """-> (update_values, (acc,)); exact dense-Adagrad math per touched slot."""
+    m = acc.shape[0]
+    safe = jnp.minimum(indices, m - 1)
+    keep = _keep(indices, m, values)
+    vf = values.astype(jnp.float32)
+    a = _gather(acc, safe, 0) + jnp.square(vf)
+    acc = acc.at[safe].add(jnp.where(keep, jnp.square(vf), 0.0))
+    u = -lr * vf / (jnp.sqrt(a) + eps)
+    return jnp.where(keep, u, 0.0).astype(values.dtype), (acc,)
+
+
+def sparse_adam_ref(indices, values, mu, nu, *, lr, b1=0.9, b2=0.999,
+                    bc1=1.0, bc2=1.0, eps=1e-8):
+    """Lazy Adam with row-wise second moment when ``nu`` is 1-D against
+    [K, t...] values (DLRM's row-wise Adam); elementwise for flat pools.
+
+    ``bc1``/``bc2`` are the global-step bias corrections ``1 - b^t``,
+    computed by the caller from its step counter.
+    """
+    m = mu.shape[0]
+    trailing = values.ndim - 1
+    safe = jnp.minimum(indices, m - 1)
+    keep = _keep(indices, m, values)
+    vf = values.astype(jnp.float32)
+    mu_old = _gather(mu, safe, trailing)
+    mu_new = b1 * mu_old + (1 - b1) * vf
+    v2 = jnp.square(vf)
+    if nu.ndim == 1 and trailing:                   # rowwise second moment
+        v2_row = jnp.mean(v2, axis=tuple(range(1, v2.ndim)))
+        nu_old_row = jnp.take(nu, safe, axis=0)
+        nu_new_row = b2 * nu_old_row + (1 - b2) * v2_row
+        nu = nu.at[safe].add(jnp.where(indices < m,
+                                       nu_new_row - nu_old_row, 0.0))
+        nu_new = nu_new_row.reshape(nu_new_row.shape + (1,) * trailing)
+    else:
+        nu_old = _gather(nu, safe, 0)
+        nu_new = b2 * nu_old + (1 - b2) * v2
+        nu = nu.at[safe].add(jnp.where(keep, nu_new - nu_old, 0.0))
+    mu = mu.at[safe].add(jnp.where(keep, mu_new - mu_old, 0.0))
+    u = -lr * (mu_new / bc1) / (jnp.sqrt(nu_new / bc2) + eps)
+    return jnp.where(keep, u, 0.0).astype(values.dtype), (mu, nu)

@@ -30,6 +30,7 @@ from repro.dist import sharding as shd
 from repro.dist.sharding import ALL, DP, EP
 from repro.models import gnn, recsys, transformer
 from repro.optim import optimizers as opt_lib
+from repro.optim import sparse as sparse_lib
 
 SDS = jax.ShapeDtypeStruct
 
@@ -201,6 +202,31 @@ def store_rows(total_vocab: int) -> int:
     return -(-total_vocab // 512) * 512
 
 
+def _sparse_worthwhile(rcfg, B: int, mesh) -> bool:
+    """Per-device traffic model for the sparse-vs-dense pool update.
+
+    sparse: the deduped (indices, values) pair is replicated on every
+    device — ~8 bytes per raw touched location (int32 + f32).
+    dense: the dense path's per-device slab tax — zeros + scatter + the
+    O(m_local) optimizer read-modify-write, ~8 f32 passes over the
+    model-sharded pool (bench_kernels.modeled_update_bytes).
+
+    Single-host training (the launcher) always picks sparse (K << m); a
+    16x16 pod cell with a 65k global batch picks dense — which is exactly
+    the measured crossover (the 2x4 bench favors masked-local sparse, the
+    256-device dry-run favors the dense psum).
+    """
+    e = rcfg.embedding
+    if e.budget is None:
+        return False
+    k_raw = B * recsys.lookups_per_example(rcfg) * e.dim   # element-level
+
+    n_model = int(dict(mesh.shape).get("model", 1))
+    sparse_bytes = k_raw * 8
+    dense_bytes = 8 * (e.budget // max(n_model, 1)) * 4
+    return sparse_bytes < dense_bytes
+
+
 def _recsys_bundle(arch: ArchConfig, shape_id: str, mesh) -> Bundle:
     t = RECSYS_SHAPE_TABLE[shape_id]
     rcfg = arch.make_model(shape_id)
@@ -215,11 +241,25 @@ def _recsys_bundle(arch: ArchConfig, shape_id: str, mesh) -> Bundle:
         opt_shapes = jax.eval_shape(optimizer.init, param_shapes)
         opt_sh = _shardings(mesh, opt_shapes, rules)
         batch, batch_sh = _recsys_batch_specs(rcfg, B, mesh)
+        # sparse memory-pool gradients: the pool leaf arrives as a
+        # SparseGrad over the K touched slots and the (dense-constructed,
+        # sparse-aware) optimizer runs the O(K) lazy update; opt-state
+        # structure and shardings are unchanged.  REPRO_SPARSE_GRADS=0
+        # restores the dense oracle step bit-for-bit.  Gated by the traffic
+        # model below: the sparse (indices, values) pair is replicated per
+        # device, so at pod-scale global batches it can exceed the dense
+        # slab update it replaces — then the dense path stays.
+        use_sparse = (sparse_lib.sparse_enabled()
+                      and sparse_lib.has_memory(param_shapes)
+                      and _sparse_worthwhile(rcfg, B, mesh))
 
         def train_step(params, opt_state, buffers, batch):
-            (loss, m), grads = jax.value_and_grad(
-                lambda p: recsys.loss_fn(p, rcfg, batch, buffers),
-                has_aux=True)(params)
+            lf = lambda p: recsys.loss_fn(p, rcfg, batch, buffers)
+            if use_sparse:
+                (loss, m), grads = sparse_lib.sparse_value_and_grad(lf)(params)
+            else:
+                (loss, m), grads = jax.value_and_grad(
+                    lf, has_aux=True)(params)
             updates, opt_state = optimizer.update(grads, opt_state, params)
             params = opt_lib.apply_updates(params, updates)
             return params, opt_state, loss
@@ -230,7 +270,7 @@ def _recsys_bundle(arch: ArchConfig, shape_id: str, mesh) -> Bundle:
             (param_sh, opt_sh, bufs_sh, batch_sh),
             (param_sh, opt_sh, NamedSharding(mesh, P())),
             donate=(0, 1),
-            meta={"kind": "train", "examples": B,
+            meta={"kind": "train", "examples": B, "sparse_grads": use_sparse,
                   "embedding": rcfg.table.describe()})
 
     if t["kind"] == "serve":

@@ -27,14 +27,32 @@ from repro.data.metrics import StreamingEval
 from repro.data.synthetic_ctr import CTRGenerator, CTRSpec, DINGenerator, DINSpec
 from repro.models import recsys, transformer
 from repro.optim import optimizers as opt_lib
+from repro.optim import sparse as sparse_lib
 from repro.train.trainer import Trainer, TrainerConfig
 
 
 def make_optimizer(arch):
-    return {"adam": opt_lib.adam, "adagrad": opt_lib.adagrad,
-            "adafactor": opt_lib.adafactor,
-            "sgd": lambda lr: opt_lib.sgd(lr, momentum=0.9)}[
+    dense = {"adam": opt_lib.adam, "adagrad": opt_lib.adagrad,
+             "adafactor": opt_lib.adafactor,
+             "sgd": lambda lr: opt_lib.sgd(lr, momentum=0.9)}[
         arch.optimizer](arch.learning_rate)
+    sparse = {"adam": sparse_lib.sparse_rowwise_adam,
+              "adagrad": sparse_lib.sparse_adagrad,
+              "sgd": lambda lr: sparse_lib.sparse_sgd(lr, momentum=0.9)}.get(
+        arch.optimizer)
+    if sparse_lib.sparse_enabled() and sparse is not None:
+        # the memory pool routes to the explicit sparse optimizer by path;
+        # every other param keeps the arch's dense transform untouched
+        return opt_lib.multi_transform(
+            [(r"(^|/)memory$", sparse(arch.learning_rate))], default=dense)
+    return dense
+
+
+def lookups_per_step(cfg, batch: int) -> int:
+    """Embedding-row lookups one recsys step performs (the unit of the
+    lookups_per_sec stat; per-example rule shared with steps.py's
+    sparse-traffic model via models.recsys)."""
+    return batch * recsys.lookups_per_example(cfg)
 
 
 def _recsys_setup(arch, cfg, n_s: int, batch: int):
@@ -112,10 +130,16 @@ def main(argv=None):
                    for x in jax.tree_util.tree_leaves(params))
     print(f"{args.arch}: {n_params:,} parameters on {len(jax.devices())} "
           f"device(s)")
+    lps = (lookups_per_step(cfg, args.batch) if arch.family == "recsys"
+           else min(args.batch, 16) * 64)
     trainer = Trainer(
         TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
-                      ckpt_every=100, log_every=max(args.steps // 10, 1)),
+                      ckpt_every=100, log_every=max(args.steps // 10, 1),
+                      lookups_per_step=lps),
         loss_fn, params, make_optimizer(arch), batch_fn)
+    if trainer.sparse_grads:
+        print("sparse memory-pool updates ON (REPRO_SPARSE_GRADS=0 for the "
+              "dense oracle)")
     trainer.install_signal_handlers()
     out = trainer.fit()
     print(f"done: {out}")

@@ -64,6 +64,13 @@ class RecsysConfig:
         return jnp.dtype(self.dtype)
 
 
+def lookups_per_example(cfg: RecsysConfig) -> int:
+    """Embedding-row lookups one example performs — the one definition the
+    trainer's lookups_per_sec stat and the launch-time sparse-vs-dense
+    traffic model (steps._sparse_worthwhile) both use."""
+    return (cfg.hist_len + 1) if cfg.model == "din" else cfg.n_fields
+
+
 # ------------------------------------------------------------------ components
 
 def dot_interaction(feats: jax.Array, self_interaction: bool = False) -> jax.Array:

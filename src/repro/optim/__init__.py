@@ -21,3 +21,13 @@ from repro.optim.optimizers import (
     sgd,
     warmup_cosine,
 )
+from repro.optim.sparse import (
+    SparseGrad,
+    from_locations,
+    is_sparse,
+    sparse_adagrad,
+    sparse_enabled,
+    sparse_rowwise_adam,
+    sparse_sgd,
+    sparse_value_and_grad,
+)

@@ -5,6 +5,15 @@ params) -> (updates, state)``; ``apply_updates(params, updates)``.  DLRM-style
 models traditionally use SGD/Adagrad for embeddings (sparse-friendly: Adagrad's
 accumulator is elementwise, exactly right for LMA's shared memory M where rows
 are aliased) and Adam(W) for dense towers; ``multi_transform`` routes by path.
+
+Gradient trees may carry :class:`repro.optim.sparse.SparseGrad` leaves (the
+deduped sparse gradient of a memory pool).  Every transform here routes them:
+``sgd`` / ``adagrad`` / ``adam`` delegate such leaves to the lazy sparse
+kernel (one O(K) gather -> moment-update -> scatter instead of the O(m)
+dense pass — exactly the dense update for Adagrad and momentum-less SGD),
+``scale`` / ``clip_by_global_norm`` map over the values, ``multi_transform``
+treats them as leaves when routing by path, and ``apply_updates`` applies
+them as an O(K) scatter-add.  Dense leaves are bit-unchanged.
 """
 from __future__ import annotations
 
@@ -21,8 +30,47 @@ class Optimizer(NamedTuple):
     update: Callable  # (grads, state, params) -> (updates, state)
 
 
+def _is_sparse(x) -> bool:
+    from repro.optim.sparse import SparseGrad
+    return isinstance(x, SparseGrad)
+
+
+def _gmap(fn, grads, *rest):
+    """tree_map over a gradient tree with SparseGrad leaves kept opaque;
+    ``fn`` on a sparse leaf maps its values (indices untouched)."""
+    def one(g, *r):
+        if _is_sparse(g):
+            return g.map_values(lambda v: fn(v, *r))
+        return fn(g, *r)
+    return jax.tree_util.tree_map(one, grads, *rest, is_leaf=_is_sparse)
+
+
+class _Pair:
+    """Opaque (update, state) holder — unregistered, so tree_flatten treats
+    it as a leaf regardless of what containers the param tree uses."""
+    __slots__ = ("u", "s")
+
+    def __init__(self, u, s):
+        self.u, self.s = u, s
+
+
+def _split_pairs(out):
+    """Tree of _Pair leaves -> (updates tree, states tree)."""
+    flat, td = jax.tree_util.tree_flatten(
+        out, is_leaf=lambda x: isinstance(x, _Pair))
+    return (jax.tree_util.tree_unflatten(td, [o.u for o in flat]),
+            jax.tree_util.tree_unflatten(td, [o.s for o in flat]))
+
+
 def apply_updates(params, updates):
-    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+    from repro.optim import sparse as sp
+
+    def one(u, p):
+        if _is_sparse(u):
+            return sp.sparse_apply(p, u)
+        return (p + u).astype(p.dtype)
+
+    return jax.tree_util.tree_map(one, updates, params, is_leaf=_is_sparse)
 
 
 # ------------------------------------------------------------------ transforms
@@ -30,7 +78,7 @@ def apply_updates(params, updates):
 def scale(factor: float) -> Optimizer:
     return Optimizer(
         init=lambda params: (),
-        update=lambda g, s, p=None: (jax.tree_util.tree_map(lambda x: x * factor, g), s),
+        update=lambda g, s, p=None: (_gmap(lambda x: x * factor, g), s),
     )
 
 
@@ -40,17 +88,20 @@ def scale_by_schedule(schedule: Callable[[jax.Array], jax.Array]) -> Optimizer:
 
     def update(g, step, p=None):
         lr = schedule(step)
-        return jax.tree_util.tree_map(lambda x: x * lr, g), step + 1
+        return _gmap(lambda x: x * lr, g), step + 1
 
     return Optimizer(init, update)
 
 
 def clip_by_global_norm(max_norm: float) -> Optimizer:
     def update(g, s, p=None):
-        leaves = jax.tree_util.tree_leaves(g)
-        gn = jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+        # SparseGrad values are deduped (segment-summed), so their square-sum
+        # equals the dense leaf's square-sum exactly
+        leaves = jax.tree_util.tree_leaves(g, is_leaf=_is_sparse)
+        vals = [x.values if _is_sparse(x) else x for x in leaves]
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in vals))
         factor = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
-        return jax.tree_util.tree_map(lambda x: x * factor, g), s
+        return _gmap(lambda x: x * factor, g), s
 
     return Optimizer(lambda p: (), update)
 
@@ -63,9 +114,11 @@ def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
 
     def update(g, s, p=None):
         if momentum == 0.0:
-            return jax.tree_util.tree_map(lambda x: -lr * x, g), s
-        s = jax.tree_util.tree_map(lambda m, x: momentum * m + x, s, g)
-        return jax.tree_util.tree_map(lambda m: -lr * m, s), s
+            return _gmap(lambda x: -lr * x, g), s
+        from repro.optim.sparse import sgd_leaf
+        return _split_pairs(jax.tree_util.tree_map(
+            lambda x, m: _Pair(*sgd_leaf(x, m, lr=lr, momentum=momentum)),
+            g, s, is_leaf=_is_sparse))
 
     return Optimizer(init, update)
 
@@ -76,11 +129,10 @@ def adagrad(lr: float, eps: float = 1e-10, initial_acc: float = 0.0) -> Optimize
             lambda x: jnp.full_like(x, initial_acc, dtype=jnp.float32), params)
 
     def update(g, acc, p=None):
-        acc = jax.tree_util.tree_map(
-            lambda a, x: a + jnp.square(x.astype(jnp.float32)), acc, g)
-        upd = jax.tree_util.tree_map(
-            lambda a, x: (-lr * x / (jnp.sqrt(a) + eps)).astype(x.dtype), acc, g)
-        return upd, acc
+        from repro.optim.sparse import adagrad_leaf
+        return _split_pairs(jax.tree_util.tree_map(
+            lambda x, a: _Pair(*adagrad_leaf(x, a, lr=lr, eps=eps)),
+            g, acc, is_leaf=_is_sparse))
 
     return Optimizer(init, update)
 
@@ -152,8 +204,20 @@ def adafactor(lr: float, decay_exp: float = 0.8, eps: float = 1e-30,
             # leaves the map at param width, never as an f32 stack
             return (-lr * u).astype(g.dtype), new_v
 
-        leaves, treedef = jax.tree_util.tree_flatten(grads)
+        # adafactor has no lazy-sparse form (the factored second moment is
+        # global by construction); densify sparse leaves — correct, O(m).
+        # A row-mode SparseGrad densifies to its (rows, d) view; reshape it
+        # back to the flat param/state layout the moments were built from.
+        def _densify_like(g, v):
+            d = g.densify()
+            ref = v.get("v")
+            return d.reshape(ref.shape) if ref is not None \
+                and d.shape != ref.shape else d
+
+        leaves, treedef = jax.tree_util.tree_flatten(grads, is_leaf=_is_sparse)
         vleaves = treedef.flatten_up_to(state.vs)
+        leaves = [_densify_like(g, v) if _is_sparse(g) else g
+                  for g, v in zip(leaves, vleaves)]
         outs = [_map_leading(one, (g, v)) for g, v in zip(leaves, vleaves)]
         updates = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
         new_vs = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
@@ -190,12 +254,22 @@ def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
                 u = u - lr * weight_decay * p.astype(jnp.float32)
             return u.astype(x.dtype), m, n
 
-        leaves, treedef = jax.tree_util.tree_flatten(g)
+        def leaf(x, m, n, p):
+            if _is_sparse(x):
+                # lazy (SparseAdam) semantics on sparse pool grads: O(K)
+                # moment update + lazy decoupled decay, untouched slots
+                # keep stale moments
+                from repro.optim.sparse import adam_leaf
+                return adam_leaf(x, m, n, p if not _is_sparse(p) else None,
+                                 lr=lr, b1=b1, b2=b2, bc1=bc1, bc2=bc2,
+                                 eps=eps, weight_decay=weight_decay)
+            return _map_leading(one, (x, m, n, p))
+
+        leaves, treedef = jax.tree_util.tree_flatten(g, is_leaf=_is_sparse)
         ms = treedef.flatten_up_to(state.mu)
         ns = treedef.flatten_up_to(state.nu)
         ps = (treedef.flatten_up_to(params) if params is not None else leaves)
-        outs = [_map_leading(one, (x, m, n, p))
-                for x, m, n, p in zip(leaves, ms, ns, ps)]
+        outs = [leaf(x, m, n, p) for x, m, n, p in zip(leaves, ms, ns, ps)]
         unf = lambda i: jax.tree_util.tree_unflatten(
             treedef, [o[i] for o in outs])
         return unf(0), AdamState(step, unf(1), unf(2))
@@ -230,7 +304,10 @@ def multi_transform(rules: list[tuple[str, Optimizer]], default: Optimizer) -> O
         return default
 
     def _paths(tree):
-        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        # SparseGrad leaves stay opaque so a sparse pool grad routes by the
+        # pool's own path (e.g. 'embedding/memory'), like its dense twin
+        flat, treedef = jax.tree_util.tree_flatten_with_path(
+            tree, is_leaf=_is_sparse)
         paths = ["/".join(str(getattr(k, "key", k)) for k in kp) for kp, _ in flat]
         return paths, [v for _, v in flat], treedef
 

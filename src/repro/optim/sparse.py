@@ -1,0 +1,490 @@
+"""Sparse-gradient engine for the memory pool: end the O(m) per-step tax.
+
+The paper's premise makes the pool ``M`` the dominant parameter, yet the
+dense training step materializes a full [m] gradient (the lookup VJP
+scatter-adds into ``zeros(m)``) and then runs an O(m) optimizer pass over
+every slot — while a batch touches at most ``B*L*d << m`` unique locations.
+This module replaces both with O(K) work:
+
+``SparseGrad``
+    A registered pytree (children ``indices [K]`` / ``values [K, ...]``,
+    aux ``dense_shape``) carrying the deduped gradient of one pool:
+    ``indices`` are sorted unique slot ids padded at the tail with the
+    sentinel ``dense_shape[0]``; ``values`` are the segment-summed
+    contributions (0 at padded slots).  ``densify()`` is the exact dense
+    oracle the parity tests compare against.
+
+``sparse_value_and_grad(loss_fn)``
+    Drop-in for ``jax.value_and_grad(loss_fn, has_aux=True)`` that returns
+    ``SparseGrad`` leaves for every ``memory`` pool the loss looked up.
+    A cotangent of an array primal must be an array of the same shape in
+    JAX, so the sparse grad cannot come out of a custom VJP directly; the
+    engine instead runs two passes inside the one jit trace:
+
+      1. *record* — trace ``loss_fn`` once with the embed layer in record
+         mode: each memory lookup reports its [N, d] location tensor (pure
+         hashing — the fused engine's in-kernel location math, emitted
+         instead of consumed) and returns zeros, so XLA dead-code-eliminates
+         everything except the hashes;
+      2. *provide* — differentiate the real loss with the pool behind
+         ``stop_gradient`` plus an additive zero *tap* at each lookup
+         output.  ``dL/dtap`` is exactly the per-location gradient values;
+         the dense pool cotangent is a dead zeros leaf that the SparseGrad
+         replaces before anything consumes it, so it never reaches HBM.
+
+    Locations + tap grads are deduped on device (sort + segment-sum) into
+    one ``SparseGrad`` per pool.
+
+``sparse_sgd`` / ``sparse_adagrad`` / ``sparse_rowwise_adam``
+    Optimizers whose sparse-leaf update is a single gather -> moment-update
+    -> scatter over the K touched slots (``repro/kernels/sparse_update``:
+    Pallas on TPU, jnp scatter elsewhere), with lazy semantics — untouched
+    slots' moments are bit-untouched, matching Adagrad's classic sparse
+    rule (for Adagrad and momentum-less SGD this is *exactly* the dense
+    update).  Dense leaves fall back to the matching dense math, so one
+    optimizer instance serves a mixed tree; the dense optimizers in
+    ``optimizers.py`` symmetrically delegate SparseGrad leaves here.
+
+Under a distribution mesh with a non-trivial 'model' axis the moment
+update and the parameter scatter run as masked-local shard_map bodies on
+each device's slab (``repro/dist/sharded_memory.py``) — no [m_local] dense
+gradient, no psum of it.
+
+Gate: ``REPRO_SPARSE_GRADS`` (default on; ``=0`` keeps the dense path as
+the bit-exact oracle).  Tests may toggle ``sparse.ENABLED`` directly.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.optimizers import Optimizer, _Pair, _split_pairs
+
+ENABLED = os.environ.get("REPRO_SPARSE_GRADS", "1").lower() not in (
+    "0", "false", "off", "no")
+
+
+def sparse_enabled() -> bool:
+    return ENABLED
+
+
+# ---------------------------------------------------------------- SparseGrad
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SparseGrad:
+    """Deduped sparse gradient of one dense parameter (usually the pool M)."""
+
+    indices: jax.Array            # [K] int32, sorted unique + sentinel pad
+    values: jax.Array             # [K, *dense_shape[1:]] segment-summed
+    dense_shape: tuple[int, ...]  # static (pytree aux)
+
+    def tree_flatten(self):
+        return (self.indices, self.values), self.dense_shape
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], tuple(aux))
+
+    @property
+    def sentinel(self) -> int:
+        return int(self.dense_shape[0])
+
+    def densify(self) -> jax.Array:
+        """The dense oracle: scatter-add into zeros(dense_shape)."""
+        z = jnp.zeros(self.dense_shape, self.values.dtype)
+        return z.at[self.indices].add(self.values, mode="drop")
+
+    def map_values(self, fn) -> "SparseGrad":
+        return SparseGrad(self.indices, fn(self.values), self.dense_shape)
+
+
+def is_sparse(x) -> bool:
+    return isinstance(x, SparseGrad)
+
+
+def dedup_locations(loc: jax.Array, vals: jax.Array,
+                    dense_shape: tuple[int, ...]) -> SparseGrad:
+    """On-device dedup: sort locations, segment-sum coincident values.
+
+    ``loc``: [K] int slot ids (duplicates allowed), ``vals``: [K, ...]
+    matching contributions.  Returns sorted unique indices compacted to the
+    front, padded with the sentinel ``dense_shape[0]`` (values 0 there) —
+    static [K] shapes throughout, jit-safe.
+    """
+    k = int(loc.shape[0])
+    order = jnp.argsort(loc)
+    si = jnp.take(loc, order).astype(jnp.int32)
+    sv = jnp.take(vals, order, axis=0)
+    head = jnp.concatenate([jnp.ones((1,), bool), si[1:] != si[:-1]])
+    seg = jnp.cumsum(head) - 1                       # [K] ids in [0, K)
+    summed = jax.ops.segment_sum(sv, seg, num_segments=k)
+    idx = jnp.full((k,), dense_shape[0], jnp.int32).at[seg].set(si)
+    return SparseGrad(idx, summed, tuple(dense_shape))
+
+
+def from_locations(loc: jax.Array, vals: jax.Array,
+                   dense_shape: tuple[int, ...]) -> SparseGrad:
+    """[..., d] location tensor + matching cotangent values -> SparseGrad."""
+    trailing = len(dense_shape) - 1
+    if trailing:
+        vals = vals.reshape((-1,) + tuple(dense_shape[1:]))
+        loc = loc.reshape(-1)
+    else:
+        loc, vals = loc.reshape(-1), vals.reshape(-1)
+    return dedup_locations(loc, vals, dense_shape)
+
+
+# ------------------------------------------------------- trace-time contexts
+#
+# The embed layer (repro/embed/table.py::_memory_lookup) cooperates through a
+# module-level stack: ``record`` collects (pool leaf, locations) pairs,
+# ``provide`` hands each lookup its additive zero tap in call order.  All
+# tracers involved live in the surrounding jit trace, so closing over them
+# is safe; the stack is trace-time-only Python state (never crosses a jit
+# boundary).
+
+_STACK: list = []
+
+
+@dataclasses.dataclass
+class _Record:
+    memory: jax.Array             # the pool leaf (trace-time identity key)
+    loc: jax.Array                # [N, d] element locations, or [N] row ids
+    tap_shape: tuple              # the lookup output shape the tap rides on
+    dtype: jnp.dtype
+    row_width: int = 0            # d when loc is [N] row ids, else 0
+
+
+class _Recorder:
+    mode = "record"
+
+    def __init__(self):
+        self.records: list[_Record] = []
+
+    def record(self, memory, loc):
+        """Element-level locations [N, d] (lma-style hashing)."""
+        self.records.append(_Record(memory, loc, tuple(loc.shape),
+                                    memory.dtype))
+
+    def record_rows(self, memory, rows, d: int):
+        """Row-aligned pool rows [N] (hashed_row / freq): one index per row,
+        the [N, d] tap grad becomes the row delta directly."""
+        self.records.append(_Record(memory, rows, (rows.shape[0], d),
+                                    memory.dtype, row_width=d))
+
+
+class _Provider:
+    mode = "provide"
+
+    def __init__(self, taps):
+        self._taps = list(taps)
+        self._i = 0
+
+    def next_tap(self, shape):
+        assert self._i < len(self._taps), (
+            "sparse-grad provide pass saw more memory lookups than the "
+            "record pass — loss_fn must be deterministic in its call order")
+        tap = self._taps[self._i]
+        self._i += 1
+        assert tap.shape == tuple(shape), (tap.shape, shape)
+        return tap
+
+
+@contextlib.contextmanager
+def _tracing(obj):
+    _STACK.append(obj)
+    try:
+        yield obj
+    finally:
+        _STACK.pop()
+
+
+def active():
+    """The innermost active sparse-trace context, or None (normal mode)."""
+    return _STACK[-1] if _STACK else None
+
+
+# ----------------------------------------------------------- grad transform
+
+def _is_memory_key(kp) -> bool:
+    last = kp[-1]
+    return str(getattr(last, "key", last)) == "memory"
+
+
+def has_memory(params) -> bool:
+    """Does the tree hold any 'memory'-named pool leaf?"""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    return any(_is_memory_key(kp) for kp, _ in flat)
+
+
+def sparse_value_and_grad(loss_fn: Callable, has_aux: bool = True):
+    """``fn(params, *args) -> ((loss, aux), grads)`` with SparseGrad leaves
+    for every memory pool the loss looked up; all other leaves dense.
+
+    Falls back to plain ``jax.value_and_grad`` when nothing records (table-
+    family schemes, or a loss with no embedding at all).
+
+    Constraints: ``loss_fn`` must be trace-deterministic (same lookup call
+    order every trace); memory lookups must not sit inside lax control-flow
+    bodies (scan/while) — the recorded location tracers must live at the
+    loss function's own trace level; and every gradient path into a pool
+    must go through the embed lookups — the SparseGrad *replaces* the
+    pool's cotangent, so a direct read of ``params[...]["memory"]`` in the
+    loss (e.g. an L2 penalty on the raw pool) would have its gradient
+    dropped.  Regularize through the lookup outputs instead, or run the
+    dense oracle.  Every model in this repo satisfies all three
+    (retrieval's scan does no training lookups; nothing reads M directly).
+    """
+
+    def vg(params, *args):
+        rec = _Recorder()
+        with _tracing(rec):
+            loss_fn(params, *args)
+        if not rec.records:
+            return jax.value_and_grad(loss_fn, has_aux=has_aux)(params, *args)
+
+        flat, _ = jax.tree_util.tree_flatten_with_path(params)
+        path_of = {id(leaf): kp for kp, leaf in flat}
+        groups: dict = {}
+        for i, r in enumerate(rec.records):
+            kp = path_of.get(id(r.memory))
+            assert kp is not None, (
+                "recorded memory pool is not a leaf of params")
+            groups.setdefault(kp, []).append(i)
+
+        taps = [jnp.zeros(r.tap_shape, r.dtype) for r in rec.records]
+
+        def lf(p, taps_):
+            with _tracing(_Provider(taps_)):
+                return loss_fn(p, *args)
+
+        out, (gp, gt) = jax.value_and_grad(
+            lf, argnums=(0, 1), has_aux=has_aux)(params, taps)
+
+        leaf_shape = {kp: leaf.shape for kp, leaf in flat}
+        replace = {}
+        for kp, idxs in groups.items():
+            rws = {rec.records[i].row_width for i in idxs}
+            assert len(rws) == 1, (
+                "one memory pool mixes row- and element-level sparse "
+                "records; schemes must be consistent per pool")
+            (rw,) = rws
+            m = int(leaf_shape[kp][0])
+            if rw:                                  # row-aligned pool
+                rows = jnp.concatenate(
+                    [rec.records[i].loc.reshape(-1) for i in idxs])
+                vals = jnp.concatenate(
+                    [gt[i].reshape(-1, rw) for i in idxs])
+                replace[kp] = from_locations(rows, vals, (m // rw, rw))
+            else:
+                loc = jnp.concatenate(
+                    [rec.records[i].loc.reshape(-1) for i in idxs])
+                vals = jnp.concatenate([gt[i].reshape(-1) for i in idxs])
+                replace[kp] = from_locations(loc, vals, tuple(leaf_shape[kp]))
+
+        # swap the dead dense pool cotangents (zeros under stop_gradient —
+        # unused after this, so XLA never materializes them) for SparseGrads
+        gflat, gdef = jax.tree_util.tree_flatten_with_path(gp)
+        leaves = [replace.get(kp, v) for kp, v in gflat]
+        grads = jax.tree_util.tree_unflatten(gdef, leaves)
+        return out, grads
+
+    return vg
+
+
+# ------------------------------------------------------------- mesh routing
+
+def _model_mesh(n_slots: int):
+    """Mesh with a non-trivial 'model' axis dividing the slab, else None."""
+    from repro.dist import context as dctx
+    mesh = dctx.current_mesh()
+    if mesh is None:
+        return None
+    n_model = int(dict(mesh.shape).get("model", 1))
+    if n_model <= 1 or n_slots % n_model != 0:
+        return None
+    return mesh
+
+
+def _pool_view(arr: jax.Array, shape: tuple):
+    """View a flat [m] pool/state as the SparseGrad's (rows, d) layout."""
+    shape = tuple(shape)
+    if arr.shape == shape:
+        return arr
+    assert arr.size == int(np.prod(shape)), (arr.shape, shape)
+    return arr.reshape(shape)
+
+
+def _leaf_sparse_update(algo: str, g: SparseGrad, states: tuple, **hyper):
+    """One sparse leaf through the kernel (or the sharded slab path)."""
+    orig_shapes = tuple(s.shape for s in states)
+    states = tuple(_pool_view(s, g.dense_shape) for s in states)
+    mesh = _model_mesh(g.dense_shape[0]) if states else None
+    if mesh is not None:
+        from repro.dist.sharded_memory import sharded_sparse_update
+        u, new_states = sharded_sparse_update(algo, g.indices, g.values,
+                                              states, hyper, mesh)
+    else:
+        from repro.kernels.sparse_update.ops import sparse_update
+        u, new_states = sparse_update(algo, g.indices, g.values, states,
+                                      **hyper)
+    new_states = tuple(s.reshape(shp)
+                       for s, shp in zip(new_states, orig_shapes))
+    return g.map_values(lambda _: u), new_states
+
+
+def sparse_apply(p: jax.Array, u: SparseGrad) -> jax.Array:
+    """``apply_updates`` for one sparse leaf: O(K) scatter-add into p."""
+    vals = u.values.astype(p.dtype)
+    pv = _pool_view(p, u.dense_shape)
+    mesh = _model_mesh(u.dense_shape[0])
+    if mesh is not None:
+        from repro.dist.sharded_memory import sharded_sparse_apply
+        out = sharded_sparse_apply(pv, u.indices, vals, mesh)
+    else:
+        out = pv.at[u.indices].add(vals, mode="drop",
+                                   indices_are_sorted=True)
+    return out.reshape(p.shape)
+
+
+# -------------------------------------------------- leaf update entry points
+# (shared by the sparse optimizers below AND the dense optimizers'
+# SparseGrad delegation in optimizers.py — one implementation, no drift)
+
+def sgd_leaf(g, mo, p=None, *, lr, momentum=0.0):
+    if is_sparse(g):
+        states = () if mo is None or momentum == 0.0 else (mo,)
+        u, new = _leaf_sparse_update("sgd", g, states, lr=lr,
+                                     momentum=momentum)
+        return u, (new[0] if new else mo)
+    if momentum == 0.0:
+        return -lr * g, mo
+    mo = momentum * mo + g
+    return -lr * mo, mo
+
+
+def adagrad_leaf(g, acc, p=None, *, lr, eps=1e-10):
+    if is_sparse(g):
+        u, (acc,) = _leaf_sparse_update("adagrad", g, (acc,), lr=lr, eps=eps)
+        return u, acc
+    acc = acc + jnp.square(g.astype(jnp.float32))
+    return (-lr * g / (jnp.sqrt(acc) + eps)).astype(g.dtype), acc
+
+
+def adam_leaf(g, mu, nu, p=None, *, lr, b1=0.9, b2=0.999, bc1=1.0, bc2=1.0,
+              eps=1e-8, weight_decay=0.0):
+    """Lazy Adam on a sparse leaf (rowwise nu when it is stored rowwise);
+    dense leaves get the same formulas applied everywhere (== dense Adam
+    when nu is elementwise).  Decoupled weight decay is lazy too: only the
+    touched slots decay, gathered from ``p`` at the sparse indices."""
+    if is_sparse(g):
+        u, (mu, nu) = _leaf_sparse_update("adam", g, (mu, nu), lr=lr, b1=b1,
+                                          b2=b2, bc1=bc1, bc2=bc2, eps=eps)
+        if weight_decay and p is not None:
+            pv = _pool_view(p, g.dense_shape)
+            rows = jnp.take(pv, jnp.minimum(g.indices, pv.shape[0] - 1),
+                            axis=0).astype(jnp.float32)
+            keep = (g.indices < pv.shape[0]).reshape(
+                (-1,) + (1,) * (u.values.ndim - 1))
+            u = u.map_values(
+                lambda v: v - jnp.where(keep, lr * weight_decay * rows, 0.0))
+        return u, mu, nu
+    gf = g.astype(jnp.float32)
+    mu = b1 * mu + (1 - b1) * gf
+    v2 = jnp.square(gf)
+    if nu.ndim == 1 and g.ndim > 1:                  # rowwise second moment
+        nu = b2 * nu + (1 - b2) * jnp.mean(v2, axis=tuple(range(1, g.ndim)))
+        nu_b = nu.reshape(nu.shape + (1,) * (g.ndim - 1))
+    else:
+        nu = b2 * nu + (1 - b2) * v2
+        nu_b = nu
+    u = -lr * (mu / bc1) / (jnp.sqrt(nu_b / bc2) + eps)
+    if weight_decay and p is not None:
+        u = u - lr * weight_decay * p.astype(jnp.float32)
+    return u.astype(g.dtype), mu, nu
+
+
+# --------------------------------------------------------- sparse optimizers
+
+def _tmap(fn, grads, *rest):
+    """tree_map with SparseGrad leaves opaque."""
+    return jax.tree_util.tree_map(fn, grads, *rest, is_leaf=is_sparse)
+
+
+def sparse_sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update(g, s, p=None):
+        if momentum == 0.0:
+            return _tmap(lambda x: (x.map_values(lambda v: -lr * v)
+                                    if is_sparse(x) else -lr * x), g), s
+        return _split_pairs(_tmap(
+            lambda x, m: _Pair(*sgd_leaf(x, m, lr=lr, momentum=momentum)),
+            g, s))
+
+    return Optimizer(init, update)
+
+
+def sparse_adagrad(lr: float, eps: float = 1e-10,
+                   initial_acc: float = 0.0) -> Optimizer:
+    """Lazy Adagrad: same ``initial_acc``/``eps`` contract as the dense
+    ``optimizers.adagrad`` (the shared parametrized test pins this), with
+    the per-step cost O(K) instead of O(m)."""
+
+    def init(params):
+        return jax.tree_util.tree_map(
+            lambda x: jnp.full_like(x, initial_acc, dtype=jnp.float32),
+            params)
+
+    def update(g, acc, p=None):
+        return _split_pairs(_tmap(
+            lambda x, a: _Pair(*adagrad_leaf(x, a, lr=lr, eps=eps)), g, acc))
+
+    return Optimizer(init, update)
+
+
+class RowwiseAdamState(NamedTuple):
+    step: jax.Array
+    mu: object
+    nu: object
+
+
+def sparse_rowwise_adam(lr: float, b1: float = 0.9, b2: float = 0.999,
+                        eps: float = 1e-8) -> Optimizer:
+    """Lazy Adam with a row-wise second moment (one nu scalar per leading
+    index — for the flat pool each slot is its own row, i.e. elementwise).
+    Bias correction uses the global step; untouched rows keep stale moments
+    (SparseAdam semantics)."""
+
+    def init(params):
+        mu = jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), params)
+        nu = jax.tree_util.tree_map(
+            lambda x: jnp.zeros((x.shape[0],) if x.ndim > 1 else x.shape,
+                                jnp.float32), params)
+        return RowwiseAdamState(jnp.zeros((), jnp.int32), mu, nu)
+
+    def update(g, state, p=None):
+        step = state.step + 1
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        leaves, td = jax.tree_util.tree_flatten(g, is_leaf=is_sparse)
+        mus = td.flatten_up_to(state.mu)
+        nus = td.flatten_up_to(state.nu)
+        outs = [adam_leaf(x, m, n, lr=lr, b1=b1, b2=b2, bc1=bc1, bc2=bc2,
+                          eps=eps) for x, m, n in zip(leaves, mus, nus)]
+        unf = lambda i: jax.tree_util.tree_unflatten(
+            td, [o[i] for o in outs])
+        return unf(0), RowwiseAdamState(step, unf(1), unf(2))
+
+    return Optimizer(init, update)

@@ -29,7 +29,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.optim import sparse as sparse_lib
 from repro.optim.optimizers import Optimizer, apply_updates
+
+
+def throughput_stats(step_times, lookups_per_step: int = 0) -> dict:
+    """One throughput definition for trainer logs AND the kernel bench:
+    median step wall-time -> steps/s, scaled by the embedding-row lookups a
+    step performs (0 when unknown)."""
+    if not len(step_times):
+        return {"steps_per_sec": 0.0, "lookups_per_sec": 0.0}
+    sps = 1.0 / max(float(np.median(np.asarray(step_times))), 1e-12)
+    return {"steps_per_sec": sps,
+            "lookups_per_sec": sps * lookups_per_step}
 
 
 def _restore_like(template, restored):
@@ -49,13 +61,24 @@ class TrainerConfig:
     log_every: int = 50
     straggler_factor: float = 3.0
     async_ckpt: bool = True
+    # embedding-row lookups one step performs (B * F for field models);
+    # feeds the lookups_per_sec throughput stat when set
+    lookups_per_step: int = 0
 
 
 class Trainer:
     def __init__(self, cfg: TrainerConfig, loss_fn: Callable, params,
                  optimizer: Optimizer, batch_fn: Callable[[int], dict],
-                 donate: bool = True):
-        """``batch_fn(step) -> host batch dict`` (seekable by step)."""
+                 donate: bool = True, sparse_grads: bool | None = None):
+        """``batch_fn(step) -> host batch dict`` (seekable by step).
+
+        ``sparse_grads=None`` auto-enables the sparse-gradient pipeline
+        (``repro.optim.sparse``) when the gate is on and the params hold a
+        memory pool: the pool's gradient is a SparseGrad over the K touched
+        slots and the optimizers route it to the O(K) lazy update — exact
+        for Adagrad / momentum-less SGD.  ``REPRO_SPARSE_GRADS=0`` (or
+        ``sparse_grads=False``) keeps the dense O(m) path as the oracle.
+        """
         self.cfg = cfg
         self.loss_fn = loss_fn
         self.optimizer = optimizer
@@ -69,14 +92,21 @@ class Trainer:
         self._step_times: collections.deque[float] = collections.deque(
             maxlen=256)
         self.straggler_steps = 0
+        if sparse_grads is None:
+            sparse_grads = (sparse_lib.sparse_enabled()
+                            and sparse_lib.has_memory(params))
+        self.sparse_grads = sparse_grads
+        vg = (sparse_lib.sparse_value_and_grad(loss_fn) if sparse_grads
+              else jax.value_and_grad(loss_fn, has_aux=True))
 
         def _train_step(params, opt_state, batch):
-            (loss, metrics), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(params, batch)
+            (loss, metrics), grads = vg(params, batch)
             updates, opt_state = optimizer.update(grads, opt_state, params)
             params = apply_updates(params, updates)
             return params, opt_state, loss, metrics
 
+        # donation intact under sparse grads: the O(K) scatters write
+        # in-place into the donated pool / moment buffers
         self._jit_step = jax.jit(
             _train_step, donate_argnums=(0, 1) if donate else ())
 
@@ -123,7 +153,8 @@ class Trainer:
             if self._preempted:
                 log(f"[trainer] preempted at step {self.step}; checkpointing")
                 self.save(blocking=True)
-                return {"step": self.step, "loss": last_loss, "preempted": True}
+                return {"step": self.step, "loss": last_loss,
+                        "preempted": True, **self.throughput()}
             batch = self.batch_fn(self.step)
             t0 = time.perf_counter()
             self.params, self.opt_state, loss, metrics = self._jit_step(
@@ -134,8 +165,11 @@ class Trainer:
             last_loss = float(loss)
             self.step += 1
             if self.cfg.log_every and self.step % self.cfg.log_every == 0:
+                tp = self.throughput()
+                lk = (f" {tp['lookups_per_sec']:,.0f} lookups/s"
+                      if self.cfg.lookups_per_step else "")
                 log(f"[trainer] step {self.step} loss {last_loss:.4f} "
-                    f"({dt*1e3:.1f} ms)")
+                    f"({dt*1e3:.1f} ms, {tp['steps_per_sec']:.1f} steps/s{lk})")
             if (self.mgr and self.cfg.ckpt_every
                     and self.step % self.cfg.ckpt_every == 0):
                 self.save(blocking=False)
@@ -143,7 +177,13 @@ class Trainer:
             self.save(blocking=True)
             self.mgr.wait()
         return {"step": self.step, "loss": last_loss, "preempted": False,
-                "straggler_steps": self.straggler_steps}
+                "straggler_steps": self.straggler_steps,
+                **self.throughput()}
+
+    def throughput(self) -> dict:
+        """steps/s + lookups/s from the step wall-time ring buffer — the
+        same definition bench_kernels reports (trainer.throughput_stats)."""
+        return throughput_stats(self._step_times, self.cfg.lookups_per_step)
 
     def _track_straggler(self, dt: float):
         self._step_times.append(dt)   # deque(maxlen=256): O(1) ring buffer

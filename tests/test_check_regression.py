@@ -63,3 +63,19 @@ def test_committed_baseline_has_fused_rows():
     hbm = doc["modeled_hbm_bytes_per_lookup"]
     # fused removes at least the [N, d] int32 location-tensor traffic
     assert hbm["split"] - hbm["fused"] >= hbm["location_tensor_bytes"]
+
+
+def test_committed_baseline_passes_sparse_update_gate():
+    """PR-4 acceptance artifact: the committed ledger carries the
+    sparse/dense update rows + train_step_lma, the modeled advantage is
+    >= 3x, and the measured sparse update beats dense."""
+    from benchmarks.check_regression import sparse_speedup_failures
+    with open(BASELINE) as f:
+        doc = json.load(f)
+    rows = load_rows(doc)
+    shape = "4096x32@m=2^21"
+    assert ("train_step_lma", shape) in rows
+    assert sparse_speedup_failures(rows, doc) == []
+    assert doc["modeled_update_bytes_per_step"]["speedup"] >= 3.0
+    assert rows[("sparse_update_adagrad", shape)] < \
+        rows[("dense_update_adagrad", shape)]
