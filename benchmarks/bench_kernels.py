@@ -30,9 +30,11 @@ from benchmarks.common import ART_DIR, save_csv, time_fn
 # Sharded-lookup micro-bench: run in a subprocess with 8 forced host devices
 # (this process must keep its single real device).  Times the sharded LMA
 # lookup on a (2, 4) ('data','model') mesh against the replicated-memory
-# baseline and reports the paper-critical traffic numbers: per-device
-# gathered bytes are O(B*d) and per-device resident memory m/n_model —
-# independent of the total budget.
+# baseline — once per exchange strategy (psum fused/split, ring, all_to_all;
+# repro/dist/exchange.py) — and reports the paper-critical traffic numbers:
+# per-device gathered bytes are O(B*d) and per-device resident memory
+# m/n_model, independent of the total budget.  check_regression.py gates the
+# best-strategy sharded/replicated gap (sharded_gap_failures).
 _SHARDED_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
@@ -68,24 +70,35 @@ t_base = timeit(base, mem, gids)
 # pin the engine state per measurement so an inherited REPRO_FUSED_EMBED=0
 # cannot make both rows time the split path
 import repro.kernels.fused_embed.ops as feops
+
+def time_exchange(name):
+    with use_mesh(mesh):
+        sh = jax.jit(lambda m_, s, l, g: sharded_lma_lookup(
+            m_, s, l, g, lma, mesh, ("data",), exchange=name))
+        return timeit(sh, mem, store.sets, store.lengths, gids)
+
 feops.ENABLED = True
-with use_mesh(mesh):
-    sh = jax.jit(lambda m_, s, l, g: sharded_lma_lookup(
-        m_, s, l, g, lma, mesh, ("data",)))
-    t_fused = timeit(sh, mem, store.sets, store.lengths, gids)
+t_fused = time_exchange("psum")
 feops.ENABLED = False
-with use_mesh(mesh):
-    sh2 = jax.jit(lambda m_, s, l, g: sharded_lma_lookup(
-        m_, s, l, g, lma, mesh, ("data",)))
-    t_split = timeit(sh2, mem, store.sets, store.lengths, gids)
+t_split = time_exchange("psum")
+t_ring = time_exchange("ring")
+t_a2a = time_exchange("all_to_all")
 feops.ENABLED = True
 
 n_dp, n_model = 2, 4
+strategies = {"psum": min(t_fused, t_split), "ring": t_ring,
+              "all_to_all": t_a2a}
+best = min(strategies, key=strategies.get)
 print(json.dumps({
     "mesh": "2x4", "B": B, "d": D, "m": M,
     "replicated_us": round(t_base, 1),
     "sharded_fused_us": round(t_fused, 1),
     "sharded_split_us": round(t_split, 1),
+    "sharded_ring_us": round(t_ring, 1),
+    "sharded_all_to_all_us": round(t_a2a, 1),
+    "best_strategy": best,
+    "best_strategy_us": round(strategies[best], 1),
+    "sharded_over_replicated": round(strategies[best] / t_base, 3),
     "replicated_gathered_bytes_per_device": B * D * 4,
     "sharded_gathered_bytes_per_device": (B // n_dp) * D * 4,
     "replicated_resident_memory_bytes": M * 4,
@@ -261,6 +274,31 @@ def bench_sparse_update(rows: list, out: list) -> dict:
     return upd_bytes
 
 
+def bench_dedup_sort(rows: list, out: list) -> None:
+    """The O(K log K) element-dedup sort every sparse step pays
+    (``sparse.from_locations``: argsort + segment-sum over the raw touched
+    locations).  At near-uniform traffic on CPU this term alone can erase
+    the sparse-vs-dense win, which is why the relocated gate
+    (``repro.dist.exchange.sparse_worthwhile``) now prices it
+    (``dedup_sort_bytes``) instead of ignoring it."""
+    from repro.dist import exchange as exl
+    from repro.optim import sparse as sp
+
+    m, B, d = 1 << 21, 4096, 32
+    k = B * d
+    shape = f"{B}x{d}@m=2^21"
+    rng = np.random.default_rng(11)
+    # near-uniform traffic: the worst case for the dedup (few duplicates)
+    loc = jnp.asarray(rng.integers(0, m, (B, d), np.int32))
+    vals = jnp.asarray(rng.normal(size=(B, d)).astype(np.float32))
+    f = jax.jit(lambda l, v: sp.from_locations(l, v, (m,)).indices)
+    us = time_fn(f, loc, vals)
+    rows.append(("sparse_dedup_sort", shape, round(us, 1)))
+    out.append(f"kernels sparse_dedup_sort {shape}: {us:.0f} us for K={k} "
+               f"(modeled {exl.dedup_sort_bytes(k)/2**20:.1f} MiB-equiv; "
+               f"the sort term in exchange.sparse_worthwhile)")
+
+
 def bench_scheme_sweep(rows: list, out: list) -> None:
     """Registry-driven embed micro-bench: every *registered* scheme — not a
     hand-kept kind list — gets a ``scheme_embed_<kind>`` row, so registering
@@ -351,22 +389,32 @@ def run() -> list[str]:
     out.append(f"kernels cin ref: {us:.0f} us")
 
     upd_bytes = bench_sparse_update(rows, out)
+    bench_dedup_sort(rows, out)
     bench_scheme_sweep(rows, out)
 
     sharded = bench_sharded_lookup()
     if "error" not in sharded:
-        rows.append(("sharded_lma_lookup_fused", "4096xd32@m=2^21/8dev",
+        shape8 = "4096xd32@m=2^21/8dev"
+        rows.append(("sharded_lma_lookup_fused", shape8,
                      sharded["sharded_fused_us"]))
-        rows.append(("sharded_lma_lookup_split", "4096xd32@m=2^21/8dev",
+        rows.append(("sharded_lma_lookup_split", shape8,
                      sharded["sharded_split_us"]))
+        rows.append(("sharded_lma_lookup_ring", shape8,
+                     sharded["sharded_ring_us"]))
+        rows.append(("sharded_lma_lookup_all_to_all", shape8,
+                     sharded["sharded_all_to_all_us"]))
         rows.append(("replicated_lma_lookup", "4096xd32@m=2^21/1dev",
                      sharded["replicated_us"]))
         out.append(
-            f"kernels sharded_lma_lookup 8dev: fused "
-            f"{sharded['sharded_fused_us']:.0f} us vs split "
-            f"{sharded['sharded_split_us']:.0f} us "
-            f"(gathered/device {sharded['sharded_gathered_bytes_per_device']/2**10:.0f} KiB "
-            f"vs replicated {sharded['replicated_gathered_bytes_per_device']/2**10:.0f} KiB; "
+            f"kernels sharded_lma_lookup 8dev: psum fused "
+            f"{sharded['sharded_fused_us']:.0f} us / split "
+            f"{sharded['sharded_split_us']:.0f} us vs ring "
+            f"{sharded['sharded_ring_us']:.0f} us vs all_to_all "
+            f"{sharded['sharded_all_to_all_us']:.0f} us — best "
+            f"{sharded['best_strategy']} at "
+            f"{sharded['sharded_over_replicated']:.2f}x replicated "
+            f"({sharded['replicated_us']:.0f} us; "
+            f"gathered/device {sharded['sharded_gathered_bytes_per_device']/2**10:.0f} KiB, "
             f"resident M/device {sharded['sharded_resident_memory_bytes']/2**20:.0f} MiB "
             f"vs {sharded['replicated_resident_memory_bytes']/2**20:.0f} MiB)")
     else:

@@ -5,11 +5,14 @@ Diffs a fresh kernel-bench ledger against the committed baseline and fails
 1.3x), when a baseline row disappears from the fresh run, when a
 registered embedding scheme has no ``scheme_embed_*`` row in the fresh sweep
 (the sweep enumerates ``repro.embed.list_schemes()``, so a newly registered
-scheme is benched — and gated — automatically), or when the sparse
+scheme is benched — and gated — automatically), when the sparse
 memory-pool update loses its edge over the dense O(m) step
 (``sparse_speedup_failures``: modeled per-step HBM traffic must stay >= 3x
-better AND measured wall-clock strictly faster).  New rows are allowed
-(they become baseline once committed).
+better AND measured wall-clock strictly faster), or when the sharded lookup
+loses the exchange layer's win (``sharded_gap_failures``: best-strategy
+sharded/replicated wall-clock <= 2.5x at 8 devices AND ring or all_to_all
+strictly beating psum).  New rows are allowed (they become baseline once
+committed).
 
 Usage:
   python benchmarks/check_regression.py                 # re-run bench, diff
@@ -48,6 +51,13 @@ SPARSE_SPEEDUP_MIN = 3.0
 # ... while the measured wall-clock must still show the sparse update
 # strictly beating dense on this machine
 SPARSE_WALL_MIN = 1.15
+# the 8-device sharded lookup must stay within this factor of the
+# single-device replicated lookup, taking the best exchange strategy
+# (psum | ring | all_to_all — repro/dist/exchange.py).  The pre-exchange
+# psum-only path sat at ~3.2x; the strategy layer's acceptance bar is 2.5x
+# (measured: all_to_all ~1.15x), and a chunked strategy must actually beat
+# psum — if it stops doing so the exchange layer has regressed to dead code.
+SHARDED_GAP_MAX = 2.5
 
 
 def load_rows(path_or_doc) -> dict[tuple[str, str], float]:
@@ -115,6 +125,47 @@ def sparse_speedup_failures(fresh: dict, fresh_doc: dict | None = None,
     return failures
 
 
+def sharded_gap_failures(fresh: dict, fresh_doc: dict | None = None,
+                         max_gap: float = SHARDED_GAP_MAX) -> list[str]:
+    """The absolute perf claim of the exchange layer, enforced on the fresh
+    ledger's ``sharded_lookup`` block:
+
+      * best-strategy sharded wall-clock / replicated wall-clock <= max_gap
+        at 8 host devices (the pre-exchange psum path sat at ~3.2x);
+      * ring or all_to_all strictly beats the best psum form (fused/split) —
+        the chunked strategies must keep earning their place.
+    """
+    if fresh_doc is None:
+        return []
+    sh = fresh_doc.get("sharded_lookup")
+    if not sh:
+        return ["sharded_lookup block missing from the fresh ledger "
+                "(the sharded-gap gate cannot run)"]
+    if "error" in sh:
+        return [f"sharded_lookup bench failed: {sh['error'][:200]}"]
+    need = ("replicated_us", "sharded_fused_us", "sharded_split_us",
+            "sharded_ring_us", "sharded_all_to_all_us")
+    missing = [k for k in need if k not in sh]
+    if missing:
+        return [f"sharded_lookup block lacks {missing} "
+                f"(per-strategy rows required)"]
+    failures = []
+    psum = min(sh["sharded_fused_us"], sh["sharded_split_us"])
+    chunked = min(sh["sharded_ring_us"], sh["sharded_all_to_all_us"])
+    ratio = min(psum, chunked) / max(sh["replicated_us"], 1e-9)
+    if ratio > max_gap:
+        failures.append(
+            f"sharded/replicated lookup gap {ratio:.2f}x > {max_gap:.2f}x "
+            f"(best sharded {min(psum, chunked):.1f} us vs replicated "
+            f"{sh['replicated_us']:.1f} us at 8 devices)")
+    if chunked >= psum:
+        failures.append(
+            f"no chunked exchange beats psum: ring {sh['sharded_ring_us']:.1f}"
+            f" / all_to_all {sh['sharded_all_to_all_us']:.1f} vs psum "
+            f"{psum:.1f} us — the exchange layer has regressed")
+    return failures
+
+
 def compare(baseline: dict, fresh: dict,
             max_ratio: float = MAX_RATIO) -> list[str]:
     """Return human-readable failures (empty == no regression)."""
@@ -173,6 +224,7 @@ def main(argv=None) -> int:
     failures += [f"registered scheme {k!r} missing from the bench sweep"
                  for k in missing_schemes(fresh)]
     failures += sparse_speedup_failures(fresh, fresh_doc)
+    failures += sharded_gap_failures(fresh, fresh_doc)
     if failures:
         print(f"REGRESSION ({len(failures)} row(s)):")
         for f in failures:

@@ -1,22 +1,28 @@
 """Distribution layer: mesh context, sharding rules, and the sharded hot paths.
 
-Four modules, four responsibilities:
+Five modules, five responsibilities:
 
   context        thread-local mesh installation (``use_mesh``) and the
                  mesh-aware no-op ``constrain`` every model layer calls
   sharding       axis-set templates (ALL / DP / EP), ``resolve_template``
                  (template -> PartitionSpec against a concrete mesh), and the
                  path-regex rule tables used by ``launch/steps.py``
+  exchange       the pluggable cross-device exchange strategies (psum | ring
+                 | all_to_all) behind every sharded-memory collective, the
+                 ``resolve_exchange`` traffic model that picks one, and the
+                 relocated ``sparse_worthwhile`` sparse-vs-dense update gate
   sharded_memory the paper-critical path: common-memory lookups with the [m]
-                 pool sharded over the 'model' axis (mask-local-gather + psum,
-                 O(B*d) per-device traffic independent of m)
+                 pool sharded over the 'model' axis — thin shard_map drivers
+                 over the exchange strategies, O(B*d) per-device traffic
+                 independent of m
   flash_decode   decode attention with the KV-cache *length* sharded over
                  'model' (+ idle dp axes): local online-softmax partials
                  merged by log-sum-exp across shards
 
 Everything degrades gracefully: with no mesh installed (``current_mesh() is
-None``) the single-device code paths in core/nn are taken unchanged.
+None``) the single-device code paths in core/nn are taken unchanged, and with
+no 'model' axis every exchange resolves to the degenerate psum.
 """
-from repro.dist import context, flash_decode, sharded_memory, sharding
+from repro.dist import context, exchange, flash_decode, sharded_memory, sharding
 
-__all__ = ["context", "sharding", "sharded_memory", "flash_decode"]
+__all__ = ["context", "exchange", "sharding", "sharded_memory", "flash_decode"]

@@ -1,0 +1,436 @@
+"""Pluggable cross-device exchange strategies for the sharded memory pool.
+
+Every collective the sharded common-memory path performs — lookup assembly,
+signature-set reconstruction, and the sparse-update broadcast — goes through
+one of three interchangeable :class:`Exchange` strategies:
+
+``psum``
+    The original mask-local-gather + ``psum`` over 'model' (the bit-exact
+    oracle).  Every rank computes locations for the FULL local batch, gathers
+    the slots in its own slab, and one all-reduce assembles the result.  The
+    only strategy compatible with the fused slab kernel (which computes
+    locations in-VMEM), and the cheapest when location math is free.
+
+``ring``
+    Batch shards ``ppermute`` around the 'model' ring.  Each rank computes
+    locations ONCE for its 1/n_model chunk of the batch; the (locations,
+    accumulator) pair then visits every slab, accumulating each rank's
+    contribution, so the per-step neighbor transfer overlaps the next slab
+    gather instead of waiting on a global reduction.  Location work drops by
+    n_model — the win for expensive allocators (LMA's set reconstruction +
+    minhash).
+
+``all_to_all``
+    Chunked locations are all-gathered, every rank gathers its slab's
+    contribution for the full batch, and a single ``all_to_all`` hands each
+    rank exactly the partial sums for the chunk it owns (a reduce-scatter
+    spelled as all-to-all + local sum), followed by one all-gather of the
+    finished chunks.  For the sparse-update exchange this strategy keeps each
+    rank's owned (index, value) slices local instead of replicating the full
+    K vectors via psum — the per-step update exchange shrinks by ~n_model.
+
+All three produce *bit-identical* lookups: exactly one rank owns each slot,
+so every cross-rank sum adds exact zeros in some order, and x + 0.0 is
+bitwise x.  ``tests/test_exchange.py`` pins ring/all_to_all against the psum
+oracle for every registered scheme, forward and through 10 training steps.
+
+Selection is ``REPRO_DIST_EXCHANGE`` (psum | ring | all_to_all | auto) with
+``auto`` resolved by the traffic model in :func:`resolve_exchange` — the
+promoted, testable form of the gate that used to be hard-coded in
+``launch/steps.py::_sparse_worthwhile`` (now :func:`sparse_worthwhile`,
+including the O(K log K) dedup-sort term the old gate ignored).
+``repro.embed.backends.ShardedBackend`` threads the strategy into the
+drivers in ``repro/dist/sharded_memory.py``.
+"""
+from __future__ import annotations
+
+import math
+import os
+from typing import ClassVar
+
+import jax
+import jax.numpy as jnp
+
+# Forced strategy: "psum" | "ring" | "all_to_all"; None/"auto" -> cost model.
+# Tests may set FORCED directly; launchers via REPRO_DIST_EXCHANGE / --exchange.
+_env = os.environ.get("REPRO_DIST_EXCHANGE", "auto").strip().lower()
+FORCED: str | None = None if _env in ("", "auto") else _env
+
+
+def model_size(mesh) -> int:
+    return int(dict(mesh.shape).get("model", 1))
+
+
+# --------------------------------------------------------- slab primitives
+#
+# Both run INSIDE a shard_map over ``axis_name``.  ``shard`` is this rank's
+# axis-0 slab of a row-sharded array; ``idx`` holds GLOBAL indices.
+
+def local_gather(shard: jax.Array, idx: jax.Array,
+                 axis_name: str = "model") -> jax.Array:
+    """Gather the indices that land in this rank's slab, exact 0 elsewhere."""
+    n_local = shard.shape[0]
+    rel = idx - jax.lax.axis_index(axis_name) * n_local
+    mine = (rel >= 0) & (rel < n_local)
+    vals = jnp.take(shard, jnp.clip(rel, 0, n_local - 1), axis=0)
+    mask = mine.reshape(mine.shape + (1,) * (vals.ndim - mine.ndim))
+    return jnp.where(mask, vals, jnp.zeros((), vals.dtype))
+
+
+def local_gather_psum(shard: jax.Array, idx: jax.Array,
+                      axis_name: str = "model") -> jax.Array:
+    """Axis-0-sharded slab + replicated global indices -> full values.
+
+    Exactly one rank owns each index, so the psum (exact for integers, x+0
+    for floats) reproduces the single-device gather bitwise; its transpose is
+    the sharded scatter-add (zero-filled ranks scatter 0).
+    """
+    return jax.lax.psum(local_gather(shard, idx, axis_name), axis_name)
+
+
+def chunk_for_rank(x: jax.Array, rank, n_model: int) -> jax.Array:
+    """This rank's contiguous 1/n_model slice of the leading axis (the
+    batch-chunking rule every chunked strategy and driver shares)."""
+    c = x.shape[0] // n_model
+    return jax.lax.dynamic_slice_in_dim(x, rank * c, c, axis=0)
+
+
+# -------------------------------------------------------------- strategies
+
+class Exchange:
+    """One cross-device exchange policy; all methods run inside shard_map.
+
+    ``lookup(mem_l, gids, loc_fn, d, n_model)``
+        Full sharded lookup: flat [n] global ids (identical on every model
+        rank) -> [n, d] values, replicated over 'model'.  ``loc_fn`` maps a
+        flat id chunk to [k, d] int32 locations; chunked strategies call it
+        with per-rank chunks, so any collective inside it must be uniform in
+        chunk length (``set_lookup``/``set_lookup_many`` are).
+    ``set_lookup(shard, idx, n_model)`` / ``set_lookup_many(shards, ...)``
+        Row-sharded table(s) + per-rank indices -> complete rows for THOSE
+        indices (exact for integers).  Unlike ``local_gather_psum`` the
+        chunked strategies accept a different ``idx`` on every rank; the
+        ``_many`` form reconstructs several equally-row-sharded tables in
+        ONE exchange round (ring: one traversal carrying an accumulator per
+        table; all_to_all: one shared index all-gather) — the LMA lookup
+        uses it for (sets, lengths).
+    ``reduce_update(u, n_model)``
+        The sparse-update exchange: per-rank owner-masked update values ->
+        what ``sharded_sparse_apply`` consumes.
+    """
+
+    name: ClassVar[str]
+    # all_to_all leaves update values owner-partial (see reduce_update)
+    partial_updates: ClassVar[bool] = False
+
+    def eligible(self, n_flat: int, n_model: int) -> bool:
+        """Can this strategy run a lookup of ``n_flat`` rows per device?"""
+        return True
+
+    def lookup(self, mem_l, gids, loc_fn, d: int, n_model: int,
+               axis: str = "model") -> jax.Array:
+        raise NotImplementedError
+
+    def set_lookup(self, shard, idx, n_model: int,
+                   axis: str = "model") -> jax.Array:
+        return self.set_lookup_many((shard,), idx, n_model, axis)[0]
+
+    def set_lookup_many(self, shards: tuple, idx, n_model: int,
+                        axis: str = "model") -> tuple:
+        raise NotImplementedError
+
+    def reduce_update(self, u, n_model: int, axis: str = "model") -> jax.Array:
+        return jax.lax.psum(u, axis)
+
+
+class PsumExchange(Exchange):
+    """Mask-local-gather + one global psum (the bit-exact oracle)."""
+
+    name = "psum"
+
+    def lookup(self, mem_l, gids, loc_fn, d, n_model, axis="model"):
+        return local_gather_psum(mem_l, loc_fn(gids), axis)
+
+    def set_lookup_many(self, shards, idx, n_model, axis="model"):
+        # requires ``idx`` replicated over 'model' (true under psum.lookup,
+        # whose loc_fn sees the full batch on every rank)
+        return tuple(local_gather_psum(s, idx, axis) for s in shards)
+
+
+class RingExchange(Exchange):
+    """ppermute batch chunks around the 'model' ring.
+
+    The chunk's (locations, accumulator) pair visits every slab once; each
+    step's neighbor transfer overlaps the next slab gather.  Location math
+    runs once per chunk — 1/n_model of the psum strategy's.
+    """
+
+    name = "ring"
+
+    def eligible(self, n_flat, n_model):
+        return n_model > 1 and n_flat % n_model == 0
+
+    def _ring(self, shards, idx, accs, n_model, axis):
+        """One ring traversal: ``idx`` and every accumulator ride together,
+        each rank adding its slab's contribution per step."""
+        perm = [(i, (i + 1) % n_model) for i in range(n_model)]
+        for t in range(n_model):
+            accs = tuple(a + local_gather(s, idx, axis)
+                         for s, a in zip(shards, accs))
+            if t < n_model - 1:
+                idx = jax.lax.ppermute(idx, axis, perm)
+                accs = tuple(jax.lax.ppermute(a, axis, perm) for a in accs)
+        # after the last gather the chunk sits one hop short of home
+        return tuple(jax.lax.ppermute(a, axis, perm) for a in accs)
+
+    def lookup(self, mem_l, gids, loc_fn, d, n_model, axis="model"):
+        rank = jax.lax.axis_index(axis)
+        loc = loc_fn(chunk_for_rank(gids, rank, n_model))    # [c, d] ONCE
+        acc = jnp.zeros(loc.shape[:1] + (d,), mem_l.dtype)
+        acc, = self._ring((mem_l,), loc, (acc,), n_model, axis)
+        return jax.lax.all_gather(acc, axis).reshape(-1, d)
+
+    def set_lookup_many(self, shards, idx, n_model, axis="model"):
+        accs = tuple(jnp.zeros(idx.shape + s.shape[1:], s.dtype)
+                     for s in shards)
+        return self._ring(shards, idx, accs, n_model, axis)
+
+
+class AllToAllExchange(Exchange):
+    """Owner-sliced exchanges: reduce-scatter spelled as all_to_all + sum.
+
+    Lookup: chunked locations are all-gathered, each rank contributes its
+    slab's partial for the full batch, and the all_to_all hands every rank
+    only the partials for ITS chunk (summed locally), then one all-gather
+    replicates the finished chunks.  Update: the psum of the [K, ...] update
+    values disappears entirely — each rank's copy already holds the exact
+    values at its owned slots (zeros elsewhere), which is all the masked
+    local scatter in ``sharded_sparse_apply`` reads.
+    """
+
+    name = "all_to_all"
+    partial_updates = True
+
+    def eligible(self, n_flat, n_model):
+        return n_model > 1 and n_flat % n_model == 0
+
+    def lookup(self, mem_l, gids, loc_fn, d, n_model, axis="model"):
+        rank = jax.lax.axis_index(axis)
+        loc = loc_fn(chunk_for_rank(gids, rank, n_model))            # [c, d]
+        c = loc.shape[0]
+        full = jax.lax.all_gather(loc, axis).reshape(-1, d)  # [n, d] in order
+        part = local_gather(mem_l, full, axis).reshape(n_model, c, d)
+        recv = jax.lax.all_to_all(part, axis, 0, 0)          # [P, c, d]
+        mine = jnp.sum(recv, axis=0)                         # my chunk, done
+        return jax.lax.all_gather(mine, axis).reshape(-1, d)
+
+    def set_lookup_many(self, shards, idx, n_model, axis="model"):
+        full = jax.lax.all_gather(idx, axis).reshape(-1)   # shared: ONE round
+        outs = []
+        for s in shards:
+            part = local_gather(s, full, axis)
+            part = part.reshape((n_model,) + idx.shape + s.shape[1:])
+            outs.append(jnp.sum(jax.lax.all_to_all(part, axis, 0, 0), axis=0))
+        return tuple(outs)
+
+    def reduce_update(self, u, n_model, axis="model"):
+        # Owner-partial: each rank keeps exactly its owned slices.  Valid
+        # ONLY for consumption by the masked local scatter (sharded_sparse_
+        # apply); anything that reads the values outside a 'model' shard_map
+        # sees one rank's partial.
+        return u
+
+
+PSUM = PsumExchange()
+RING = RingExchange()
+ALL_TO_ALL = AllToAllExchange()
+_STRATEGIES = {e.name: e for e in (PSUM, RING, ALL_TO_ALL)}
+
+
+def get_exchange(name: str) -> Exchange:
+    if name not in _STRATEGIES:
+        raise KeyError(f"unknown exchange strategy {name!r}; "
+                       f"known: {sorted(_STRATEGIES)}")
+    return _STRATEGIES[name]
+
+
+def list_exchanges() -> list[str]:
+    return sorted(_STRATEGIES)
+
+
+# -------------------------------------------------------------- cost model
+#
+# Modeled per-device bytes, the same accounting style as
+# ``bench_kernels.modeled_lookup_bytes``: collective terms count bytes a
+# device sends (ring all-reduce ~ 2(P-1)/P x buffer), allocation terms count
+# the write+read round-trip of the [rows, d] int32 location tensor plus any
+# per-row exchange the allocator itself needs (LMA's set reconstruction).
+# The model is what ``resolve_exchange`` ranks and what the dryrun meta
+# records; measured CPU rows live in BENCH_kernels.json.
+
+def fused_slab_eligible(m: int, n_model: int, itemsize: int = 4) -> bool:
+    """THE gate for "the per-device [m / n_model] slab admits the fused
+    engine" — shared by ``resolve_exchange``, the sharded_memory drivers,
+    and the dryrun meta so their pricing can never disagree.  ``itemsize``
+    is the pool dtype's (callers with a concrete array pass it; 4 = the f32
+    default)."""
+    from repro.kernels.fused_embed import ops as fe
+    return fe.fused_enabled() and fe.fused_supported(m // max(n_model, 1),
+                                                     itemsize)
+
+
+def alloc_bytes_per_row(d: int, set_width: int = 0):
+    """Location-math bytes for ONE batch row on the split path: the [d]
+    int32 location row's HBM round-trip plus the signature-set row exchange
+    for set-based allocators (LMA).  The fused-slab discount is NOT applied
+    here — it belongs to the psum strategy alone (``lookup_cost(fused=)``),
+    since only psum can run the fused kernel."""
+    return 8 * d + 8 * set_width
+
+
+RING_OVERLAP = 0.5   # fraction of ring step transfers hidden behind gathers
+
+
+def lookup_cost(n_model: int, n: int, d: int,
+                alloc_row: float | None = None,
+                fused: bool = False) -> dict[str, float]:
+    """Per-device modeled bytes of one sharded lookup of ``n`` flat rows.
+
+    psum: every rank runs location math for all n rows, one [n, d]
+    all-reduce.  ring: location math on n/P rows, (P-1) neighbor transfers
+    of the (loc, acc) chunk pair — charged at ``RING_OVERLAP`` because each
+    transfer runs concurrently with the next slab gather — plus the final
+    homing permute and all-gather.  all_to_all: location math on n/P rows,
+    all-gather of locations + all_to_all of partials + all-gather of
+    outputs (a barrier at every stage: nothing overlaps).
+
+    ``fused`` removes the [d] location-row round-trip from the PSUM entry
+    only: the fused slab kernel hashes in-VMEM, and only the psum strategy
+    can run it — the chunked strategies always pay the split path's
+    location bytes.
+    """
+    P = max(n_model, 1)
+    base = 8 * d if alloc_row is None else alloc_row
+    a = base * n
+    a_psum = (max(base - 8 * d, 0) if fused else base) * n
+    row = 4 * d * n                    # one [n, d] f32 / int32 pass
+    frac = (P - 1) / P
+    return {
+        "psum": a_psum + 2 * frac * row,
+        "ring": a / P + RING_OVERLAP * 2 * frac * row + frac * row + row / P,
+        "all_to_all": a / P + 3 * frac * row,
+    }
+
+
+def resolve_exchange(mesh, B: int | None = None, d: int | None = None,
+                     m: int | None = None, K: int | None = None,
+                     alloc_row: float | None = None,
+                     fused: bool | None = None) -> Exchange:
+    """Pick the exchange strategy for a lookup of ``B`` per-device flat rows.
+
+    ``REPRO_DIST_EXCHANGE`` (or ``FORCED``) short-circuits the model.  With
+    unknown shapes, or a batch the 'model' axis does not divide, the psum
+    oracle is the safe answer.  ``fused`` (derived from ``m`` via the
+    shared ``fused_slab_eligible`` gate when not given) feeds the psum-only
+    discount: a slab that fits the fused engine's VMEM budget hashes
+    in-VMEM, so the psum strategy's location bytes are ~0 while the chunked
+    strategies still pay the split path's; over-budget slabs pay everywhere
+    and the chunked strategies take over.  ``K`` (touched slots) is
+    accepted for signature parity with the sparse gate; lookups ignore it.
+    """
+    n_model = model_size(mesh) if mesh is not None else 1
+    if n_model <= 1:
+        return PSUM
+    if FORCED is not None:
+        return get_exchange(FORCED)
+    if B is None or d is None or B % n_model != 0:
+        return PSUM
+    if fused is None:
+        fused = m is not None and fused_slab_eligible(m, n_model)
+    costs = lookup_cost(n_model, B, d, alloc_row, fused=fused)
+    name = min(costs, key=costs.get)
+    ex = _STRATEGIES[name]
+    return ex if ex.eligible(B, n_model) else PSUM
+
+
+# ------------------------------------------------- sparse-update gate
+#
+# Relocated from launch/steps.py::_sparse_worthwhile, extended with (a) the
+# per-strategy exchange term (all_to_all keeps owned slices local instead of
+# replicating the K vectors) and (b) the O(K log K) dedup-sort term the old
+# gate ignored — on CPU at near-uniform traffic the sort alone can erase the
+# sparse win (ROADMAP item; ``sparse_dedup_sort`` bench row measures it).
+
+SORT_BYTES_PER_KEY_PASS = 4.0      # one 4-byte key pass per merge level
+
+
+def dedup_sort_bytes(k: int) -> float:
+    """Modeled bytes of the SparseGrad dedup sort: K keys x log2 K passes."""
+    if k <= 1:
+        return 0.0
+    return SORT_BYTES_PER_KEY_PASS * k * math.log2(k)
+
+
+def sparse_update_cost(n_model: int, n_lookups: int, d: int, m: int,
+                       row_mode: bool = False) -> dict[str, float]:
+    """Per-device modeled bytes of one memory-pool optimizer step.
+
+    ``dense``: the dense path's slab tax — zeros + scatter + the O(m_local)
+    optimizer read-modify-write, ~8 f32 passes over the model-sharded pool
+    (bench_kernels.modeled_update_bytes).  ``sparse_psum``: the replicated
+    (indices, values) pair costs its construction broadcast plus the [K]
+    update-value psum.  ``sparse_all_to_all``: each rank keeps only its
+    owned 1/n_model slice (the index routing still touches the full index
+    vector once).  Both sparse forms pay the dedup sort.
+    """
+    P = max(n_model, 1)
+    k_elems = n_lookups * d
+    k_idx = n_lookups if row_mode else k_elems
+    idx_b, val_b = 4 * k_idx, 4 * k_elems
+    sort = dedup_sort_bytes(k_idx)
+    return {
+        "dense": 8 * (m // P) * 4,
+        "sparse_psum": 2 * (idx_b + val_b) + sort,
+        "sparse_all_to_all": (idx_b + val_b) / P + idx_b + sort,
+        "dedup_sort": sort,
+    }
+
+
+def sparse_worthwhile(mesh, n_lookups: int, d: int, m: int,
+                      row_mode: bool = False) -> bool:
+    """Should the training step carry SparseGrad pool gradients here?
+
+    True when the best sparse exchange (psum, or all_to_all when a 'model'
+    axis exists) models cheaper than the dense slab update.  Single-host
+    training always picks sparse (K << m).  A 16x16 pod cell with a 65k
+    global batch and element-level (lma) records picks dense — the dedup
+    sort on ~54M element locations dominates; the same cell with row-aligned
+    records (hashed_row / freq) now goes sparse, because the all_to_all
+    exchange cuts the replicated-pair cost by ~n_model and the row-id sort
+    is d times smaller.  That crossover move is the point of the strategy.
+    """
+    n_model = model_size(mesh) if mesh is not None else 1
+    costs = sparse_update_cost(n_model, n_lookups, d, m, row_mode)
+    # ring forces fall back to psum for the update exchange
+    # (resolve_update_exchange), so they are priced as psum here too
+    best = costs["sparse_psum"] if (n_model <= 1
+                                    or FORCED in ("psum", "ring")) \
+        else min(costs["sparse_psum"], costs["sparse_all_to_all"])
+    return best < costs["dense"]
+
+
+def resolve_update_exchange(mesh) -> Exchange:
+    """The strategy for the sparse-update exchange (moment update + apply).
+
+    all_to_all whenever a non-trivial 'model' axis exists: its update
+    exchange is free (owner-partial values feed the masked local scatter
+    directly), strictly dominating the [K]-sized psum.  ``ring`` forces fall
+    back to psum here — ring is a lookup strategy; it has no update form.
+    """
+    n_model = model_size(mesh) if mesh is not None else 1
+    if n_model <= 1:
+        return PSUM
+    if FORCED is not None:
+        ex = get_exchange(FORCED)
+        return PSUM if ex is RING else ex
+    return ALL_TO_ALL

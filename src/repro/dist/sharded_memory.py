@@ -1,33 +1,42 @@
-"""Sharded common-memory lookups: mask-local-gather + psum over 'model'.
+"""Sharded common-memory lookups: thin drivers over the exchange strategies.
 
 The paper's memory pool M is a flat [m] vector; production budgets (10^8+
 slots) cannot live replicated on every chip.  Here M is sharded over the
 'model' axis (each device owns a contiguous [m / n_model] slab, replicated
-across the dp axes) and a lookup runs as a ``shard_map``:
+across the dp axes) and every lookup runs as a ``shard_map`` whose
+cross-device traffic is delegated to a pluggable :class:`~repro.dist.
+exchange.Exchange` strategy (``repro/dist/exchange.py``):
 
-  1. every device computes the full [n_local, d] location matrix for its
-     dp-shard of the batch (allocation is pure hashing — no communication);
-  2. it gathers the locations that land in its own slab and zero-fills the
-     rest (the mask-local-gather);
-  3. a ``psum`` over 'model' assembles complete embeddings: exactly one
-     device contributed each element, so the sum is bit-identical to the
-     single-device gather, and the transpose of (gather + psum) is exactly
-     the sharded scatter-add the gradient needs — AD gives it for free.
+``psum``         mask-local-gather + one global psum — the bit-exact oracle,
+                 and the only strategy the fused Pallas slab kernel
+                 (``repro/kernels/fused_embed``) composes with: locations are
+                 computed and mask-gathered per batch tile in VMEM, then one
+                 psum assembles complete embeddings.
+``ring``         batch chunks ppermute around the ring; each rank's slab
+                 gathers overlap the neighbor transfer, and location math
+                 (LMA set reconstruction + minhash) runs once per chunk —
+                 1/n_model of the psum strategy's.
+``all_to_all``   owner-sliced exchanges: locations all-gather, partials
+                 reduce-scatter via all_to_all, finished chunks all-gather;
+                 the sparse-update psum disappears entirely (owner-partial
+                 update values feed the masked local scatter directly).
 
-Steps 1-2 run inside the fused Pallas engine when the slab fits its VMEM
-budget (``repro/kernels/fused_embed``): locations are computed and masked-
-gathered per batch tile without the [n_local, d] location tensor touching
-HBM, and the engine's custom VJP scatter-adds straight into the slab
-gradient.  The split allocation + ``local_gather_psum`` path below remains
-the fallback (and the oracle the fused path must match bit-for-bit).
+All three are bit-identical on the forward pass (exactly one rank owns each
+slot, so cross-rank sums only ever add exact zeros) and 1e-6 on gradients —
+``tests/test_exchange.py`` pins ring/all_to_all against the psum oracle for
+every registered scheme; ``tests/test_sharded.py`` pins psum against the
+single-device lookup.  Strategy selection is ``REPRO_DIST_EXCHANGE`` or the
+``resolve_exchange`` traffic model; every driver takes ``exchange=`` for an
+explicit override (name or instance).
 
 Per-device traffic is O(n_local * d) — independent of m, the property
-``benchmarks/bench_kernels.py`` records and ``tests/test_sharded.py`` checks
-against the single-device oracle (forward bit-identical, grads to 1e-6).
+``benchmarks/bench_kernels.py`` records per strategy and
+``benchmarks/check_regression.py`` gates (``sharded_gap_failures``).
 
 For LMA the D' store rows are sharded over 'model' the same way and each
-batch row's D_v set is reconstructed with the same gather + psum before the
-location hashes run (integer psum: exact).
+batch row's D_v set is reconstructed through the same strategy
+(``Exchange.set_lookup``; integer sums: exact) before the location hashes
+run.
 
 Dispatch here is owned by ``repro.embed.backends.ShardedBackend``: schemes
 with a bespoke path (lma, hashed_*) plug in directly; any other registered
@@ -44,11 +53,12 @@ from repro.core import allocation as alc
 from repro.core.allocation import LMAParams
 from repro.core.memory import lookup
 from repro.core.signatures import DenseSignatureStore
+from repro.dist import exchange as exl
+from repro.dist.exchange import local_gather_psum  # noqa: F401  (public API)
 from repro.dist.sharding import shard_map
 
 
-def _model_size(mesh) -> int:
-    return int(dict(mesh.shape).get("model", 1))
+_model_size = exl.model_size
 
 
 def _fused_slab(mem_l) -> bool:
@@ -56,6 +66,14 @@ def _fused_slab(mem_l) -> bool:
     from repro.kernels.fused_embed import ops as fe
     return fe.fused_enabled() and fe.fused_supported(int(mem_l.shape[0]),
                                                      mem_l.dtype.itemsize)
+
+
+def _fused_eligible(memory, n_model: int) -> bool:
+    """The driver-side form of the shared fused-slab gate, used to price
+    the psum strategy's location bytes before the shard_map opens: a
+    fused-eligible slab hashes in-VMEM, so its location tensor is free."""
+    return exl.fused_slab_eligible(int(memory.shape[0]), n_model,
+                                   memory.dtype.itemsize)
 
 
 def _slab_base(mem_l, axis_name="model") -> jax.Array:
@@ -79,47 +97,55 @@ def _bspec(batch_axes) -> tuple | None:
     return batch_axes if len(batch_axes) > 1 else batch_axes[0]
 
 
-def local_gather_psum(shard: jax.Array, idx: jax.Array,
-                      axis_name="model") -> jax.Array:
-    """Axis-0-sharded slab + global indices -> full values, gather + psum.
+def _resolve(exchange, mesh, n_flat: int, d: int, m: int | None,
+             alloc_row: float | None = None,
+             fused: bool = False) -> exl.Exchange:
+    """Driver-side strategy resolution: explicit arg > env > cost model,
+    with an eligibility fallback to psum (odd chunking, tiny batches).
+    ``fused`` prices the psum-only fused-slab discount."""
+    if isinstance(exchange, str):
+        exchange = exl.get_exchange(exchange)
+    if exchange is None:
+        exchange = exl.resolve_exchange(mesh, B=n_flat, d=d, m=m,
+                                        alloc_row=alloc_row, fused=fused)
+    n_model = _model_size(mesh)
+    if not exchange.eligible(n_flat, n_model):
+        exchange = exl.PSUM
+    return exchange
 
-    Works for the memory pool M ([m_local] floats, ``idx`` = [.., d]
-    locations) and for row-sharded integer tables (D' store sets/lengths,
-    ``idx`` = value ids).  Must run inside a ``shard_map`` over
-    ``axis_name``.  Exactly one rank owns each index, so the psum (exact for
-    integers, x+0 for floats) reproduces the single-device gather bitwise;
-    its transpose is the sharded scatter-add (zero-filled ranks scatter 0).
-    """
-    n_local = shard.shape[0]
-    rank = jax.lax.axis_index(axis_name)
-    rel = idx - rank * n_local
-    mine = (rel >= 0) & (rel < n_local)
-    vals = jnp.take(shard, jnp.clip(rel, 0, n_local - 1), axis=0)
-    mask = mine.reshape(mine.shape + (1,) * (vals.ndim - mine.ndim))
-    return jax.lax.psum(jnp.where(mask, vals, jnp.zeros((), vals.dtype)),
-                        axis_name)
+
+def _local_flat(mesh, dp_axes, gids) -> tuple[tuple, int]:
+    """(resolved batch axes, per-device flat row count) for a gid batch."""
+    batch = _batch_axes(mesh, dp_axes, int(gids.shape[0]))
+    prod = int(np.prod([mesh.shape[a] for a in batch])) if batch else 1
+    return batch, int(np.prod(gids.shape)) // prod
 
 
 def sharded_location_lookup(memory: jax.Array, gids: jax.Array, loc_fn,
-                            d: int, mesh, dp_axes) -> jax.Array:
+                            d: int, mesh, dp_axes,
+                            exchange=None) -> jax.Array:
     """Generic sharded lookup for any pure-location scheme.
 
     ``loc_fn``: [n] flat global ids -> [n, d] int32 locations; it must be
-    communication-free (pure hashing / replicated-buffer math), because it
-    runs per rank inside the shard_map.  This is the path registry schemes
-    get for free (``repro.embed.backends.ShardedBackend``) when they don't
-    provide a bespoke one.  Bit-identical to ``lookup(memory, loc_fn(gids))``.
+    communication-free (pure hashing / replicated-buffer math), because the
+    chunked strategies call it with per-rank batch chunks inside the
+    shard_map.  This is the path registry schemes get for free
+    (``repro.embed.backends.ShardedBackend``) when they don't provide a
+    bespoke one.  Bit-identical to ``lookup(memory, loc_fn(gids))`` under
+    every strategy.
     """
     m = int(memory.shape[0])
     n_model = _model_size(mesh)
     if n_model <= 1 or m % n_model != 0:
         return lookup(memory, loc_fn(gids.reshape(-1))).reshape(*gids.shape, d)
-    batch = _batch_axes(mesh, dp_axes, int(gids.shape[0]))
+    batch, n_flat = _local_flat(mesh, dp_axes, gids)
+    ex = _resolve(exchange, mesh, n_flat, d, m,
+                  alloc_row=exl.alloc_bytes_per_row(d))
     bspec = _bspec(batch)
     gspec = P(bspec, *([None] * (gids.ndim - 1)))
 
     def body(mem_l, gids_l):
-        out = local_gather_psum(mem_l, loc_fn(gids_l.reshape(-1)))
+        out = ex.lookup(mem_l, gids_l.reshape(-1), loc_fn, d, n_model)
         return out.reshape(*gids_l.shape, d)
 
     fn = shard_map(body, mesh=mesh, in_specs=(P("model"), gspec),
@@ -128,9 +154,49 @@ def sharded_location_lookup(memory: jax.Array, gids: jax.Array, loc_fn,
     return fn(memory, gids)
 
 
+def sharded_set_lookup(table: jax.Array, gids: jax.Array, mesh, dp_axes,
+                       exchange=None) -> jax.Array:
+    """Reconstruct rows of a 'model'-row-sharded integer table (the D' store
+    sets/lengths) for a dp-sharded gid batch — the standalone form of the
+    set exchange every LMA lookup runs.  Exact (integer sums)."""
+    n_model = _model_size(mesh)
+    n_rows = int(table.shape[0])
+    if n_model <= 1 or n_rows % n_model != 0:
+        return jnp.take(table, gids.reshape(-1), axis=0).reshape(
+            gids.shape + table.shape[1:])
+    batch, n_flat = _local_flat(mesh, dp_axes, gids)
+    # a set lookup has no location math (idx IS the input), so its psum
+    # pays no alloc term — price it honestly or auto would pick a chunked
+    # strategy that does psum's full gather PLUS three collectives
+    ex = _resolve(exchange, mesh, n_flat,
+                  int(np.prod(table.shape[1:], initial=1)), None,
+                  alloc_row=0.0)
+    bspec = _bspec(batch)
+    gspec = P(bspec, *([None] * (gids.ndim - 1)))
+    trail = len(table.shape) - 1
+
+    def body(tab_l, gids_l):
+        flat = gids_l.reshape(-1)
+        if ex.name == "psum":
+            out = ex.set_lookup(tab_l, flat, n_model)
+        else:
+            rank = jax.lax.axis_index("model")
+            mine = ex.set_lookup(tab_l, exl.chunk_for_rank(flat, rank, n_model),
+                                 n_model)
+            out = jax.lax.all_gather(mine, "model").reshape(
+                (-1,) + tab_l.shape[1:])
+        return out.reshape(gids_l.shape + tab_l.shape[1:])
+
+    fn = shard_map(body, mesh=mesh, in_specs=(P("model"), gspec),
+                   out_specs=P(bspec, *([None] * (gids.ndim - 1 + trail))),
+                   check_vma=False)
+    return fn(table, gids)
+
+
 def sharded_hashed_lookup(memory: jax.Array, gids: jax.Array, d: int, m: int,
                           seed: int, mesh, dp_axes,
-                          kind: str = "hashed_elem") -> jax.Array:
+                          kind: str = "hashed_elem",
+                          exchange=None) -> jax.Array:
     """Hashing-trick lookup with M sharded over 'model'.
 
     gids [...]: global value ids (leading dim dp-sharded when divisible)
@@ -142,19 +208,22 @@ def sharded_hashed_lookup(memory: jax.Array, gids: jax.Array, d: int, m: int,
     if n_model <= 1 or m % n_model != 0:
         return lookup(memory, alloc(gids.reshape(-1), d, m, seed)).reshape(
             *gids.shape, d)
-    batch = _batch_axes(mesh, dp_axes, int(gids.shape[0]))
+    batch, n_flat = _local_flat(mesh, dp_axes, gids)
+    ex = _resolve(exchange, mesh, n_flat, d, m,
+                  fused=_fused_eligible(memory, n_model))
     bspec = _bspec(batch)
     gspec = P(bspec, *([None] * (gids.ndim - 1)))
 
     def body(mem_l, gids_l):
         flat = gids_l.reshape(-1)
-        if _fused_slab(mem_l):
+        if ex.name == "psum" and _fused_slab(mem_l):
             from repro.kernels.fused_embed import ops as fe
             part = fe.fused_lookup(fe.hashed_spec(kind, d, m, seed), mem_l,
                                    flat, base=_slab_base(mem_l))
             out = jax.lax.psum(part, "model")
         else:
-            out = local_gather_psum(mem_l, alloc(flat, d, m, seed))
+            out = ex.lookup(mem_l, flat, lambda g: alloc(g, d, m, seed), d,
+                            n_model)
         return out.reshape(*gids_l.shape, d)
 
     fn = shard_map(body, mesh=mesh, in_specs=(P("model"), gspec),
@@ -166,16 +235,25 @@ def sharded_hashed_lookup(memory: jax.Array, gids: jax.Array, d: int, m: int,
 # ------------------------------------------------------- sparse slab updates
 #
 # The sparse-gradient pipeline (repro/optim/sparse.py) replaces the dense
-# psum'd [m_local] pool gradient with one replicated (indices, values) pair —
-# K = touched slots << m.  Each device then applies a *masked local* sparse
-# update to its own slab: gather the in-slab subset, run the O(K) moment
-# math, scatter back; out-of-slab entries route to a dropped sentinel index.
-# (The all-to-all alternative — exchanging only each rank's owned slice of
-# (indices, values) — trades the replicated K vectors for index traffic; at
-# the 2x4 bench shape the masked-local form wins because K is already tiny
-# next to the slab, so it is the one wired here.  Revisit if K grows past
-# m_local.)  Untouched slots never see a write, so per-device HBM traffic is
-# O(K), not O(m_local).
+# psum'd [m_local] pool gradient with one (indices, values) pair — K =
+# touched slots << m.  Each device applies a *masked local* sparse update to
+# its own slab: gather the in-slab subset, run the O(K) moment math, scatter
+# back; out-of-slab entries route to a dropped sentinel index.  The update
+# exchange is the strategy's ``reduce_update``:
+#
+#   psum        the [K, ...] update values psum to full replication (the
+#               oracle; what the 2x4 bench shipped originally);
+#   all_to_all  NO collective at all — each rank's masked update already
+#               holds the exact values at its owned slots and zeros
+#               elsewhere, which is the only part the masked local scatter
+#               in ``sharded_sparse_apply`` reads.  The per-step update
+#               exchange shrinks by ~n_model; ``exchange.sparse_worthwhile``
+#               moves the sparse-vs-dense crossover accordingly.
+#
+# all_to_all update values are *owner-partial*: consume them ONLY through
+# ``sharded_sparse_apply`` (any read outside a 'model' shard_map sees one
+# rank's partial).  Untouched slots never see a write, so per-device HBM
+# traffic is O(K), not O(m_local).
 
 
 def _slab_mask(idx, n_local, axis_name="model"):
@@ -187,15 +265,21 @@ def _slab_mask(idx, n_local, axis_name="model"):
 
 
 def sharded_sparse_update(algo: str, indices, values, states: tuple,
-                          hyper: dict, mesh):
+                          hyper: dict, mesh, exchange=None):
     """Run one sparse optimizer update on 'model'-sharded moment slabs.
 
     ``indices [K]`` / ``values [K, ...]`` follow the SparseGrad contract
-    (sorted unique, sentinel-padded).  Returns (update_values [K, ...]
-    replicated via psum — exactly one rank owns each live slot — and the new
-    slab tree).  Must be called OUTSIDE shard_map (it opens its own).
+    (sorted unique, sentinel-padded).  Returns (update_values [K, ...] —
+    replicated under the psum strategy, owner-partial under all_to_all —
+    and the new slab tree).  Must be called OUTSIDE shard_map (it opens its
+    own).
     """
     from repro.kernels.sparse_update.ops import sparse_update
+
+    if isinstance(exchange, str):
+        exchange = exl.get_exchange(exchange)
+    ex = exchange if exchange is not None else exl.resolve_update_exchange(mesh)
+    n_model = _model_size(mesh)
 
     # traced hyper-parameters (adam's step-dependent bias corrections) must
     # enter the shard_map as explicit replicated inputs, not closures
@@ -211,7 +295,7 @@ def sharded_sparse_update(algo: str, indices, values, states: tuple,
         lvals = jnp.where(vmask, vals, 0)
         u, new_st = sparse_update(algo, scat, lvals, st_l,
                                   **dict(static, **dict(zip(tkeys, tvals))))
-        return (jax.lax.psum(u, "model"),) + tuple(new_st)
+        return (ex.reduce_update(u, n_model),) + tuple(new_st)
 
     nst = len(states)
     fn = shard_map(body, mesh=mesh,
@@ -223,9 +307,12 @@ def sharded_sparse_update(algo: str, indices, values, states: tuple,
     return out[0], tuple(out[1:])
 
 
-def sharded_sparse_apply(param: jax.Array, indices, values, mesh):
+def sharded_sparse_apply(param: jax.Array, indices, values, mesh,
+                         exchange=None):
     """Masked local scatter-add of SparseGrad update values into the
-    'model'-sharded parameter slab (the sparse ``apply_updates``)."""
+    'model'-sharded parameter slab (the sparse ``apply_updates``).  The
+    ownership mask makes this the correct consumer for BOTH replicated
+    (psum) and owner-partial (all_to_all) update values."""
 
     def body(p_l, idx, vals):
         _, scat, mine = _slab_mask(idx, p_l.shape[0])
@@ -239,14 +326,17 @@ def sharded_sparse_apply(param: jax.Array, indices, values, mesh):
 
 def sharded_lma_lookup(memory: jax.Array, store_sets: jax.Array,
                        store_lengths: jax.Array, gids: jax.Array,
-                       params: LMAParams, mesh, dp_axes) -> jax.Array:
+                       params: LMAParams, mesh, dp_axes,
+                       exchange=None) -> jax.Array:
     """LMA lookup with M *and* the dense D' store sharded over 'model'.
 
     gids [...] -> [..., d], bit-identical to
     ``lookup(memory, alloc_lma(params, store, gids))``.  Each device first
-    reconstructs its batch shard's D_v rows from the row-sharded store
-    (gather + integer psum — exact), hashes them to locations, then
-    mask-local-gathers from its M slab.
+    reconstructs D_v rows from the row-sharded store through the strategy's
+    ``set_lookup`` (integer sums — exact), hashes them to locations, then
+    gathers from the M slabs through the same strategy.  Under ring /
+    all_to_all both the set reconstruction and the minhash run on 1/n_model
+    of the batch per rank — the location math that dominates this lookup.
     """
     n_model = _model_size(mesh)
     n_rows = int(store_sets.shape[0])
@@ -254,23 +344,34 @@ def sharded_lma_lookup(memory: jax.Array, store_sets: jax.Array,
         store = DenseSignatureStore(sets=store_sets, lengths=store_lengths)
         loc = alc.alloc_lma(params, store, gids.reshape(-1))
         return lookup(memory, loc).reshape(*gids.shape, params.d)
-    batch = _batch_axes(mesh, dp_axes, int(gids.shape[0]))
+    batch, n_flat = _local_flat(mesh, dp_axes, gids)
+    ex = _resolve(exchange, mesh, n_flat, params.d, params.m,
+                  alloc_row=exl.alloc_bytes_per_row(
+                      params.d, set_width=params.max_set),
+                  fused=_fused_eligible(memory, n_model))
     bspec = _bspec(batch)
     gspec = P(bspec, *([None] * (gids.ndim - 1)))
 
     def body(mem_l, sets_l, len_l, gids_l):
         flat = gids_l.reshape(-1)
-        rows = local_gather_psum(sets_l, flat)       # [n, max_set] exact
-        support = local_gather_psum(len_l, flat)     # [n] exact
-        if _fused_slab(mem_l):
+        if ex.name == "psum" and _fused_slab(mem_l):
             from repro.kernels.fused_embed import ops as fe
+            rows = local_gather_psum(sets_l, flat)       # [n, max_set] exact
+            support = local_gather_psum(len_l, flat)     # [n] exact
             part = fe.fused_lookup(fe.lma_spec(params), mem_l, flat,
                                    rows[:, : params.max_set], support,
                                    base=_slab_base(mem_l))
             out = jax.lax.psum(part, "model")
         else:
-            loc = alc.alloc_lma_from_rows(params, rows, support, flat)
-            out = local_gather_psum(mem_l, loc)
+            def loc_fn(g):
+                # one exchange round reconstructs sets AND lengths (ring:
+                # a single traversal with two accumulators; all_to_all: a
+                # shared index all-gather)
+                rows, support = ex.set_lookup_many((sets_l, len_l), g,
+                                                   n_model)
+                return alc.alloc_lma_from_rows(params, rows, support, g)
+
+            out = ex.lookup(mem_l, flat, loc_fn, params.d, n_model)
         return out.reshape(*gids_l.shape, params.d)
 
     fn = shard_map(

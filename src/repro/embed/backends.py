@@ -15,14 +15,18 @@ Three interchangeable implementations of "[N] global ids -> [N, d]":
     budget.
 
 ``sharded``
-    Mask-local-gather + psum over the 'model' axis
-    (``repro/dist/sharded_memory``), selected whenever a distribution mesh is
-    installed.  Schemes may provide a bespoke sharded path (lma reconstructs
-    D' rows first); others fall back to a generic location-based
-    mask-local-gather.
+    Pool sharded over the 'model' axis (``repro/dist/sharded_memory``),
+    selected whenever a distribution mesh is installed.  Cross-device
+    traffic goes through a pluggable exchange strategy (psum | ring |
+    all_to_all — ``repro/dist/exchange.py``), picked per lookup by the
+    ``resolve_exchange`` cost model or pinned via ``REPRO_DIST_EXCHANGE`` /
+    the backend's ``exchange`` attribute.  Schemes may provide a bespoke
+    sharded path (lma reconstructs D' rows first); others fall back to the
+    generic location-based lookup.
 
 ``resolve_backend`` is the promoted, testable form of the old implicit
-``_use_fused`` / ``_sharded_ctx`` gating chain in ``core/embedding.py``.
+``_use_fused`` / ``_sharded_ctx`` gating chain in ``core/embedding.py``;
+``repro.dist.exchange.resolve_exchange`` is its collective-level sibling.
 """
 from __future__ import annotations
 
@@ -96,20 +100,23 @@ class FusedBackend:
 class ShardedBackend:
     name = "sharded"
 
-    def __init__(self, mesh, dp_axes):
+    def __init__(self, mesh, dp_axes, exchange=None):
         self.mesh = mesh
         self.dp_axes = dp_axes
+        # None -> per-lookup resolve_exchange cost model (env-overridable);
+        # a name or Exchange instance pins every lookup on this backend
+        self.exchange = exchange
 
     def lookup(self, cfg: EmbeddingConfig, scheme: Scheme, params: dict,
                buffers: dict, gids: jax.Array) -> jax.Array:
         out = scheme.sharded_lookup(cfg, params, buffers, gids, self.mesh,
-                                    self.dp_axes)
+                                    self.dp_axes, exchange=self.exchange)
         if out is NotImplemented:
             from repro.dist.sharded_memory import sharded_location_lookup
             out = sharded_location_lookup(
                 params["memory"], gids,
                 lambda g: scheme.locations(cfg, buffers, g),
-                cfg.dim, self.mesh, self.dp_axes)
+                cfg.dim, self.mesh, self.dp_axes, exchange=self.exchange)
         return out
 
 

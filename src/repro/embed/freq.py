@@ -39,6 +39,7 @@ class FreqScheme(Scheme):
 
     kind = "freq"
     buffer_source = "id_counts"
+    row_aligned = True
 
     def validate(self, cfg):
         super().validate(cfg)

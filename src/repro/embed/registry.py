@@ -43,6 +43,11 @@ class Scheme:
     kind: ClassVar[str]
     family: ClassVar[str] = "memory"       # "memory" | "table"
     needs_budget: ClassVar[bool] = True
+    # True when ``locations`` are d-aligned pool rows (sparse_row_ids works):
+    # the sparse-gradient pipeline then carries one index per row, and the
+    # exchange cost model (repro.dist.exchange.sparse_worthwhile) prices the
+    # d-times-smaller index vector and dedup sort.
+    row_aligned: ClassVar[bool] = False
     # What make_buffers consumes: None (no buffers), "signatures" (a
     # SignatureStore D', lma), or "id_counts" (per-global-id observed
     # counts, freq).  Launchers key data preparation on this.
@@ -129,10 +134,22 @@ class Scheme:
         return ()
 
     def sharded_lookup(self, cfg: "EmbeddingConfig", params: dict,
-                       buffers: dict, gids: jax.Array, mesh, dp_axes):
+                       buffers: dict, gids: jax.Array, mesh, dp_axes,
+                       exchange=None):
         """Scheme-specific sharded path, or NotImplemented for the generic
-        mask-local-gather over ``locations`` (dist.sharded_memory)."""
+        location-based lookup (dist.sharded_memory).  ``exchange`` is the
+        cross-device strategy (psum | ring | all_to_all — a name, an
+        :class:`repro.dist.exchange.Exchange`, or None for the
+        ``resolve_exchange`` cost model), threaded through by
+        ``repro.embed.backends.ShardedBackend``."""
         return NotImplemented
+
+    def exchange_set_width(self, cfg: "EmbeddingConfig") -> int:
+        """Signature-set row width this scheme's location math must exchange
+        per batch row (lma's D' reconstruction), 0 for pure-hash schemes —
+        the ``set_width`` input of the exchange cost model
+        (``repro.dist.exchange.alloc_bytes_per_row``)."""
+        return 0
 
     def sparse_row_ids(self, cfg: "EmbeddingConfig", buffers: dict,
                        gids: jax.Array):

@@ -68,11 +68,12 @@ class _HashedBase(Scheme):
         from repro.kernels.fused_embed import ops as fe
         return fe.hashed_spec(self.kind, cfg.dim, cfg.budget, cfg.seed)
 
-    def sharded_lookup(self, cfg, params, buffers, gids, mesh, dp_axes):
+    def sharded_lookup(self, cfg, params, buffers, gids, mesh, dp_axes,
+                       exchange=None):
         from repro.dist.sharded_memory import sharded_hashed_lookup
         return sharded_hashed_lookup(params["memory"], gids, cfg.dim,
                                      cfg.budget, cfg.seed, mesh, dp_axes,
-                                     kind=self.kind)
+                                     kind=self.kind, exchange=exchange)
 
 
 @register_scheme
@@ -86,6 +87,7 @@ class HashedElemScheme(_HashedBase):
 @register_scheme
 class HashedRowScheme(_HashedBase):
     kind = "hashed_row"
+    row_aligned = True
 
     def locations(self, cfg, buffers, gids):
         return alc.alloc_hashed_row(gids, cfg.dim, cfg.budget, cfg.seed)
@@ -185,13 +187,17 @@ class LMAScheme(Scheme):
         support = jnp.take(buffers["store_lengths"], gids, axis=0)
         return rows, support
 
-    def sharded_lookup(self, cfg, params, buffers, gids, mesh, dp_axes):
+    def sharded_lookup(self, cfg, params, buffers, gids, mesh, dp_axes,
+                       exchange=None):
         from repro.dist.sharded_memory import sharded_lma_lookup
         assert "store_sets" in buffers, (
             "the sharded LMA path needs the dense D' store (densify_store)")
         return sharded_lma_lookup(params["memory"], buffers["store_sets"],
                                   buffers["store_lengths"], gids, cfg.lma,
-                                  mesh, dp_axes)
+                                  mesh, dp_axes, exchange=exchange)
+
+    def exchange_set_width(self, cfg):
+        return int(cfg.lma.max_set)
 
     def extra_describe(self, cfg):
         p = cfg.lma

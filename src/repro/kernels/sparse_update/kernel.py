@@ -1,10 +1,10 @@
 """Pallas TPU kernels: sparse optimizer update over the K touched pool slots.
 
 One fused pass per algorithm: gather the moment slab at the K deduped
-indices, run the moment math on [K] vectors, scatter the moment *deltas*
-back, and emit the [K] parameter-update values — the O(m) zeros+grad
-buffers and multi-pass read-modify-write of the dense optimizer never
-happen.  The slab rides through VMEM once like the fused-embed scatter
+indices, run the moment math on [K, ...] vectors, scatter the moment
+*deltas* back, and emit the [K, ...] parameter-update values — the O(m)
+zeros+grad buffers and multi-pass read-modify-write of the dense optimizer
+never happen.  The slab rides through VMEM once like the fused-embed scatter
 kernel's [m_local] gradient block (the pool family this serves fits VMEM
 by construction — the same budget that admits the fused lookup engine
 admits its optimizer state), it aliases in -> out so the HBM update is
@@ -12,13 +12,20 @@ in-place with no second [m] buffer, and the arithmetic touches only K
 elements.
 
 Indices follow the ``SparseGrad`` contract (``repro/optim/sparse.py``):
-sorted unique slot ids padded at the tail with the sentinel ``m``
-(= slab length), values 0 at padded slots.  Sentinels clip to ``m - 1`` for
-the gather and scatter an exact ``+0.0`` delta, so padding never perturbs
-the slab — the same add-of-delta formulation as ``ref.py``, bit-for-bit.
+sorted unique slot ids padded at the tail with the sentinel ``rows``
+(= slab leading dim), values 0 at padded slots.  Sentinels clip to
+``rows - 1`` for the gather and scatter an exact ``+0.0`` delta, so padding
+never perturbs the slab — the same add-of-delta formulation as ``ref.py``,
+bit-for-bit.
 
-Flat ([m]) slabs only: the memory-pool family this engine serves.  Table
-params with trailing dims use the jnp reference (``ops.py`` dispatch).
+Two slab layouts, matching the two SparseGrad record modes:
+
+  * flat ``[m]`` — element-level locations (lma, hashed_elem);
+  * ``[rows, d]`` — row-aligned schemes (hashed_row, freq): one index per
+    pool row, whole-row gather/scatter, so the TPU path consumes the
+    row-mode SparseGrad directly with no flat-reshape round-trip.  Adam
+    additionally supports the row-wise second moment (``nu [rows]`` against
+    ``[K, d]`` values — DLRM's row-wise Adam).
 """
 from __future__ import annotations
 
@@ -30,14 +37,18 @@ from jax.experimental import pallas as pl
 
 
 def _gather_keep(idx, values, slab):
-    m = slab.shape[0]
-    safe = jnp.minimum(idx, m - 1)
-    return safe, idx < m, jnp.take(slab, safe), values.astype(jnp.float32)
+    """(clipped idx, row keep [K], broadcast keep, old rows, f32 values)."""
+    rows = slab.shape[0]
+    safe = jnp.minimum(idx, rows - 1)
+    keep1 = idx < rows
+    v = values.astype(jnp.float32)
+    keep = keep1.reshape(keep1.shape + (1,) * (v.ndim - 1))
+    return safe, keep1, keep, jnp.take(slab, safe, axis=0), v
 
 
 def _sgd_kernel(idx_ref, val_ref, mo_ref, u_ref, mo_out_ref, *, lr, momentum):
     mo = mo_ref[...]
-    safe, keep, old, v = _gather_keep(idx_ref[...], val_ref[...], mo)
+    safe, _, keep, old, v = _gather_keep(idx_ref[...], val_ref[...], mo)
     new = momentum * old + v
     mo_out_ref[...] = mo.at[safe].add(jnp.where(keep, new - old, 0.0))
     u_ref[...] = jnp.where(keep, -lr * new, 0.0).astype(u_ref.dtype)
@@ -45,7 +56,7 @@ def _sgd_kernel(idx_ref, val_ref, mo_ref, u_ref, mo_out_ref, *, lr, momentum):
 
 def _adagrad_kernel(idx_ref, val_ref, acc_ref, u_ref, acc_out_ref, *, lr, eps):
     acc = acc_ref[...]
-    safe, keep, old, v = _gather_keep(idx_ref[...], val_ref[...], acc)
+    safe, _, keep, old, v = _gather_keep(idx_ref[...], val_ref[...], acc)
     a = old + v * v
     acc_out_ref[...] = acc.at[safe].add(jnp.where(keep, v * v, 0.0))
     u_ref[...] = jnp.where(keep, -lr * v / (jnp.sqrt(a) + eps),
@@ -55,28 +66,38 @@ def _adagrad_kernel(idx_ref, val_ref, acc_ref, u_ref, acc_out_ref, *, lr, eps):
 def _adam_kernel(idx_ref, val_ref, bc_ref, mu_ref, nu_ref,
                  u_ref, mu_out_ref, nu_out_ref, *, lr, b1, b2, eps):
     mu, nu = mu_ref[...], nu_ref[...]
-    safe, keep, mu_old, v = _gather_keep(idx_ref[...], val_ref[...], mu)
-    nu_old = jnp.take(nu, safe)
+    safe, keep1, keep, mu_old, v = _gather_keep(idx_ref[...], val_ref[...], mu)
     mu_new = b1 * mu_old + (1 - b1) * v
-    nu_new = b2 * nu_old + (1 - b2) * v * v
+    v2 = v * v
+    if nu.ndim == 1 and v.ndim > 1:              # rowwise second moment
+        v2_row = jnp.mean(v2, axis=tuple(range(1, v2.ndim)))
+        nu_old = jnp.take(nu, safe, axis=0)
+        nu_new_row = b2 * nu_old + (1 - b2) * v2_row
+        nu_out_ref[...] = nu.at[safe].add(
+            jnp.where(keep1, nu_new_row - nu_old, 0.0))
+        nu_new = nu_new_row.reshape(nu_new_row.shape + (1,) * (v.ndim - 1))
+    else:
+        nu_old = jnp.take(nu, safe, axis=0)
+        nu_new = b2 * nu_old + (1 - b2) * v2
+        nu_out_ref[...] = nu.at[safe].add(jnp.where(keep, nu_new - nu_old,
+                                                    0.0))
     mu_out_ref[...] = mu.at[safe].add(jnp.where(keep, mu_new - mu_old, 0.0))
-    nu_out_ref[...] = nu.at[safe].add(jnp.where(keep, nu_new - nu_old, 0.0))
     bc1, bc2 = bc_ref[0], bc_ref[1]
     u = -lr * (mu_new / bc1) / (jnp.sqrt(nu_new / bc2) + eps)
     u_ref[...] = jnp.where(keep, u, 0.0).astype(u_ref.dtype)
 
 
-def _call(kern, inputs, n_state, state_dtypes, k, vdtype, interpret):
+def _call(kern, inputs, n_state, state_dtypes, vshape, vdtype, interpret):
     """inputs = (idx, vals, [extras...], *states); outputs = (u, *states).
 
-    No grid: every operand is a whole-array block (the [m] slab fits VMEM by
+    No grid: every operand is a whole-array block (the slab fits VMEM by
     the same budget that admits the fused lookup engine; K vectors are tiny).
     State slabs alias in -> out, so the update is in-place in HBM — the slab
     streams through VMEM once, and no second [m] buffer exists; the O(m)
     dense grad + optimizer passes this replaces never run.
     """
     states = inputs[-n_state:]
-    out_shape = ([jax.ShapeDtypeStruct((k,), vdtype)]
+    out_shape = ([jax.ShapeDtypeStruct(vshape, vdtype)]
                  + [jax.ShapeDtypeStruct(s.shape, dt)
                     for s, dt in zip(states, state_dtypes)])
     aliases = {len(inputs) - n_state + i: 1 + i for i in range(n_state)}
@@ -89,14 +110,14 @@ def sparse_sgd_pallas(indices, values, mo, *, lr, momentum,
                       interpret=False):
     kern = functools.partial(_sgd_kernel, lr=lr, momentum=momentum)
     return _call(kern, (indices, values, mo), 1, (mo.dtype,),
-                 indices.shape[0], values.dtype, interpret)
+                 values.shape, values.dtype, interpret)
 
 
 def sparse_adagrad_pallas(indices, values, acc, *, lr, eps,
                           interpret=False):
     kern = functools.partial(_adagrad_kernel, lr=lr, eps=eps)
     return _call(kern, (indices, values, acc), 1, (acc.dtype,),
-                 indices.shape[0], values.dtype, interpret)
+                 values.shape, values.dtype, interpret)
 
 
 def sparse_adam_pallas(indices, values, mu, nu, *, lr, b1, b2, bc1, bc2,
@@ -105,5 +126,5 @@ def sparse_adam_pallas(indices, values, mu, nu, *, lr, b1, b2, bc1, bc2,
                     jnp.asarray(bc2, jnp.float32)])
     kern = functools.partial(_adam_kernel, lr=lr, b1=b1, b2=b2, eps=eps)
     return _call(kern, (indices, values, bc, mu, nu), 2,
-                 (mu.dtype, nu.dtype), indices.shape[0], values.dtype,
+                 (mu.dtype, nu.dtype), values.shape, values.dtype,
                  interpret)

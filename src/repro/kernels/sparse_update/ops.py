@@ -2,15 +2,19 @@
 
 ``sparse_update(algo, indices, values, states, **hyper)`` is the one entry
 point the optimizers call (``repro/optim/sparse.py``).  On TPU the fused
-Pallas gather -> moment-update -> scatter kernel runs compiled (flat [m]
-slabs — the memory-pool family); everywhere else the jnp reference is
-already the optimal lowering (XLA's native 1-D gather/scatter), so unlike
+Pallas gather -> moment-update -> scatter kernel runs compiled for BOTH
+memory-pool layouts — flat [m] slabs (element-level records) and [rows, d]
+slabs (row-mode SparseGrad: hashed_row / freq, including rowwise-Adam's
+[rows] second moment) — so row schemes feed the kernel their native layout
+with no flat-reshape round-trip.  Everywhere else the jnp reference is
+already the optimal lowering (XLA's native gather/scatter), so unlike
 the fused-embed engine there is no interpret-mode win to chase — interpret
 mode here exists for kernel-parity tests only (pass ``interpret=True``).
 
 Contract (shared with ``ref.py`` / ``kernel.py``): ``indices [K]`` sorted
-unique, sentinel-padded with ``m``; ``values [K, ...]`` segment-summed, 0 at
-padded slots; states touched only at live slots (add-of-delta scatters).
+unique, sentinel-padded with the slab's leading dim; ``values [K, ...]``
+segment-summed, 0 at padded slots; states touched only at live slots
+(add-of-delta scatters).
 """
 from __future__ import annotations
 
@@ -29,13 +33,27 @@ _MAX_MEM_MB = int(os.environ.get("REPRO_FUSED_MAX_MEM_MB", "16"))
 _TILE_RESERVE = 2 * 2**20
 
 
-def _pallas_ok(indices, values, states) -> bool:
-    """TPU auto-dispatch gate: flat slabs only, and the whole working set
-    (all state slabs + index/value/update vectors) must fit the VMEM
-    budget — an over-budget pool falls back to the jnp reference (XLA
+def _shapes_ok(algo: str, values, states) -> bool:
+    """Kernel-supported layouts: flat [m] slabs with [K] values, or
+    [rows, d] slabs with [K, d] values.  The ONLY state whose rank may drop
+    below the values' is Adam's second moment (rowwise nu [rows] against
+    [K, d] values) — any other 1-D-state/2-D-values mix routes to the jnp
+    reference, which rejects it the same way the kernel would."""
+    if values.ndim > 2:
+        return False
+    if algo == "adam" and len(states) == 2:
+        return (states[0].ndim == values.ndim
+                and states[1].ndim in (1, values.ndim))
+    return all(s.ndim == values.ndim for s in states)
+
+
+def _pallas_ok(algo, indices, values, states) -> bool:
+    """TPU auto-dispatch gate: a supported slab layout, and the whole
+    working set (all state slabs + index/value/update vectors) must fit the
+    VMEM budget — an over-budget pool falls back to the jnp reference (XLA
     scatter), mirroring the fused engine's ``fused_supported`` gate.
     Explicit ``interpret=`` calls (kernel tests) bypass the size gate."""
-    if values.ndim != 1 or any(s.ndim != 1 for s in states):
+    if not _shapes_ok(algo, values, states):
         return False
     resident = (sum(s.size * s.dtype.itemsize for s in states)
                 + indices.size * 4 + 2 * values.size * values.dtype.itemsize)
@@ -51,10 +69,10 @@ def sparse_update(algo: str, indices, values, states: tuple, *,
     mode (test hook); ``interpret=False`` forces compiled Pallas.
     """
     assert algo in ALGOS, algo
-    flat = values.ndim == 1 and all(s.ndim == 1 for s in states)
-    use_pallas = (interpret is not None and flat) or (
+    use_pallas = (interpret is not None
+                  and _shapes_ok(algo, values, states)) or (
         jax.default_backend() == "tpu"
-        and _pallas_ok(indices, values, states))
+        and _pallas_ok(algo, indices, values, states))
     if use_pallas and states:
         interp = bool(interpret)
         if algo == "sgd":

@@ -26,6 +26,7 @@ from repro.configs.base import ArchConfig, get_config
 from repro.configs.gat_cora import GNN_SHAPE_TABLE
 from repro.configs._lm_common import LM_SHAPE_TABLE
 from repro.configs._recsys_common import RECSYS_SHAPE_TABLE
+from repro.dist import exchange as exl
 from repro.dist import sharding as shd
 from repro.dist.sharding import ALL, DP, EP
 from repro.models import gnn, recsys, transformer
@@ -203,28 +204,53 @@ def store_rows(total_vocab: int) -> int:
 
 
 def _sparse_worthwhile(rcfg, B: int, mesh) -> bool:
-    """Per-device traffic model for the sparse-vs-dense pool update.
+    """Sparse-vs-dense pool-update gate, now owned by the exchange layer.
 
-    sparse: the deduped (indices, values) pair is replicated on every
-    device — ~8 bytes per raw touched location (int32 + f32).
-    dense: the dense path's per-device slab tax — zeros + scatter + the
-    O(m_local) optimizer read-modify-write, ~8 f32 passes over the
-    model-sharded pool (bench_kernels.modeled_update_bytes).
-
-    Single-host training (the launcher) always picks sparse (K << m); a
-    16x16 pod cell with a 65k global batch picks dense — which is exactly
-    the measured crossover (the 2x4 bench favors masked-local sparse, the
-    256-device dry-run favors the dense psum).
+    The traffic model that used to live here moved to
+    ``repro.dist.exchange.sparse_worthwhile``, next to the lookup-strategy
+    resolver — one cost model for every cross-device exchange.  It prices
+    the per-strategy sparse exchange (the all_to_all form keeps each rank's
+    owned (index, value) slices local, ~n_model cheaper than the replicated
+    psum pair) AND the O(K log K) dedup sort the old gate ignored.  Net
+    effect on the committed cells: single-host stays sparse, 16x16
+    element-level (lma) train cells stay dense (the 54M-element sort
+    dominates), and row-aligned schemes (hashed_row / freq) now go sparse
+    at pod scale — the crossover the all_to_all exchange was built to move.
     """
+    from repro.embed import get_scheme
     e = rcfg.embedding
     if e.budget is None:
         return False
-    k_raw = B * recsys.lookups_per_example(rcfg) * e.dim   # element-level
+    return exl.sparse_worthwhile(
+        mesh, n_lookups=B * recsys.lookups_per_example(rcfg), d=e.dim,
+        m=e.budget, row_mode=get_scheme(e.kind).row_aligned)
 
-    n_model = int(dict(mesh.shape).get("model", 1))
-    sparse_bytes = k_raw * 8
-    dense_bytes = 8 * (e.budget // max(n_model, 1)) * 4
-    return sparse_bytes < dense_bytes
+
+def _exchange_meta(rcfg, n_rows: int, mesh) -> dict:
+    """Resolved lookup-exchange strategy + modeled per-device bytes for the
+    dryrun artifact: ``n_rows`` is the per-step global row-lookup count; the
+    resolver sees the per-device flat rows and the SAME ``alloc_row`` term
+    the runtime driver passes (scheme set width + fused-slab eligibility),
+    so the recorded strategy and cost table match what actually lowers."""
+    from repro.embed import get_scheme
+    e = rcfg.embedding
+    if e.budget is None:
+        return {}
+    dp = [int(mesh.shape[a]) for a in ("pod", "data") if a in mesh.axis_names]
+    prod = int(np.prod(dp)) if dp else 1
+    # divisibility on FLAT rows matches the runtime exactly: every embed
+    # path flattens gids to 1-D before the driver (embed/table.py), so the
+    # driver's _batch_axes sees this same n_rows as its leading dim
+    n_flat = n_rows // prod if n_rows % prod == 0 else n_rows
+    n_model = exl.model_size(mesh)
+    alloc_row = exl.alloc_bytes_per_row(
+        e.dim, set_width=get_scheme(e.kind).exchange_set_width(e))
+    fused = exl.fused_slab_eligible(e.budget, n_model, e.jdtype.itemsize)
+    ex = exl.resolve_exchange(mesh, B=n_flat, d=e.dim, m=e.budget,
+                              alloc_row=alloc_row, fused=fused)
+    costs = exl.lookup_cost(n_model, n_flat, e.dim, alloc_row, fused=fused)
+    return {"exchange": ex.name,
+            "exchange_modeled_bytes": {k: int(v) for k, v in costs.items()}}
 
 
 def _recsys_bundle(arch: ArchConfig, shape_id: str, mesh) -> Bundle:
@@ -271,7 +297,9 @@ def _recsys_bundle(arch: ArchConfig, shape_id: str, mesh) -> Bundle:
             (param_sh, opt_sh, NamedSharding(mesh, P())),
             donate=(0, 1),
             meta={"kind": "train", "examples": B, "sparse_grads": use_sparse,
-                  "embedding": rcfg.table.describe()})
+                  "embedding": rcfg.table.describe(),
+                  **_exchange_meta(
+                      rcfg, B * recsys.lookups_per_example(rcfg), mesh)})
 
     if t["kind"] == "serve":
         B = t["batch"]
@@ -287,7 +315,10 @@ def _recsys_bundle(arch: ArchConfig, shape_id: str, mesh) -> Bundle:
             (param_shapes, bufs, batch),
             (param_sh, bufs_sh, batch_sh),
             out_sh, meta={"kind": "serve", "examples": B,
-                          "embedding": rcfg.table.describe()})
+                          "embedding": rcfg.table.describe(),
+                          **_exchange_meta(
+                              rcfg, B * recsys.lookups_per_example(rcfg),
+                              mesh)})
 
     # retrieval: one context vs n_candidates, chunked inside
     C = t["n_candidates"]
@@ -308,7 +339,8 @@ def _recsys_bundle(arch: ArchConfig, shape_id: str, mesh) -> Bundle:
         (param_sh, bufs_sh, batch_sh, cand_sh),
         NamedSharding(mesh, P()),
         meta={"kind": "retrieval", "examples": C,
-              "embedding": rcfg.table.describe()})
+              "embedding": rcfg.table.describe(),
+              **_exchange_meta(rcfg, chunk, mesh)})
 
 
 # ------------------------------------------------------------------------ GNN

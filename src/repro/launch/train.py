@@ -92,6 +92,12 @@ def main(argv=None):
     ap.add_argument("--embedding-kind", default=None,
                     help="override the arch's embedding scheme (any "
                          "registered kind, e.g. freq); recsys archs only")
+    ap.add_argument("--exchange", default=None,
+                    choices=["psum", "ring", "all_to_all", "auto"],
+                    help="pin the sharded-lookup/update exchange strategy "
+                         "(default: REPRO_DIST_EXCHANGE or the "
+                         "resolve_exchange cost model); only observable "
+                         "when a distribution mesh is installed")
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced config (required for LM archs here)")
     ap.add_argument("--steps", type=int, default=300)
@@ -100,6 +106,10 @@ def main(argv=None):
     ap.add_argument("--n-signatures", type=int, default=10_000)
     ap.add_argument("--eval-batches", type=int, default=8)
     args = ap.parse_args(argv)
+
+    if args.exchange is not None:
+        from repro.dist import exchange as exl
+        exl.FORCED = None if args.exchange == "auto" else args.exchange
 
     arch = get_config(args.arch)
     kind_kw = {} if args.embedding_kind is None \
@@ -138,8 +148,10 @@ def main(argv=None):
                       lookups_per_step=lps),
         loss_fn, params, make_optimizer(arch), batch_fn)
     if trainer.sparse_grads:
+        from repro.dist import exchange as exl
         print("sparse memory-pool updates ON (REPRO_SPARSE_GRADS=0 for the "
-              "dense oracle)")
+              "dense oracle; exchange strategy "
+              f"{exl.FORCED or 'auto'})")
     trainer.install_signal_handlers()
     out = trainer.fit()
     print(f"done: {out}")

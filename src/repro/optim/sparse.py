@@ -48,7 +48,12 @@ This module replaces both with O(K) work:
 Under a distribution mesh with a non-trivial 'model' axis the moment
 update and the parameter scatter run as masked-local shard_map bodies on
 each device's slab (``repro/dist/sharded_memory.py``) — no [m_local] dense
-gradient, no psum of it.
+gradient, no psum of it.  The update-value exchange between the two is
+picked by ``repro.dist.exchange.resolve_update_exchange``: all_to_all by
+default, which elides even the [K]-sized psum — each rank's owner-masked
+update values feed the masked local scatter directly (the values are then
+owner-partial: only ``sharded_sparse_apply`` may consume them).
+``REPRO_DIST_EXCHANGE=psum`` restores the replicated-update oracle.
 
 Gate: ``REPRO_SPARSE_GRADS`` (default on; ``=0`` keeps the dense path as
 the bit-exact oracle).  Tests may toggle ``sparse.ENABLED`` directly.
@@ -304,10 +309,11 @@ def sparse_value_and_grad(loss_fn: Callable, has_aux: bool = True):
 def _model_mesh(n_slots: int):
     """Mesh with a non-trivial 'model' axis dividing the slab, else None."""
     from repro.dist import context as dctx
+    from repro.dist.exchange import model_size
     mesh = dctx.current_mesh()
     if mesh is None:
         return None
-    n_model = int(dict(mesh.shape).get("model", 1))
+    n_model = model_size(mesh)
     if n_model <= 1 or n_slots % n_model != 0:
         return None
     return mesh

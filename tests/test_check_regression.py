@@ -9,7 +9,8 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.check_regression import (BASELINE, compare, load_rows,
-                                         missing_schemes)
+                                         missing_schemes,
+                                         sharded_gap_failures)
 
 
 def _rows(**kernels):
@@ -63,6 +64,50 @@ def test_committed_baseline_has_fused_rows():
     hbm = doc["modeled_hbm_bytes_per_lookup"]
     # fused removes at least the [N, d] int32 location-tensor traffic
     assert hbm["split"] - hbm["fused"] >= hbm["location_tensor_bytes"]
+
+
+def test_sharded_gap_gate_logic():
+    """The exchange-layer gate: best-strategy sharded/replicated wall-clock
+    within 2.5x, and a chunked strategy (ring / all_to_all) strictly
+    beating psum."""
+    ok = {"sharded_lookup": {
+        "replicated_us": 100.0, "sharded_fused_us": 400.0,
+        "sharded_split_us": 700.0, "sharded_ring_us": 180.0,
+        "sharded_all_to_all_us": 120.0}}
+    assert sharded_gap_failures({}, ok) == []
+    assert sharded_gap_failures({}, None) == []          # ledger-diff mode
+    gap = {"sharded_lookup": dict(ok["sharded_lookup"],
+                                  sharded_ring_us=300.0,
+                                  sharded_all_to_all_us=260.0)}
+    assert any("gap" in f for f in sharded_gap_failures({}, gap))
+    slow = {"sharded_lookup": dict(ok["sharded_lookup"],
+                                   sharded_ring_us=450.0,
+                                   sharded_all_to_all_us=500.0)}
+    fails = sharded_gap_failures({}, slow)
+    assert any("no chunked exchange beats psum" in f for f in fails)
+    assert any("missing" in f
+               for f in sharded_gap_failures({}, {"rows": []}))
+    assert any("lacks" in f for f in sharded_gap_failures(
+        {}, {"sharded_lookup": {"replicated_us": 1.0}}))
+
+
+def test_committed_baseline_passes_sharded_gap_gate():
+    """This PR's acceptance artifact: per-strategy sharded rows are in the
+    committed ledger, a chunked strategy beats psum, and the
+    sharded/replicated gap is within the 2.5x gate (down from the ~3.2x
+    psum-only path)."""
+    with open(BASELINE) as f:
+        doc = json.load(f)
+    rows = load_rows(doc)
+    shape8 = "4096xd32@m=2^21/8dev"
+    for k in ("sharded_lma_lookup_ring", "sharded_lma_lookup_all_to_all",
+              "sharded_lma_lookup_fused"):
+        assert (k, shape8) in rows, k
+    assert ("sparse_dedup_sort", "4096x32@m=2^21") in rows
+    assert sharded_gap_failures(rows, doc) == []
+    best = min(rows[("sharded_lma_lookup_ring", shape8)],
+               rows[("sharded_lma_lookup_all_to_all", shape8)])
+    assert best < rows[("sharded_lma_lookup_fused", shape8)]
 
 
 def test_committed_baseline_passes_sparse_update_gate():

@@ -103,6 +103,28 @@ def test_multi_pod_shards_the_pod_axis():
     assert checked >= 9  # 5 LM train_4k + 4 recsys train_batch
 
 
+def test_recsys_artifacts_record_exchange_strategy():
+    """Every recsys cell's meta carries the resolved exchange strategy and
+    the modeled per-strategy bytes (repro.dist.exchange.resolve_exchange).
+    The recorded strategy must be the argmin of the recorded cost table
+    (meta and model may not contradict each other), and every lma cell must
+    resolve to a chunked strategy — the D' set-reconstruction term
+    (exchange_set_width) dominates even where the slab fits the fused VMEM
+    budget, matching the measured 8-device bench where ring/all_to_all beat
+    fused psum."""
+    for arch in ("dlrm-rm2", "dcn-v2", "xdeepfm", "din"):
+        for shape in ("train_batch", "serve_bulk", "serve_p99",
+                      "retrieval_cand"):
+            for mesh in ("16x16", "2x16x16"):
+                meta = _load(arch, shape, mesh)["meta"]
+                costs = meta["exchange_modeled_bytes"]
+                assert set(costs) == {"psum", "ring", "all_to_all"}
+                assert meta["exchange"] == min(costs, key=costs.get), \
+                    (arch, shape, mesh, meta["exchange"], costs)
+        got = _load(arch, "train_batch", "16x16")["meta"]["exchange"]
+        assert got in ("ring", "all_to_all"), (arch, got)
+
+
 def test_lma_memory_traffic_is_activation_sized():
     """The paper-critical property: collective bytes for the recsys train cells
     stay activation-sized — independent of the 135M-slot memory budget."""

@@ -1,0 +1,319 @@
+"""The repro.dist.exchange strategy layer.
+
+Fast tests: the ``resolve_exchange`` / ``sparse_worthwhile`` cost-model
+tables (pure functions of mesh shape + sizes — meshes are faked with a
+``shape`` namespace, no devices needed) and strategy eligibility.
+
+Slow tests (subprocess, 8 forced host devices, 2x4 ('data','model') mesh):
+
+  * forward parity of ring and all_to_all against the psum oracle — and the
+    single-device lookup — for ALL registered schemes through the public
+    ``EmbeddingTable.embed`` API, plus the standalone ``sharded_set_lookup``
+    driver (row-sharded integer tables, exact under every strategy);
+  * 10-step sparse-training parity (adagrad) for the memory-family schemes
+    under all three forced strategies — psum (replicated updates),
+    all_to_all (owner-partial updates), and ring (ring lookup backward,
+    psum update fallback) — against the single-device dense oracle.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import types
+
+import pytest
+
+from repro.dist import exchange as exl
+
+
+def fake_mesh(**axes):
+    return types.SimpleNamespace(shape=dict(axes))
+
+
+MESH_2x4 = fake_mesh(data=2, model=4)
+MESH_16x16 = fake_mesh(data=16, model=16)
+
+
+# ------------------------------------------------------------ resolve table
+
+def test_resolve_psum_without_model_axis():
+    assert exl.resolve_exchange(None) is exl.PSUM
+    assert exl.resolve_exchange(fake_mesh(data=8), B=1024, d=32) is exl.PSUM
+
+
+def test_resolve_psum_on_unknown_or_indivisible_batch():
+    assert exl.resolve_exchange(MESH_2x4) is exl.PSUM
+    assert exl.resolve_exchange(MESH_2x4, B=33, d=16, m=4096) is exl.PSUM
+
+
+def test_resolve_forced_overrides_model():
+    old = exl.FORCED
+    try:
+        exl.FORCED = "ring"
+        assert exl.resolve_exchange(MESH_2x4, B=4096, d=32) is exl.RING
+        exl.FORCED = "all_to_all"
+        assert exl.resolve_exchange(MESH_2x4, B=4096, d=32) is exl.ALL_TO_ALL
+    finally:
+        exl.FORCED = old
+
+
+def test_resolve_fused_slab_prefers_psum_chunked_otherwise():
+    """The cost model's fused term: a slab under the engine's VMEM budget
+    hashes in-VMEM (location bytes ~0) and psum wins; the production-scale
+    pool (135M slots -> 34 MiB/device at 16 ranks, over the 16 MiB gate)
+    pays the full location round-trip and a chunked strategy takes over."""
+    small = exl.resolve_exchange(MESH_2x4, B=4096, d=32, m=1 << 21)
+    assert small is exl.PSUM
+    big = exl.resolve_exchange(MESH_16x16, B=4096, d=32, m=135_266_304)
+    assert big in (exl.RING, exl.ALL_TO_ALL)
+
+
+def test_lookup_cost_alloc_term_moves_the_choice():
+    """Expensive allocators (alloc_row up, e.g. LMA's set reconstruction +
+    minhash) favor the chunked strategies; free allocators favor psum."""
+    c_free = exl.lookup_cost(4, 4096, 32, alloc_row=0.0)
+    assert min(c_free, key=c_free.get) == "psum"
+    c_lma = exl.lookup_cost(4, 4096, 32,
+                            alloc_row=exl.alloc_bytes_per_row(32, 32))
+    assert min(c_lma, key=c_lma.get) != "psum"
+    # chunked strategies cut the alloc term by n_model, psum pays it whole
+    delta = exl.alloc_bytes_per_row(32, 32) * 4096
+    assert c_lma["psum"] - c_free["psum"] == pytest.approx(delta)
+    assert c_lma["ring"] - c_free["ring"] == pytest.approx(delta / 4)
+    # the fused-slab discount is psum-only: ring/all_to_all can never run
+    # the fused kernel, so their entries must not move
+    c_def = exl.lookup_cost(4, 4096, 32)
+    c_fus = exl.lookup_cost(4, 4096, 32, fused=True)
+    assert c_fus["psum"] == pytest.approx(c_def["psum"] - 8 * 32 * 4096)
+    assert c_fus["ring"] == pytest.approx(c_def["ring"])
+    assert c_fus["all_to_all"] == pytest.approx(c_def["all_to_all"])
+
+
+def test_eligibility_fallback():
+    assert exl.RING.eligible(64, 4) and exl.ALL_TO_ALL.eligible(64, 4)
+    assert not exl.RING.eligible(63, 4)
+    assert not exl.ALL_TO_ALL.eligible(63, 4)
+    assert not exl.RING.eligible(64, 1)
+    assert exl.PSUM.eligible(63, 4)
+
+
+def test_resolve_update_exchange():
+    assert exl.resolve_update_exchange(None) is exl.PSUM
+    assert exl.resolve_update_exchange(fake_mesh(data=8)) is exl.PSUM
+    assert exl.resolve_update_exchange(MESH_2x4) is exl.ALL_TO_ALL
+    old = exl.FORCED
+    try:
+        exl.FORCED = "psum"
+        assert exl.resolve_update_exchange(MESH_2x4) is exl.PSUM
+        exl.FORCED = "ring"    # ring has no update form -> psum
+        assert exl.resolve_update_exchange(MESH_2x4) is exl.PSUM
+    finally:
+        exl.FORCED = old
+
+
+def test_get_exchange_unknown():
+    with pytest.raises(KeyError):
+        exl.get_exchange("bcast")
+
+
+# ----------------------------------------------------- sparse gate table
+
+# dlrm-rm2 train_batch at 16x16: 65536 examples x 26 fields, d=64 would be
+# the real cell; the table below uses the d=32 bench flavor the ROADMAP
+# quotes.  What matters is the *shape* of the decisions, pinned here:
+
+def test_sparse_worthwhile_single_host_always_sparse():
+    assert exl.sparse_worthwhile(None, n_lookups=4096, d=32, m=1 << 21)
+
+
+def test_sparse_worthwhile_2x4_bench_shape_sparse():
+    assert exl.sparse_worthwhile(MESH_2x4, n_lookups=4096, d=32, m=1 << 21)
+
+
+def test_sparse_worthwhile_pod_scale_element_vs_row():
+    """The crossover the all_to_all exchange moves: at 16x16 with a 65k
+    global batch, element-level (lma) records stay dense — the O(K log K)
+    dedup sort on ~54M element locations erases the win (the term the old
+    gate in launch/steps.py ignored) — while row-aligned records
+    (hashed_row / freq) now go sparse: the index vector and its sort are d
+    times smaller and the all_to_all exchange keeps owned slices local."""
+    n_lookups, d, m = 65536 * 26, 32, 135_266_304
+    assert not exl.sparse_worthwhile(MESH_16x16, n_lookups, d, m,
+                                     row_mode=False)
+    assert exl.sparse_worthwhile(MESH_16x16, n_lookups, d, m, row_mode=True)
+    # ... and the row-mode flip is the all_to_all exchange's doing: under
+    # the replicated psum pair the same cell stays dense
+    old = exl.FORCED
+    try:
+        exl.FORCED = "psum"
+        assert not exl.sparse_worthwhile(MESH_16x16, n_lookups, d, m,
+                                         row_mode=True)
+    finally:
+        exl.FORCED = old
+
+
+def test_sparse_update_cost_fields():
+    c = exl.sparse_update_cost(4, 4096, 32, 1 << 21)
+    assert set(c) == {"dense", "sparse_psum", "sparse_all_to_all",
+                      "dedup_sort"}
+    assert c["sparse_all_to_all"] < c["sparse_psum"]
+    assert c["dedup_sort"] > 0
+    assert exl.dedup_sort_bytes(1) == 0.0
+
+
+# ----------------------------------------------- 2x4 parity (all schemes)
+
+_PARITY_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core.signatures import synthetic_dense_store
+from repro.dist import exchange as exl
+from repro.dist.context import use_mesh
+from repro.embed import EmbeddingTable, get_scheme, list_schemes
+
+assert len(jax.devices()) == 8
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+rng = np.random.default_rng(0)
+
+for kind in list_schemes():
+    scheme = get_scheme(kind)
+    table = EmbeddingTable(scheme.build_config((512,), 16, 4096, seed=3))
+    store = None
+    if scheme.buffer_source == "signatures":
+        store = synthetic_dense_store(512, 8, max_set=32, seed=2)
+    elif scheme.buffer_source == "id_counts":
+        store = rng.integers(0, 50, 512).astype(np.int64)
+    bufs = table.make_buffers(store)
+    params = table.init(jax.random.key(1))
+    ids = jnp.asarray(rng.integers(0, 512, (64,), np.int32))
+    want = table.embed(params, bufs, 0, ids)          # no mesh: oracle
+    outs = {}
+    for name in ("psum", "ring", "all_to_all"):
+        exl.FORCED = name
+        try:
+            with use_mesh(mesh):
+                outs[name] = table.embed(params, bufs, 0, ids)
+        finally:
+            exl.FORCED = None
+        np.testing.assert_array_equal(np.asarray(outs[name]),
+                                      np.asarray(want))
+    print(kind, "forward parity OK (psum/ring/all_to_all bitwise)")
+
+# the standalone set-reconstruction driver: row-sharded integer table +
+# dp-sharded gids -> exact rows under every strategy
+from repro.dist.sharded_memory import sharded_set_lookup
+store = synthetic_dense_store(512, 8, max_set=32, seed=2)
+gids = jnp.asarray(rng.integers(0, 512, (64,), np.int32))
+want_sets = jnp.take(store.sets, gids, axis=0)
+want_lens = jnp.take(store.lengths, gids, axis=0)
+for name in ("psum", "ring", "all_to_all"):
+    with use_mesh(mesh):
+        got_sets = sharded_set_lookup(store.sets, gids, mesh, ("data",),
+                                      exchange=name)
+        got_lens = sharded_set_lookup(store.lengths, gids, mesh, ("data",),
+                                      exchange=name)
+    np.testing.assert_array_equal(np.asarray(got_sets),
+                                  np.asarray(want_sets))
+    np.testing.assert_array_equal(np.asarray(got_lens),
+                                  np.asarray(want_lens))
+    print("sharded_set_lookup", name, "OK")
+
+print("ALL_EXCHANGE_FORWARD_OK")
+"""
+
+
+_TRAIN_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core.signatures import synthetic_dense_store
+from repro.dist import exchange as exl
+from repro.dist.context import use_mesh
+from repro.embed import EmbeddingTable, get_scheme
+from repro.optim import optimizers as opt_lib
+from repro.optim import sparse as sp
+
+assert len(jax.devices()) == 8
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+
+for kind in ("lma", "hashed_row", "freq"):
+    scheme = get_scheme(kind)
+    table = EmbeddingTable(scheme.build_config((512,), 16, 4096, seed=3))
+    store = synthetic_dense_store(512, 8, max_set=32, seed=2) \
+        if scheme.needs_signature_store else None
+    bufs = table.make_buffers(store)
+    params0 = {"embedding": table.init(jax.random.key(1))}
+
+    def batch(step):
+        r = np.random.default_rng(step)
+        return (jnp.asarray(r.integers(0, 512, 64, np.int32)),
+                jnp.asarray(r.normal(size=(64, 16)).astype(np.float32)))
+
+    def loss_fn(p, ids, y):
+        e = table.embed(p["embedding"], bufs, 0, ids)
+        l = jnp.mean((e - y) ** 2)
+        return l, {"l": l}
+
+    def train(sparse, mesh_ctx, forced=None):
+        params = jax.tree_util.tree_map(lambda x: x, params0)
+        opt = opt_lib.adagrad(0.1, eps=1e-8)
+        state = opt.init(params)
+        vg = sp.sparse_value_and_grad(loss_fn) if sparse else \
+            jax.value_and_grad(loss_fn, has_aux=True)
+        def step(params, state, ids, y):
+            (_, _m), g = vg(params, ids, y)
+            u, state = opt.update(g, state, params)
+            return opt_lib.apply_updates(params, u), state
+        # one jit per train() call: the strategy is resolved at trace time,
+        # and 10 re-traced eager steps x 4 runs x 3 schemes would flirt
+        # with the subprocess timeout on a loaded machine
+        jstep = jax.jit(step)
+        exl.FORCED = forced
+        try:
+            for s in range(10):
+                ids, y = batch(s)
+                if mesh_ctx is None:
+                    params, state = jstep(params, state, ids, y)
+                else:
+                    with use_mesh(mesh_ctx):
+                        params, state = jstep(params, state, ids, y)
+        finally:
+            exl.FORCED = None
+        return params
+
+    a = np.asarray(train(False, None)["embedding"]["memory"])
+    # psum / all_to_all pin the two sparse-update exchanges; ring pins the
+    # ring lookup's BACKWARD path (its update exchange falls back to psum)
+    for forced in ("psum", "ring", "all_to_all"):
+        b = np.asarray(train(True, mesh, forced)["embedding"]["memory"])
+        np.testing.assert_allclose(a, b, atol=1e-6, rtol=1e-6)
+        print(kind, forced, "10-step sparse training parity OK")
+
+print("ALL_EXCHANGE_TRAIN_OK")
+"""
+
+
+def _run_sub(script):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("REPRO_DIST_EXCHANGE", None)
+    return subprocess.run([sys.executable, "-c", script], capture_output=True,
+                          text=True, env=env, timeout=1800)
+
+
+@pytest.mark.slow
+def test_exchange_forward_parity_all_schemes_2x4():
+    r = _run_sub(_PARITY_SCRIPT)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+    assert "ALL_EXCHANGE_FORWARD_OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_exchange_sparse_training_parity_2x4():
+    r = _run_sub(_TRAIN_SCRIPT)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+    assert "ALL_EXCHANGE_TRAIN_OK" in r.stdout

@@ -2,8 +2,11 @@
 device count stays 1 (the dry-run flag must never leak into other tests).
 
 The subprocess forces 8 host devices, builds a (2, 4) ('data','model') mesh,
-and checks that the sharded common-memory lookup (mask-local-gather + psum)
-is bit-identical to the single-device oracle — forward AND gradients.
+and checks that the sharded common-memory lookup is bit-identical to the
+single-device oracle — forward AND gradients — both under the auto-resolved
+exchange strategy and under the pinned psum oracle with the fused slab
+kernel on/off (per-strategy coverage for every registered scheme lives in
+tests/test_exchange.py).
 """
 from __future__ import annotations
 
@@ -99,26 +102,40 @@ with use_mesh(mesh3):
 np.testing.assert_array_equal(np.asarray(got3), np.asarray(want))
 print("multi-pod OK")
 
-# ---- fused per-shard gather: the default body must actually run the fused
-# slab kernel (slab fits VMEM budget), and flipping to the legacy split
-# (alloc + local_gather_psum) path must not change a single bit — both equal
-# the single-device oracle computed above
+# ---- fused per-shard gather under the pinned psum strategy: the psum body
+# must actually run the fused slab kernel (slab fits VMEM budget), and
+# flipping to the legacy split (alloc + local_gather_psum) path must not
+# change a single bit — both equal the single-device oracle computed above.
+# (The unpinned calls above exercise whatever resolve_exchange picks — ring
+# at this shape — so oracle equality covers the auto path too.)
 import repro.kernels.fused_embed.ops as feops
 from repro.dist.sharded_memory import _fused_slab
 assert feops.fused_enabled()
 assert _fused_slab(mem[: M_BUDGET // 4])
 
+def sharded_psum(mem_):
+    return sharded_lma_lookup(mem_, store.sets, store.lengths, gids, lma,
+                              mesh, ("data",), exchange="psum")
+
+def loss_psum(m):
+    with use_mesh(mesh):
+        return jnp.vdot(sharded_psum(m), cot)
+
+with use_mesh(mesh):
+    got_fused = sharded_psum(mem)
+g_fused = jax.grad(loss_psum)(mem)
 feops.ENABLED = False
 try:
     with use_mesh(mesh):
-        got_split = sharded_lma_lookup(mem, store.sets, store.lengths, gids,
-                                       lma, mesh, ("data",))
-    g_split = jax.grad(loss_sharded)(mem)
+        got_split = sharded_psum(mem)
+    g_split = jax.grad(loss_psum)(mem)
 finally:
     feops.ENABLED = True
-np.testing.assert_array_equal(np.asarray(got_split), np.asarray(want))
-np.testing.assert_array_equal(np.asarray(got_split), np.asarray(got))
-np.testing.assert_allclose(np.asarray(g_split), np.asarray(g_got),
+np.testing.assert_array_equal(np.asarray(got_fused), np.asarray(want))
+np.testing.assert_array_equal(np.asarray(got_split), np.asarray(got_fused))
+np.testing.assert_allclose(np.asarray(g_split), np.asarray(g_fused),
+                           rtol=1e-6, atol=1e-6)
+np.testing.assert_allclose(np.asarray(g_fused), np.asarray(g_got),
                            rtol=1e-6, atol=1e-6)
 for kind in ("hashed_elem", "hashed_row"):
     alloc = alloc_hashed_elem if kind == "hashed_elem" else alloc_hashed_row
@@ -127,12 +144,14 @@ for kind in ("hashed_elem", "hashed_row"):
     try:
         with use_mesh(mesh):
             split_h = sharded_hashed_lookup(mem, gids, D, M_BUDGET, 3, mesh,
-                                            ("data",), kind=kind)
+                                            ("data",), kind=kind,
+                                            exchange="psum")
     finally:
         feops.ENABLED = True
     with use_mesh(mesh):
         fused_h = sharded_hashed_lookup(mem, gids, D, M_BUDGET, 3, mesh,
-                                        ("data",), kind=kind)
+                                        ("data",), kind=kind,
+                                        exchange="psum")
     np.testing.assert_array_equal(np.asarray(fused_h), np.asarray(want_h))
     np.testing.assert_array_equal(np.asarray(fused_h), np.asarray(split_h))
 print("fused-vs-split slab gather OK")

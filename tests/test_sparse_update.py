@@ -7,7 +7,8 @@ Covers the PR-4 contract:
   * duplicate-location dedup correctness (sort + segment-sum);
   * untouched-slot moment invariance for sparse_adagrad (bit-equal);
   * the shared adagrad / sparse_adagrad ``initial_acc``/``eps`` contract;
-  * Pallas kernel (interpret) vs jnp reference parity for all three algos;
+  * Pallas kernel (interpret) vs jnp reference parity for all three algos,
+    in both slab layouts (flat [m] and row-mode [rows, d] incl. rowwise nu);
   * power-of-two batch bucketing keeps the fused engine at one compilation
     across batch-size jitter;
   * the check_regression sparse-update gate logic.
@@ -197,6 +198,63 @@ def test_pallas_kernel_matches_ref(algo):
     np.testing.assert_allclose(np.asarray(u_p), np.asarray(u_r), atol=1e-6)
     for a, b in zip(st_p, st_r):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+@pytest.mark.parametrize("algo,rowwise_nu", [("sgd", False),
+                                             ("adagrad", False),
+                                             ("adam", False),
+                                             ("adam", True)])
+def test_pallas_kernel_matches_ref_row_mode(algo, rowwise_nu):
+    """[rows, d] slab layout (row-mode SparseGrad: hashed_row / freq) through
+    the Pallas kernels, incl. rowwise-Adam's 1-D second moment — row schemes
+    on TPU no longer round-trip through the flat [m] reshape.  Untouched
+    rows must stay bit-identical (add-of-delta scatters)."""
+    from repro.kernels.sparse_update import ops as su
+    rows, d, k = 128, 8, 32
+    rng = np.random.default_rng(5)
+    live = np.sort(rng.choice(rows, 20, replace=False)).astype(np.int32)
+    idx = jnp.asarray(np.concatenate([live, np.full(k - 20, rows, np.int32)]))
+    vals = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    vals = vals.at[20:].set(0.0)
+    if algo == "sgd":
+        states = (jnp.asarray(rng.normal(size=(rows, d)).astype(np.float32)),)
+        hyper = dict(lr=0.1, momentum=0.9)
+    elif algo == "adagrad":
+        states = (jnp.asarray(rng.uniform(0.1, 1, (rows, d))
+                              .astype(np.float32)),)
+        hyper = dict(lr=0.1, eps=1e-8)
+    else:
+        nu_shape = (rows,) if rowwise_nu else (rows, d)
+        states = (jnp.asarray(rng.normal(size=(rows, d)).astype(np.float32)),
+                  jnp.asarray(rng.uniform(0, 1, nu_shape).astype(np.float32)))
+        hyper = dict(lr=0.1, b1=0.9, b2=0.99, bc1=0.5, bc2=0.2, eps=1e-8)
+    u_r, st_r = su.sparse_update(algo, idx, vals, states, **hyper)
+    u_p, st_p = su.sparse_update(algo, idx, vals, states, interpret=True,
+                                 **hyper)
+    np.testing.assert_allclose(np.asarray(u_p), np.asarray(u_r), atol=1e-6)
+    untouched = np.setdiff1d(np.arange(rows), live)
+    for a, b, s0 in zip(st_p, st_r, states):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(a)[untouched],
+                                      np.asarray(s0)[untouched])
+
+
+def test_pallas_dispatch_accepts_row_layout():
+    """The TPU auto-dispatch gate admits [rows, d] working sets, rejects
+    >2-D shapes, and only allows a rank-dropped state for Adam's rowwise
+    nu — a 1-D sgd/adagrad state against 2-D values routes to the jnp
+    reference instead of crashing in the kernel."""
+    from repro.kernels.sparse_update.ops import _pallas_ok, _shapes_ok
+    idx = jnp.zeros((8,), jnp.int32)
+    v2 = jnp.zeros((8, 4), jnp.float32)
+    assert _shapes_ok("adagrad", v2, (jnp.zeros((16, 4)),))
+    assert _shapes_ok("adam", v2, (jnp.zeros((16, 4)), jnp.zeros((16,))))
+    assert not _shapes_ok("sgd", v2, (jnp.zeros((16,)),))
+    assert not _shapes_ok("adagrad", v2, (jnp.zeros((16,)),))
+    assert not _shapes_ok("adam", v2, (jnp.zeros((16,)), jnp.zeros((16,))))
+    assert not _shapes_ok("adagrad", jnp.zeros((8, 4, 2)),
+                          (jnp.zeros((16, 4, 2)),))
+    assert _pallas_ok("adagrad", idx, v2, (jnp.zeros((16, 4)),))
 
 
 # ------------------------------------------------- training parity (oracle)
