@@ -275,28 +275,64 @@ def bench_sparse_update(rows: list, out: list) -> dict:
 
 
 def bench_dedup_sort(rows: list, out: list) -> None:
-    """The O(K log K) element-dedup sort every sparse step pays
-    (``sparse.from_locations``: argsort + segment-sum over the raw touched
-    locations).  At near-uniform traffic on CPU this term alone can erase
-    the sparse-vs-dense win, which is why the relocated gate
-    (``repro.dist.exchange.sparse_worthwhile``) now prices it
-    (``dedup_sort_bytes``) instead of ignoring it."""
+    """The SparseGrad construction tax, swept over K = B*d in 2^13..2^17,
+    three ways on the SAME striped locations:
+
+    ``sparse_dedup_sort``
+        flat path — ``sparse.from_locations``: one O(K log K) argsort +
+        segment-sum dedup.  At near-uniform traffic on CPU this term alone
+        can erase the sparse-vs-dense win — the reason pod-scale lma cells
+        used to stay dense.
+    ``sparse_dedup_bucketed``
+        ``sparse.from_bucketed_locations``: d per-stripe packed-key sorts
+        (log(K/d) deep, batched), dedup deferred to the update kernel.
+    ``sparse_dedup_inkernel``
+        the full replacement pipeline — bucketed construction + the
+        adagrad update consuming the duplicate stream directly
+        (``unique=False``, in-kernel fold); its flat twin is
+        sparse_dedup_sort + the sparse_update_adagrad row.
+
+    ``check_regression.dedup_speedup_failures`` gates flat/bucketed >= 3x
+    at K=2^17, the measurement behind ``exchange.BUCKETED_SORT_SPEEDUP``.
+    """
     from repro.dist import exchange as exl
+    from repro.kernels.sparse_update import ops as su
     from repro.optim import sparse as sp
 
-    m, B, d = 1 << 21, 4096, 32
-    k = B * d
-    shape = f"{B}x{d}@m=2^21"
+    m, d = 1 << 21, 32
+    stripe = m // d
     rng = np.random.default_rng(11)
-    # near-uniform traffic: the worst case for the dedup (few duplicates)
-    loc = jnp.asarray(rng.integers(0, m, (B, d), np.int32))
-    vals = jnp.asarray(rng.normal(size=(B, d)).astype(np.float32))
-    f = jax.jit(lambda l, v: sp.from_locations(l, v, (m,)).indices)
-    us = time_fn(f, loc, vals)
-    rows.append(("sparse_dedup_sort", shape, round(us, 1)))
-    out.append(f"kernels sparse_dedup_sort {shape}: {us:.0f} us for K={k} "
-               f"(modeled {exl.dedup_sort_bytes(k)/2**20:.1f} MiB-equiv; "
-               f"the sort term in exchange.sparse_worthwhile)")
+    for B in (256, 512, 1024, 2048, 4096):
+        k = B * d
+        shape = f"{B}x{d}@m=2^21"
+        # near-uniform traffic within each stripe: the worst case for the
+        # dedup (few duplicates), laid out bucketed-by-construction the way
+        # the striped allocator emits it
+        loc = jnp.asarray(np.arange(d)[None, :] * stripe
+                          + rng.integers(0, stripe, (B, d)), jnp.int32)
+        vals = jnp.asarray(rng.normal(size=(B, d)).astype(np.float32))
+        flat = jax.jit(lambda l, v: sp.from_locations(l, v, (m,)).indices)
+        buck = jax.jit(
+            lambda l, v: sp.from_bucketed_locations(l, v, (m,)).indices)
+        acc = jnp.full((m,), 0.1, jnp.float32)
+
+        def inkernel(l, v, a):
+            g = sp.from_bucketed_locations(l, v, (m,))
+            u, st = su.sparse_update("adagrad", g.indices, g.values, (a,),
+                                     unique=False, lr=0.05)
+            return u, st
+        us_f = time_fn(flat, loc, vals)
+        us_b = time_fn(buck, loc, vals)
+        us_k = time_fn(jax.jit(inkernel), loc, vals, acc)
+        rows.append(("sparse_dedup_sort", shape, round(us_f, 1)))
+        rows.append(("sparse_dedup_bucketed", shape, round(us_b, 1)))
+        rows.append(("sparse_dedup_inkernel", shape, round(us_k, 1)))
+        out.append(
+            f"kernels sparse_dedup K={k}: flat {us_f:.0f} us, bucketed "
+            f"{us_b:.0f} us ({us_f / max(us_b, 1e-9):.1f}x), +in-kernel "
+            f"fold {us_k:.0f} us (modeled flat "
+            f"{exl.dedup_sort_bytes(k)/2**20:.1f} vs bucketed "
+            f"{exl.dedup_sort_bytes(k, d)/2**20:.1f} MiB-equiv)")
 
 
 def bench_scheme_sweep(rows: list, out: list) -> None:

@@ -8,7 +8,10 @@ registered embedding scheme has no ``scheme_embed_*`` row in the fresh sweep
 scheme is benched — and gated — automatically), when the sparse
 memory-pool update loses its edge over the dense O(m) step
 (``sparse_speedup_failures``: modeled per-step HBM traffic must stay >= 3x
-better AND measured wall-clock strictly faster), or when the sharded lookup
+better AND measured wall-clock strictly faster), when the bucketed
+SparseGrad construction loses its measured edge over the flat dedup sort or
+a flipped 16x16 lma train cell stops recording ``sparse_grads: true``
+(``dedup_speedup_failures``), or when the sharded lookup
 loses the exchange layer's win (``sharded_gap_failures``: best-strategy
 sharded/replicated wall-clock <= 2.5x at 8 devices AND ring or all_to_all
 strictly beating psum).  New rows are allowed (they become baseline once
@@ -51,6 +54,14 @@ SPARSE_SPEEDUP_MIN = 3.0
 # ... while the measured wall-clock must still show the sparse update
 # strictly beating dense on this machine
 SPARSE_WALL_MIN = 1.15
+# the bucketed SparseGrad construction (per-stripe sorts, dedup folded into
+# the update kernel) must stay >= this much faster than the flat
+# argsort + segment-sum path at the pod-gate shape (K = 4096*32 = 2^17
+# element locations) — the measurement behind
+# repro.dist.exchange.BUCKETED_SORT_SPEEDUP, whose model is what flips the
+# 16x16 lma train cells to sparse.  Measured ~7-9x on XLA:CPU; gated at 3x.
+DEDUP_SPEEDUP_MIN = 3.0
+DEDUP_GATE_SHAPE = "4096x32@m=2^21"
 # the 8-device sharded lookup must stay within this factor of the
 # single-device replicated lookup, taking the best exchange strategy
 # (psum | ring | all_to_all — repro/dist/exchange.py).  The pre-exchange
@@ -122,6 +133,61 @@ def sparse_speedup_failures(fresh: dict, fresh_doc: dict | None = None,
                 f"sparse_update_adagrad [{shape}]: {ratio:.2f}x vs dense "
                 f"({s_us:.1f} us vs {dense[shape]:.1f} us; wall gate "
                 f"requires >= {min_wall:.2f}x)")
+    return failures
+
+
+def dedup_speedup_failures(fresh: dict, fresh_doc: dict | None = None,
+                           min_ratio: float = DEDUP_SPEEDUP_MIN,
+                           dryrun_dir: str | None = None) -> list[str]:
+    """The absolute perf claim of the bucketed-layout dedup replacement:
+
+      * at the pod-gate shape (``DEDUP_GATE_SHAPE``, K = 2^17) the measured
+        ``sparse_dedup_bucketed`` construction must beat the flat
+        ``sparse_dedup_sort`` by >= min_ratio — the measurement the
+        exchange cost model's ``BUCKETED_SORT_SPEEDUP`` constant is fit
+        from (model 5x, gate 3x, so the model can never quietly exceed
+        what this machine still measures by more than its safety margin);
+      * the committed 16x16 lma train dryrun artifacts the model flipped
+        must actually record ``sparse_grads: true`` — if the gate's
+        decision and the lowered cells disagree, one of them regressed.
+
+    ``dryrun_dir=None`` resolves the committed ``experiments/dryrun``;
+    artifact checks are skipped when the directory (or a cell) is absent
+    (standalone ledger-diff use).
+    """
+    flat = fresh.get(("sparse_dedup_sort", DEDUP_GATE_SHAPE))
+    buck = fresh.get(("sparse_dedup_bucketed", DEDUP_GATE_SHAPE))
+    failures = []
+    if flat is None or buck is None:
+        failures.append(
+            f"sparse_dedup_sort/sparse_dedup_bucketed [{DEDUP_GATE_SHAPE}] "
+            f"missing from the fresh ledger (the bucketed-dedup gate "
+            f"cannot run)")
+    else:
+        ratio = flat / max(buck, 1e-9)
+        if ratio < min_ratio:
+            failures.append(
+                f"bucketed dedup [{DEDUP_GATE_SHAPE}]: {ratio:.2f}x vs flat "
+                f"({buck:.1f} us vs {flat:.1f} us; gate requires >= "
+                f"{min_ratio:.1f}x — the speedup BUCKETED_SORT_SPEEDUP "
+                f"models)")
+    if dryrun_dir is None:
+        dryrun_dir = os.path.join(os.path.dirname(BASELINE), "..", "dryrun")
+    # the bucket-eligible lma archs (budget % dim == 0); din/xdeepfm have
+    # ragged budgets and legitimately stay dense
+    for arch in ("dlrm-rm2", "dcn-v2"):
+        for mesh in ("16x16", "2x16x16"):
+            p = os.path.join(dryrun_dir, f"{arch}__train_batch__{mesh}.json")
+            if not os.path.exists(p):
+                continue
+            with open(p) as f:
+                meta = json.load(f).get("meta", {})
+            if not meta.get("sparse_grads"):
+                failures.append(
+                    f"{arch} train_batch @ {mesh}: dryrun meta records "
+                    f"sparse_grads={meta.get('sparse_grads')!r} — the "
+                    f"bucketed layout should flip this cell to sparse "
+                    f"(re-lower with python -m repro.launch.dryrun)")
     return failures
 
 
@@ -224,6 +290,7 @@ def main(argv=None) -> int:
     failures += [f"registered scheme {k!r} missing from the bench sweep"
                  for k in missing_schemes(fresh)]
     failures += sparse_speedup_failures(fresh, fresh_doc)
+    failures += dedup_speedup_failures(fresh, fresh_doc)
     failures += sharded_gap_failures(fresh, fresh_doc)
     if failures:
         print(f"REGRESSION ({len(failures)} row(s)):")

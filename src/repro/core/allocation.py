@@ -31,12 +31,22 @@ def alloc_full(value_ids: jax.Array, d: int) -> jax.Array:
     return v[:, None] * d + jnp.arange(d, dtype=jnp.int32)[None, :]
 
 
-def alloc_hashed_elem(value_ids: jax.Array, d: int, m: int, seed: int) -> jax.Array:
-    """Element-wise naive hashing trick (HashedNet [13])."""
+def alloc_hashed_elem(value_ids: jax.Array, d: int, m: int, seed: int,
+                      stripe: int = 0) -> jax.Array:
+    """Element-wise naive hashing trick (HashedNet [13]).
+
+    ``stripe > 0`` selects the striped layout: position ``i`` maps into its own
+    contiguous slot range ``[i*stripe, (i+1)*stripe)`` instead of all of
+    ``[0, m)``.  Used by the LMA very-sparse fallback when
+    ``LMAParams.striped`` is set, so the stripe invariant holds for every row.
+    """
     seeds = seed_stream(seed, d)                      # one function per element index
     v = value_ids.astype(jnp.uint32)[:, None]
     i = jnp.arange(d, dtype=jnp.uint32)[None, :]
     h = hash_pair(v, i, seeds[None, :])
+    if stripe:
+        return (jnp.arange(d, dtype=jnp.int32)[None, :] * stripe
+                + (h % jnp.uint32(stripe)).astype(jnp.int32))
     return (h % jnp.uint32(m)).astype(jnp.int32)
 
 
@@ -64,10 +74,25 @@ class LMAParams:
     # power-n_h functions).  False: sliding-window sharing, d+n_h-1 raw hashes
     # (beyond-paper perf option; each window is still a valid power-n_h minhash,
     # only cross-i covariance changes — see EXPERIMENTS.md §Perf).
+    striped: bool = False
+    # striped=True: position i maps into its own stripe [i*(m//d), (i+1)*(m//d))
+    # instead of all of [0, m) — a beyond-paper layout option (same precedent as
+    # independent_hashes) that makes the VJP's location stream bucketed by
+    # construction, so the sparse-update dedup replaces a global O(K log K)
+    # argsort with d independent per-stripe sorts (optim/sparse.py
+    # ``from_bucketed_locations``).  Cost: the Theorem 1 collision floor rises
+    # from 1/m to d/m = 1/stripe (see ``expected_gamma``); with m/d >= 2^16
+    # this is negligible at production budgets.  Requires m % d == 0 (otherwise
+    # the flag is inert and the flat layout is used).
 
     @property
     def n_raw_hashes(self) -> int:
         return self.d * self.n_h if self.independent_hashes else self.d + self.n_h - 1
+
+    @property
+    def stripe(self) -> int:
+        """Stripe width when the striped layout is active, else 0 (flat)."""
+        return self.m // self.d if (self.striped and self.m % self.d == 0) else 0
 
 
 def _rows_signatures(params: LMAParams, rows: jax.Array) -> jax.Array:
@@ -114,6 +139,10 @@ def locations_from_signatures(params: LMAParams, sigs: jax.Array) -> jax.Array:
         grouped = sigs[:, idx]                        # [B, d, n_h] sliding windows
     rehash_seeds = seed_stream(params.seed ^ 0x7F4A7C15, params.d)
     h = combine_chain(grouped, rehash_seeds[None, :], axis=-1)   # [B, d]
+    stripe = params.stripe
+    if stripe:
+        return (jnp.arange(params.d, dtype=jnp.int32)[None, :] * stripe
+                + (h % jnp.uint32(stripe)).astype(jnp.int32))
     return (h % jnp.uint32(params.m)).astype(jnp.int32)
 
 
@@ -121,7 +150,8 @@ def _lma_or_fallback(params: LMAParams, loc_lma: jax.Array,
                      support: jax.Array, value_ids: jax.Array) -> jax.Array:
     """Very-sparse fallback to A_h (paper section 5): |D_v| < min_support."""
     loc_fallback = alloc_hashed_elem(value_ids, params.d, params.m,
-                                     params.seed ^ 0x1234567)
+                                     params.seed ^ 0x1234567,
+                                     stripe=params.stripe)
     sparse = (support < params.min_support)[:, None]
     return jnp.where(sparse, loc_fallback, loc_lma)
 
@@ -161,6 +191,12 @@ def fraction_shared(loc_a: jax.Array, loc_b: jax.Array) -> jax.Array:
     return jnp.mean((loc_a == loc_b).astype(jnp.float32), axis=-1)
 
 
-def expected_gamma(phi: jax.Array, m: int) -> jax.Array:
-    """Theorem 1: E[f_{A_L}] = phi + (1 - phi)/m."""
-    return phi + (1.0 - phi) / m
+def expected_gamma(phi: jax.Array, m: int, stripe: int = 0) -> jax.Array:
+    """Theorem 1: E[f_{A_L}] = phi + (1 - phi)/m.
+
+    Under the striped layout (``LMAParams.striped``) position i rehashes into
+    its own stripe of ``m // d`` slots, so the accidental-collision floor rises
+    from 1/m to 1/stripe = d/m; pass ``stripe=params.stripe`` to model it.
+    The default (``stripe=0``) is the paper's flat layout.
+    """
+    return phi + (1.0 - phi) / (stripe if stripe else m)

@@ -357,60 +357,102 @@ def resolve_exchange(mesh, B: int | None = None, d: int | None = None,
 #
 # Relocated from launch/steps.py::_sparse_worthwhile, extended with (a) the
 # per-strategy exchange term (all_to_all keeps owned slices local instead of
-# replicating the K vectors) and (b) the O(K log K) dedup-sort term the old
-# gate ignored — on CPU at near-uniform traffic the sort alone can erase the
-# sparse win (ROADMAP item; ``sparse_dedup_sort`` bench row measures it).
+# replicating the K vectors) and (b) a per-path dedup term — on CPU at
+# near-uniform traffic the flat O(K log K) sort alone can erase the sparse
+# win (``sparse_dedup_sort`` bench rows measure it).  Striped-layout schemes
+# (``Scheme.sparse_buckets`` > 0) escape that tax three ways at once: the
+# per-stripe sorts are log(K/d) deep instead of log(K), d batched small
+# sorts run several times the byte efficiency of one giant argsort
+# (``BUCKETED_SORT_SPEEDUP``, fit from the measured sweep and ratcheted by
+# ``check_regression.dedup_speedup_failures``), and under a 'model' mesh
+# each rank sorts only its own buckets/n_model stripes.
 
 SORT_BYTES_PER_KEY_PASS = 4.0      # one 4-byte key pass per merge level
 
+# Measured byte-efficiency of the bucketed path (d per-stripe packed-key
+# sorts + the update kernel's in-kernel duplicate fold) over the flat
+# argsort + segment-sum dedup, at matched K.  The CPU sweep in
+# bench_kernels (``sparse_dedup_sort`` rows, flat vs bucketed) measures
+# 7-9x at K=2^17; 5.0 is the conservative modeling constant, and
+# check_regression gates the measured ratio at >= 3x so the model can
+# never drift above reality unnoticed.
+BUCKETED_SORT_SPEEDUP = 5.0
 
-def dedup_sort_bytes(k: int) -> float:
-    """Modeled bytes of the SparseGrad dedup sort: K keys x log2 K passes."""
+
+def dedup_sort_bytes(k: int, buckets: int = 0) -> float:
+    """Modeled bytes of building one sorted SparseGrad from ``k`` locations.
+
+    ``buckets == 0`` (flat): one O(k log k) argsort + segment-sum dedup —
+    k keys x log2 k merge passes.  ``buckets == d`` (striped layout,
+    ``optim.sparse.from_bucketed_locations``): d independent per-stripe
+    sorts of k/d packed keys each, with dedup folded into the update kernel
+    — the log factor drops to log2(k/d) and the whole construction runs at
+    ``BUCKETED_SORT_SPEEDUP`` the byte efficiency of the flat path.
+    """
     if k <= 1:
         return 0.0
+    if buckets and k % buckets == 0 and k > buckets:
+        return (SORT_BYTES_PER_KEY_PASS * k * math.log2(k // buckets)
+                / BUCKETED_SORT_SPEEDUP)
     return SORT_BYTES_PER_KEY_PASS * k * math.log2(k)
 
 
 def sparse_update_cost(n_model: int, n_lookups: int, d: int, m: int,
-                       row_mode: bool = False) -> dict[str, float]:
+                       row_mode: bool = False,
+                       buckets: int = 0) -> dict[str, float]:
     """Per-device modeled bytes of one memory-pool optimizer step.
 
     ``dense``: the dense path's slab tax — zeros + scatter + the O(m_local)
     optimizer read-modify-write, ~8 f32 passes over the model-sharded pool
     (bench_kernels.modeled_update_bytes).  ``sparse_psum``: the replicated
     (indices, values) pair costs its construction broadcast plus the [K]
-    update-value psum.  ``sparse_all_to_all``: each rank keeps only its
-    owned 1/n_model slice (the index routing still touches the full index
-    vector once).  Both sparse forms pay the dedup sort.
+    update-value psum — the SparseGrad must be whole on every rank, so it
+    always pays the replicated dedup.  ``sparse_all_to_all``: each rank
+    keeps only its owned 1/n_model slice; flat records additionally touch
+    the full index vector once for routing, while the bucketed layout
+    (``buckets == d``, striped schemes) routes for free — stripes coincide
+    with owner slabs, so the per-rank stripe sort IS the routing — and,
+    when 'model' divides the bucket count, shards the sort itself by
+    n_model (the sharded segment sort).  ``dedup_sort`` reports the term
+    the all_to_all entry was charged.
     """
     P = max(n_model, 1)
     k_elems = n_lookups * d
     k_idx = n_lookups if row_mode else k_elems
     idx_b, val_b = 4 * k_idx, 4 * k_elems
-    sort = dedup_sort_bytes(k_idx)
+    sort = dedup_sort_bytes(k_idx, buckets)
+    shard = P if (buckets and buckets % P == 0) else 1
+    if buckets:
+        a2a = (idx_b + val_b) / P + sort / shard
+    else:
+        a2a = (idx_b + val_b) / P + idx_b + sort
     return {
         "dense": 8 * (m // P) * 4,
         "sparse_psum": 2 * (idx_b + val_b) + sort,
-        "sparse_all_to_all": (idx_b + val_b) / P + idx_b + sort,
-        "dedup_sort": sort,
+        "sparse_all_to_all": a2a,
+        "dedup_sort": sort / shard,
     }
 
 
 def sparse_worthwhile(mesh, n_lookups: int, d: int, m: int,
-                      row_mode: bool = False) -> bool:
+                      row_mode: bool = False, buckets: int = 0) -> bool:
     """Should the training step carry SparseGrad pool gradients here?
 
     True when the best sparse exchange (psum, or all_to_all when a 'model'
     axis exists) models cheaper than the dense slab update.  Single-host
-    training always picks sparse (K << m).  A 16x16 pod cell with a 65k
-    global batch and element-level (lma) records picks dense — the dedup
-    sort on ~54M element locations dominates; the same cell with row-aligned
-    records (hashed_row / freq) now goes sparse, because the all_to_all
-    exchange cuts the replicated-pair cost by ~n_model and the row-id sort
-    is d times smaller.  That crossover move is the point of the strategy.
+    training always picks sparse (K << m).  At a 16x16 pod cell with a 65k
+    global batch the decision splits three ways: flat element-level records
+    stay dense — the O(K log K) dedup sort on ~54M element locations erases
+    the win; row-aligned records (hashed_row / freq) go sparse because the
+    index vector and its sort are d times smaller and the all_to_all
+    exchange keeps owned slices local; and bucketed element records
+    (``buckets == d``, the striped LMA layout) go sparse too — per-stripe
+    sorts sharded over 'model' plus the in-kernel fold price the
+    construction below the dense slab tax.  That last flip is what the
+    bucketed layout was built for.
     """
     n_model = model_size(mesh) if mesh is not None else 1
-    costs = sparse_update_cost(n_model, n_lookups, d, m, row_mode)
+    costs = sparse_update_cost(n_model, n_lookups, d, m, row_mode, buckets)
     # ring forces fall back to psum for the update exchange
     # (resolve_update_exchange), so they are priced as psum here too
     best = costs["sparse_psum"] if (n_model <= 1

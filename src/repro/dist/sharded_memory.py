@@ -264,15 +264,46 @@ def _slab_mask(idx, n_local, axis_name="model"):
     return jnp.clip(rel, 0, n_local - 1), jnp.where(mine, rel, n_local), mine
 
 
+def slab_aligned(unique: bool, buckets: int, k: int, n_model: int) -> bool:
+    """True when a stripe-major bucketed stream's even [K] split lands each
+    rank's slice exactly on its parameter slab.
+
+    A ``buckets=d`` stream (``from_bucketed_locations``) is stripe-major:
+    slice ``[j*K/d, (j+1)*K/d)`` indexes only slots ``[j*m/d, (j+1)*m/d)``.
+    With ``d % n_model == 0`` each rank's K/n_model chunk covers whole
+    stripes that tile its contiguous m/n_model slab — so indices and values
+    can enter the shard_map already 'model'-sharded (no K-sized
+    replication) and the update needs no exchange collective at all: every
+    rank's slice is complete for its slab, duplicates included.
+    """
+    return (not unique and buckets > 0 and buckets % n_model == 0
+            and k % n_model == 0)
+
+
 def sharded_sparse_update(algo: str, indices, values, states: tuple,
-                          hyper: dict, mesh, exchange=None):
+                          hyper: dict, mesh, exchange=None, *,
+                          unique: bool = True, buckets: int = 0):
     """Run one sparse optimizer update on 'model'-sharded moment slabs.
 
-    ``indices [K]`` / ``values [K, ...]`` follow the SparseGrad contract
-    (sorted unique, sentinel-padded).  Returns (update_values [K, ...] —
-    replicated under the psum strategy, owner-partial under all_to_all —
-    and the new slab tree).  Must be called OUTSIDE shard_map (it opens its
-    own).
+    ``indices [K]`` / ``values [K, ...]`` follow the SparseGrad contract:
+    sorted unique + sentinel-padded (``unique=True``), or sorted-with-
+    duplicates from the bucketed striped layout (``unique=False``) — then
+    each rank owner-masks its slice and the in-kernel fold sums every
+    duplicate run *before* the moment math, so Adagrad sees the complete
+    per-slot (sum g)^2, not a partial.  Duplicates of an owned slot are
+    adjacent in the global sorted stream and ownership is contiguous slabs,
+    so the owner always sees the whole run; off-slab entries collapse onto
+    the local sentinel ``n_local`` with zeroed values and fold into dropped
+    no-ops.  Returns (update_values [K, ...] — replicated under the psum
+    strategy, owner-partial under all_to_all — and the new slab tree).
+    Must be called OUTSIDE shard_map (it opens its own).
+
+    When ``slab_aligned(unique, buckets, K, n_model)`` holds, indices and
+    values enter (and the update leaves) 'model'-sharded instead of
+    replicated: each rank holds only its K/n_model stripe-major slice —
+    which is exactly its slab's complete entry stream — and the body needs
+    no exchange collective.  This is the pod-scale path the bucketed layout
+    buys: per-step collective bytes drop from O(K) replication to zero.
     """
     from repro.kernels.sparse_update.ops import sparse_update
 
@@ -280,6 +311,8 @@ def sharded_sparse_update(algo: str, indices, values, states: tuple,
         exchange = exl.get_exchange(exchange)
     ex = exchange if exchange is not None else exl.resolve_update_exchange(mesh)
     n_model = _model_size(mesh)
+    aligned = slab_aligned(unique, buckets, int(indices.shape[0]), n_model)
+    gspec = P("model") if aligned else P()
 
     # traced hyper-parameters (adam's step-dependent bias corrections) must
     # enter the shard_map as explicit replicated inputs, not closures
@@ -293,33 +326,40 @@ def sharded_sparse_update(algo: str, indices, values, states: tuple,
         _, scat, mine = _slab_mask(idx, n_local)
         vmask = mine.reshape(mine.shape + (1,) * (vals.ndim - 1))
         lvals = jnp.where(vmask, vals, 0)
-        u, new_st = sparse_update(algo, scat, lvals, st_l,
+        u, new_st = sparse_update(algo, scat, lvals, st_l, unique=unique,
                                   **dict(static, **dict(zip(tkeys, tvals))))
-        return (ex.reduce_update(u, n_model),) + tuple(new_st)
+        u = u if aligned else ex.reduce_update(u, n_model)
+        return (u,) + tuple(new_st)
 
     nst = len(states)
     fn = shard_map(body, mesh=mesh,
-                   in_specs=(P(), P()) + (P(),) * len(tkeys)
+                   in_specs=(gspec, gspec) + (P(),) * len(tkeys)
                    + (P("model"),) * nst,
-                   out_specs=(P(),) + (P("model"),) * nst,
+                   out_specs=(gspec,) + (P("model"),) * nst,
                    check_vma=False)
     out = fn(indices, values, *targs, *states)
     return out[0], tuple(out[1:])
 
 
 def sharded_sparse_apply(param: jax.Array, indices, values, mesh,
-                         exchange=None):
+                         exchange=None, *, unique: bool = True,
+                         buckets: int = 0):
     """Masked local scatter-add of SparseGrad update values into the
     'model'-sharded parameter slab (the sparse ``apply_updates``).  The
     ownership mask makes this the correct consumer for BOTH replicated
-    (psum) and owner-partial (all_to_all) update values."""
+    (psum) and owner-partial (all_to_all) update values.  Slab-aligned
+    bucketed streams (see ``slab_aligned``) keep indices/values
+    'model'-sharded end to end — the scatter is purely rank-local."""
+    n_model = _model_size(mesh)
+    aligned = slab_aligned(unique, buckets, int(indices.shape[0]), n_model)
+    gspec = P("model") if aligned else P()
 
     def body(p_l, idx, vals):
         _, scat, mine = _slab_mask(idx, p_l.shape[0])
         vmask = mine.reshape(mine.shape + (1,) * (vals.ndim - 1))
         return p_l.at[scat].add(jnp.where(vmask, vals, 0), mode="drop")
 
-    fn = shard_map(body, mesh=mesh, in_specs=(P("model"), P(), P()),
+    fn = shard_map(body, mesh=mesh, in_specs=(P("model"), gspec, gspec),
                    out_specs=P("model"), check_vma=False)
     return fn(param, indices, values)
 

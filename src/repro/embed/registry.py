@@ -151,6 +151,18 @@ class Scheme:
         (``repro.dist.exchange.alloc_bytes_per_row``)."""
         return 0
 
+    def sparse_buckets(self, cfg: "EmbeddingConfig") -> int:
+        """Number of location buckets (= d) when this scheme's ``locations``
+        satisfy the striped invariant — column j of the [N, d] tensor lies
+        in ``[j*(m//d), (j+1)*(m//d))`` — else 0.
+
+        A non-zero return lets the sparse-gradient engine build the pool's
+        SparseGrad with d independent per-stripe sorts
+        (``optim.sparse.from_bucketed_locations``) plus the sparse-update
+        kernel's in-kernel duplicate fold, instead of one global
+        O(K log K) argsort + segment-sum dedup."""
+        return 0
+
     def sparse_row_ids(self, cfg: "EmbeddingConfig", buffers: dict,
                        gids: jax.Array):
         """[N] pool row ids when this scheme's locations are d-aligned rows

@@ -116,16 +116,24 @@ class LMAScheme(Scheme):
         assert cfg.lma is not None, "lma needs LMAParams"
 
     def build_config(self, vocab_sizes, dim, budget, n_h: int = 4,
-                     max_set: int = 32, seed: int = 0, **kw):
+                     max_set: int = 32, seed: int = 0,
+                     striped: bool | None = None, **kw):
         kw.setdefault("memory_init", "bernoulli")
         # training configs pin the 1/sqrt(d) activation scale explicitly;
         # with init_scale=None the scheme keeps Theorem 2's unit +/-1 entries
         # (cosine concentration is scale-invariant, conditioning is not)
         kw.setdefault("init_scale", 1.0 / np.sqrt(dim))
+        # production configs default to the striped location layout: the
+        # sparse-update dedup then runs bucketed (from_bucketed_locations +
+        # in-kernel fold) instead of a global argsort, for a collision-floor
+        # cost of 1/m -> d/m (negligible at production budgets).  Ragged
+        # budgets keep the flag inert (LMAParams.stripe == 0).
+        if striped is None:
+            striped = budget is not None and budget % dim == 0
         return EmbeddingConfig(
             kind="lma", vocab_sizes=tuple(vocab_sizes), dim=dim, budget=budget,
             lma=LMAParams(d=dim, m=budget, n_h=n_h, max_set=max_set,
-                          seed=seed),
+                          seed=seed, striped=striped),
             seed=seed, **kw)
 
     def param_count(self, cfg):
@@ -199,10 +207,13 @@ class LMAScheme(Scheme):
     def exchange_set_width(self, cfg):
         return int(cfg.lma.max_set)
 
+    def sparse_buckets(self, cfg):
+        return cfg.lma.d if cfg.lma.stripe else 0
+
     def extra_describe(self, cfg):
         p = cfg.lma
         return {"n_h": p.n_h, "max_set": p.max_set,
-                "min_support": p.min_support,
+                "min_support": p.min_support, "striped": p.striped,
                 "memory_init": cfg.memory_init}
 
 

@@ -60,7 +60,11 @@ def _memory_lookup(cfg: EmbeddingConfig, params: dict, buffers: dict,
             st.record_rows(params["memory"], rows, cfg.dim)
         else:
             loc = bke.sparse_locations(cfg, scheme, params, buffers, gids)
-            st.record(params["memory"], loc)
+            # striped-layout schemes declare bucketed columns: the sparse
+            # engine then builds the SparseGrad with d per-stripe sorts
+            # instead of one global O(K log K) argsort
+            st.record(params["memory"], loc,
+                      n_buckets=scheme.sparse_buckets(cfg))
         return jnp.zeros((gids.shape[0], cfg.dim), params["memory"].dtype)
     if st is not None and st.mode == "provide":
         tap = st.next_tap((gids.shape[0], cfg.dim))

@@ -51,12 +51,17 @@ N_LOC_INPUTS = {"lma": 6, "hashed_elem": 2, "hashed_row": 2}
 
 # --------------------------------------------------------------- locations
 
-def _elem_locations(gids, seeds, *, d: int, m: int):
-    """alloc_hashed_elem inside the tile: loc[n, i] = hash_pair(v, i) % m."""
+def _elem_locations(gids, seeds, *, d: int, m: int, stripe: int = 0):
+    """alloc_hashed_elem inside the tile: loc[n, i] = hash_pair(v, i) % m.
+
+    ``stripe > 0``: striped layout, position i hashes within its own stripe
+    (bit-identical to ``alloc_hashed_elem(..., stripe=stripe)``)."""
     v = gids.astype(jnp.uint32)[:, None]
     i = jax.lax.broadcasted_iota(jnp.int32, (gids.shape[0], d), 1)
     hx = _hash_u32(v, seeds[None, :])
     h = _hash_u32(i.astype(jnp.uint32) ^ hx, seeds[None, :] ^ _u(_GOLDEN))
+    if stripe:
+        return i * stripe + (h % _u(stripe)).astype(jnp.int32)
     return (h % _u(m)).astype(jnp.int32)
 
 
@@ -82,7 +87,7 @@ def _minhash_tile(sets, mask, seeds):
 
 def _lma_locations(sets, gids, support, seeds, rehash, fb_seeds, *,
                    d: int, n_h: int, m: int, min_support: int,
-                   independent: bool):
+                   independent: bool, stripe: int = 0):
     """Full A_L with the very-sparse A_h fallback, bit-identical to
     ``alloc_lma_from_rows`` (tests/test_fused_embed.py proves it)."""
     N = sets.shape[0]
@@ -96,12 +101,18 @@ def _lma_locations(sets, gids, support, seeds, rehash, fb_seeds, *,
     h = jnp.broadcast_to(rehash[None, :], (N, d)).astype(jnp.uint32)
     for t in range(n_h):                                     # static unroll
         h = (h ^ fmix32(grouped[:, :, t])) * _u(_M1) + _u(_GOLDEN)
-    loc = (fmix32(h) % _u(m)).astype(jnp.int32)
-    loc_fb = _elem_locations(gids, fb_seeds, d=d, m=m)
+    hf = fmix32(h)
+    if stripe:
+        i = jax.lax.broadcasted_iota(jnp.int32, (N, d), 1)
+        loc = i * stripe + (hf % _u(stripe)).astype(jnp.int32)
+    else:
+        loc = (hf % _u(m)).astype(jnp.int32)
+    loc_fb = _elem_locations(gids, fb_seeds, d=d, m=m, stripe=stripe)
     return jnp.where((support < min_support)[:, None], loc_fb, loc)
 
 
-def _tile_locations(scheme, loc_refs, *, d, n_h, m, min_support, independent):
+def _tile_locations(scheme, loc_refs, *, d, n_h, m, min_support, independent,
+                    stripe=0):
     """Read the location-input refs, flatten batch dims, return [N, d] int32
     locations plus the batch block shape (bb,) or (bb, L)."""
     if scheme == "lma":
@@ -113,13 +124,16 @@ def _tile_locations(scheme, loc_refs, *, d, n_h, m, min_support, independent):
             sets.reshape(N, sets.shape[-1]), gids.reshape(N),
             support.reshape(N), seeds_r[...], rehash_r[...], fb_r[...],
             d=d, n_h=n_h, m=m, min_support=min_support,
-            independent=independent)
+            independent=independent, stripe=stripe)
         return loc, bshape
     gids_r, seeds_r = loc_refs
     gids = gids_r[...]
     bshape = gids.shape
-    fn = _elem_locations if scheme == "hashed_elem" else _row_locations
-    return fn(gids.reshape(math.prod(bshape)), seeds_r[...], d=d, m=m), bshape
+    if scheme == "hashed_elem":
+        return _elem_locations(gids.reshape(math.prod(bshape)), seeds_r[...],
+                               d=d, m=m, stripe=stripe), bshape
+    return _row_locations(gids.reshape(math.prod(bshape)), seeds_r[...],
+                          d=d, m=m), bshape
 
 
 def _slab_gather(mem, loc, base):
@@ -136,7 +150,8 @@ def _slab_gather(mem, loc, base):
 
 # ------------------------------------------------------------ kernel bodies
 
-def _fwd_kernel(*refs, scheme, d, n_h, m, min_support, independent, pool):
+def _fwd_kernel(*refs, scheme, d, n_h, m, min_support, independent,
+                stripe, pool):
     n_loc = N_LOC_INPUTS[scheme]
     loc_refs = refs[:n_loc]
     rest = refs[n_loc:]
@@ -146,7 +161,7 @@ def _fwd_kernel(*refs, scheme, d, n_h, m, min_support, independent, pool):
         base_ref, mem_ref, out_ref = rest
     loc, bshape = _tile_locations(scheme, loc_refs, d=d, n_h=n_h, m=m,
                                   min_support=min_support,
-                                  independent=independent)
+                                  independent=independent, stripe=stripe)
     e = _slab_gather(mem_ref[...], loc, base_ref[0])         # [N, d]
     if pool:
         bb, L = bshape
@@ -156,7 +171,8 @@ def _fwd_kernel(*refs, scheme, d, n_h, m, min_support, independent, pool):
         out_ref[...] = e
 
 
-def _scatter_kernel(*refs, scheme, d, n_h, m, min_support, independent, pool):
+def _scatter_kernel(*refs, scheme, d, n_h, m, min_support, independent,
+                    stripe, pool):
     """dM[loc] += g (pool: += g * w), accumulated across batch tiles into the
     revisited [m_local] output block; locations are recomputed, not loaded."""
     n_loc = N_LOC_INPUTS[scheme]
@@ -173,7 +189,7 @@ def _scatter_kernel(*refs, scheme, d, n_h, m, min_support, independent, pool):
 
     loc, bshape = _tile_locations(scheme, loc_refs, d=d, n_h=n_h, m=m,
                                   min_support=min_support,
-                                  independent=independent)
+                                  independent=independent, stripe=stripe)
     g = g_ref[...]                                           # [bb, d]
     if pool:
         bb, L = bshape
@@ -189,7 +205,8 @@ def _scatter_kernel(*refs, scheme, d, n_h, m, min_support, independent, pool):
         jnp.clip(rel, 0, n_local - 1).reshape(-1)].add(upd.reshape(-1))
 
 
-def _locations_kernel(*refs, scheme, d, n_h, m, min_support, independent):
+def _locations_kernel(*refs, scheme, d, n_h, m, min_support, independent,
+                      stripe):
     """Emit the [bb, d] int32 location block — the same in-tile hash math the
     scatter kernel recomputes, emitted instead of consumed.  This is what the
     sparse-gradient pipeline (repro/optim/sparse.py) records: indices for a
@@ -198,18 +215,19 @@ def _locations_kernel(*refs, scheme, d, n_h, m, min_support, independent):
     out_ref = refs[n_loc]
     loc, bshape = _tile_locations(scheme, refs[:n_loc], d=d, n_h=n_h, m=m,
                                   min_support=min_support,
-                                  independent=independent)
+                                  independent=independent, stripe=stripe)
     out_ref[...] = loc.reshape(*bshape, d)
 
 
-def _weight_grad_kernel(*refs, scheme, d, n_h, m, min_support, independent):
+def _weight_grad_kernel(*refs, scheme, d, n_h, m, min_support,
+                        independent, stripe):
     """dw[b, l] = <g[b], M[loc[b, l]]> for the bag's weight cotangent."""
     n_loc = N_LOC_INPUTS[scheme]
     loc_refs = refs[:n_loc]
     g_ref, base_ref, mem_ref, dw_ref = refs[n_loc:]
     loc, bshape = _tile_locations(scheme, loc_refs, d=d, n_h=n_h, m=m,
                                   min_support=min_support,
-                                  independent=independent)
+                                  independent=independent, stripe=stripe)
     bb, L = bshape
     e = _slab_gather(mem_ref[...], loc, base_ref[0]).reshape(bb, L, d)
     g = g_ref[...].astype(e.dtype)                           # [bb, d]
@@ -240,14 +258,14 @@ def _loc_specs(scheme, loc_inputs, bb, pool):
     return [gspec, pl.BlockSpec((seeds.shape[0],), lambda i: (0,))]
 
 
-def _static(scheme, d, n_h, m, min_support, independent):
+def _static(scheme, d, n_h, m, min_support, independent, stripe=0):
     return dict(scheme=scheme, d=d, n_h=n_h, m=m, min_support=min_support,
-                independent=independent)
+                independent=independent, stripe=stripe)
 
 
 def fused_lookup_fwd_pallas(scheme, memory, loc_inputs, base, weights=None, *,
                             d, n_h=4, m, min_support=2, independent=True,
-                            block_b=256, interpret=False):
+                            stripe=0, block_b=256, interpret=False):
     """-> [B, d] embeddings (weights=None) or pooled bags (weights [B, L])."""
     pool = weights is not None
     B = loc_inputs[1].shape[0] if scheme == "lma" else loc_inputs[0].shape[0]
@@ -255,7 +273,7 @@ def fused_lookup_fwd_pallas(scheme, memory, loc_inputs, base, weights=None, *,
     assert B % bb == 0, (B, bb)
     kern = functools.partial(_fwd_kernel, pool=pool,
                              **_static(scheme, d, n_h, m, min_support,
-                                       independent))
+                                       independent, stripe))
     in_specs = _loc_specs(scheme, loc_inputs, bb, pool)
     args = list(loc_inputs)
     if pool:
@@ -274,14 +292,15 @@ def fused_lookup_fwd_pallas(scheme, memory, loc_inputs, base, weights=None, *,
 
 
 def fused_locations_pallas(scheme, loc_inputs, *, d, n_h=4, m, min_support=2,
-                           independent=True, block_b=256, interpret=False):
+                           independent=True, stripe=0, block_b=256,
+                           interpret=False):
     """-> [B, d] int32 locations, hashed per batch tile in VMEM."""
     B = loc_inputs[1].shape[0] if scheme == "lma" else loc_inputs[0].shape[0]
     bb = min(block_b, B)
     assert B % bb == 0, (B, bb)
     kern = functools.partial(_locations_kernel,
                              **_static(scheme, d, n_h, m, min_support,
-                                       independent))
+                                       independent, stripe))
     return pl.pallas_call(
         kern, grid=(B // bb,),
         in_specs=_loc_specs(scheme, loc_inputs, bb, pool=False),
@@ -293,7 +312,8 @@ def fused_locations_pallas(scheme, loc_inputs, *, d, n_h=4, m, min_support=2,
 
 def fused_scatter_add_pallas(scheme, g, loc_inputs, base, m_local, dtype,
                              weights=None, *, d, n_h=4, m, min_support=2,
-                             independent=True, block_b=256, interpret=False):
+                             independent=True, stripe=0, block_b=256,
+                             interpret=False):
     """Cotangent g [B, d] -> dM [m_local], locations recomputed per tile."""
     pool = weights is not None
     B = g.shape[0]
@@ -301,7 +321,7 @@ def fused_scatter_add_pallas(scheme, g, loc_inputs, base, m_local, dtype,
     assert B % bb == 0, (B, bb)
     kern = functools.partial(_scatter_kernel, pool=pool,
                              **_static(scheme, d, n_h, m, min_support,
-                                       independent))
+                                       independent, stripe))
     in_specs = _loc_specs(scheme, loc_inputs, bb, pool)
     args = list(loc_inputs)
     if pool:
@@ -321,14 +341,14 @@ def fused_scatter_add_pallas(scheme, g, loc_inputs, base, m_local, dtype,
 
 def fused_weight_grad_pallas(scheme, memory, g, loc_inputs, base, L, *,
                              d, n_h=4, m, min_support=2, independent=True,
-                             block_b=256, interpret=False):
+                             stripe=0, block_b=256, interpret=False):
     """Cotangent g [B, d] -> dweights [B, L] (bag pooling only)."""
     B = g.shape[0]
     bb = min(block_b, B)
     assert B % bb == 0, (B, bb)
     kern = functools.partial(_weight_grad_kernel,
                              **_static(scheme, d, n_h, m, min_support,
-                                       independent))
+                                       independent, stripe))
     in_specs = _loc_specs(scheme, loc_inputs, bb, pool=True)
     in_specs += [pl.BlockSpec((bb, d), lambda i: (i, 0)),
                  pl.BlockSpec((1,), lambda i: (0,)),

@@ -76,15 +76,21 @@ class FusedSpec:
     max_set: int = 64
     min_support: int = 2
     independent: bool = True
+    striped: bool = False   # striped location layout (LMAParams.striped)
 
     @property
     def n_raw_hashes(self) -> int:
         return self.d * self.n_h if self.independent else self.d + self.n_h - 1
 
+    @property
+    def stripe(self) -> int:
+        """Stripe width when the striped layout is active, else 0 (flat)."""
+        return self.m // self.d if (self.striped and self.m % self.d == 0) else 0
+
 
 def lma_spec(p: LMAParams) -> FusedSpec:
     return FusedSpec("lma", p.d, p.m, p.seed, p.n_h, p.max_set,
-                     p.min_support, p.independent_hashes)
+                     p.min_support, p.independent_hashes, p.striped)
 
 
 def hashed_spec(kind: str, d: int, m: int, seed: int) -> FusedSpec:
@@ -122,7 +128,7 @@ def _loc_inputs(spec: FusedSpec, sets, gids, support):
 def _kern_kwargs(spec: FusedSpec, interpret: bool, block_b: int) -> dict:
     return dict(d=spec.d, n_h=spec.n_h, m=spec.m,
                 min_support=spec.min_support, independent=spec.independent,
-                block_b=block_b, interpret=interpret)
+                stripe=spec.stripe, block_b=block_b, interpret=interpret)
 
 
 def _pow2_ceil(n: int) -> int:

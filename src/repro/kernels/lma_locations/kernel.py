@@ -52,7 +52,8 @@ def _hash_u32(x, seed):
 
 
 def _locations_kernel(sets_ref, seeds_ref, rehash_ref, loc_ref, *,
-                      d: int, n_h: int, m: int, independent: bool):
+                      d: int, n_h: int, m: int, independent: bool,
+                      stripe: int = 0):
     sets = sets_ref[...]                            # [bB, S] uint32
     mask = sets != jnp.uint32(0xFFFFFFFF)
     R = d * n_h if independent else d + n_h - 1
@@ -78,7 +79,12 @@ def _locations_kernel(sets_ref, seeds_ref, rehash_ref, loc_ref, *,
     h0 = jnp.broadcast_to(rehash_ref[...][None, :],
                           (sets.shape[0], d)).astype(jnp.uint32)
     h = jax.lax.fori_loop(0, n_h, chain, h0)
-    loc_ref[...] = (fmix32(h) % jnp.uint32(m)).astype(jnp.int32)
+    hf = fmix32(h)
+    if stripe:          # striped layout: position i rehashes within its stripe
+        loc_ref[...] = (jnp.arange(d, dtype=jnp.int32)[None, :] * stripe
+                        + (hf % jnp.uint32(stripe)).astype(jnp.int32))
+    else:
+        loc_ref[...] = (hf % jnp.uint32(m)).astype(jnp.int32)
 
 
 def lma_locations_pallas(params: LMAParams, sets: jax.Array, seeds: jax.Array,
@@ -98,7 +104,7 @@ def lma_locations_pallas(params: LMAParams, sets: jax.Array, seeds: jax.Array,
                        constant_values=DenseSignatureStore.PAD)
     kern = functools.partial(
         _locations_kernel, d=params.d, n_h=params.n_h, m=params.m,
-        independent=params.independent_hashes)
+        independent=params.independent_hashes, stripe=params.stripe)
     out = pl.pallas_call(
         kern,
         grid=(b_pad // bb,),

@@ -35,28 +35,43 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.sparse_update.ref import fold_duplicates
 
-def _gather_keep(idx, values, slab):
-    """(clipped idx, row keep [K], broadcast keep, old rows, f32 values)."""
+
+def _gather_keep(idx, values, slab, unique=True):
+    """(clipped idx, row keep [K], broadcast keep, old rows, f32 values).
+
+    ``unique=False`` is the in-kernel dedup: duplicate runs are folded to
+    their head (segmented doubling scan) inside the same VMEM pass, and the
+    head mask folds into ``keep`` so moment deltas and emitted updates fire
+    exactly once per touched slot."""
     rows = slab.shape[0]
     safe = jnp.minimum(idx, rows - 1)
     keep1 = idx < rows
-    v = values.astype(jnp.float32)
+    v = values
+    if not unique:
+        head, v = fold_duplicates(idx, v)
+        keep1 = keep1 & head
+    v = v.astype(jnp.float32)
     keep = keep1.reshape(keep1.shape + (1,) * (v.ndim - 1))
     return safe, keep1, keep, jnp.take(slab, safe, axis=0), v
 
 
-def _sgd_kernel(idx_ref, val_ref, mo_ref, u_ref, mo_out_ref, *, lr, momentum):
+def _sgd_kernel(idx_ref, val_ref, mo_ref, u_ref, mo_out_ref, *, lr, momentum,
+                unique):
     mo = mo_ref[...]
-    safe, _, keep, old, v = _gather_keep(idx_ref[...], val_ref[...], mo)
+    safe, _, keep, old, v = _gather_keep(idx_ref[...], val_ref[...], mo,
+                                         unique)
     new = momentum * old + v
     mo_out_ref[...] = mo.at[safe].add(jnp.where(keep, new - old, 0.0))
     u_ref[...] = jnp.where(keep, -lr * new, 0.0).astype(u_ref.dtype)
 
 
-def _adagrad_kernel(idx_ref, val_ref, acc_ref, u_ref, acc_out_ref, *, lr, eps):
+def _adagrad_kernel(idx_ref, val_ref, acc_ref, u_ref, acc_out_ref, *, lr, eps,
+                    unique):
     acc = acc_ref[...]
-    safe, _, keep, old, v = _gather_keep(idx_ref[...], val_ref[...], acc)
+    safe, _, keep, old, v = _gather_keep(idx_ref[...], val_ref[...], acc,
+                                         unique)
     a = old + v * v
     acc_out_ref[...] = acc.at[safe].add(jnp.where(keep, v * v, 0.0))
     u_ref[...] = jnp.where(keep, -lr * v / (jnp.sqrt(a) + eps),
@@ -64,9 +79,10 @@ def _adagrad_kernel(idx_ref, val_ref, acc_ref, u_ref, acc_out_ref, *, lr, eps):
 
 
 def _adam_kernel(idx_ref, val_ref, bc_ref, mu_ref, nu_ref,
-                 u_ref, mu_out_ref, nu_out_ref, *, lr, b1, b2, eps):
+                 u_ref, mu_out_ref, nu_out_ref, *, lr, b1, b2, eps, unique):
     mu, nu = mu_ref[...], nu_ref[...]
-    safe, keep1, keep, mu_old, v = _gather_keep(idx_ref[...], val_ref[...], mu)
+    safe, keep1, keep, mu_old, v = _gather_keep(idx_ref[...], val_ref[...], mu,
+                                                unique)
     mu_new = b1 * mu_old + (1 - b1) * v
     v2 = v * v
     if nu.ndim == 1 and v.ndim > 1:              # rowwise second moment
@@ -106,25 +122,27 @@ def _call(kern, inputs, n_state, state_dtypes, vshape, vdtype, interpret):
     return out[0], tuple(out[1:])
 
 
-def sparse_sgd_pallas(indices, values, mo, *, lr, momentum,
+def sparse_sgd_pallas(indices, values, mo, *, lr, momentum, unique=True,
                       interpret=False):
-    kern = functools.partial(_sgd_kernel, lr=lr, momentum=momentum)
+    kern = functools.partial(_sgd_kernel, lr=lr, momentum=momentum,
+                             unique=unique)
     return _call(kern, (indices, values, mo), 1, (mo.dtype,),
                  values.shape, values.dtype, interpret)
 
 
-def sparse_adagrad_pallas(indices, values, acc, *, lr, eps,
+def sparse_adagrad_pallas(indices, values, acc, *, lr, eps, unique=True,
                           interpret=False):
-    kern = functools.partial(_adagrad_kernel, lr=lr, eps=eps)
+    kern = functools.partial(_adagrad_kernel, lr=lr, eps=eps, unique=unique)
     return _call(kern, (indices, values, acc), 1, (acc.dtype,),
                  values.shape, values.dtype, interpret)
 
 
 def sparse_adam_pallas(indices, values, mu, nu, *, lr, b1, b2, bc1, bc2,
-                       eps, interpret=False):
+                       eps, unique=True, interpret=False):
     bc = jnp.stack([jnp.asarray(bc1, jnp.float32),
                     jnp.asarray(bc2, jnp.float32)])
-    kern = functools.partial(_adam_kernel, lr=lr, b1=b1, b2=b2, eps=eps)
+    kern = functools.partial(_adam_kernel, lr=lr, b1=b1, b2=b2, eps=eps,
+                             unique=unique)
     return _call(kern, (indices, values, bc, mu, nu), 2,
                  (mu.dtype, nu.dtype), values.shape, values.dtype,
                  interpret)

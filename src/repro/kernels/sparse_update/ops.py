@@ -11,10 +11,13 @@ already the optimal lowering (XLA's native gather/scatter), so unlike
 the fused-embed engine there is no interpret-mode win to chase — interpret
 mode here exists for kernel-parity tests only (pass ``interpret=True``).
 
-Contract (shared with ``ref.py`` / ``kernel.py``): ``indices [K]`` sorted
-unique, sentinel-padded with the slab's leading dim; ``values [K, ...]``
-segment-summed, 0 at padded slots; states touched only at live slots
-(add-of-delta scatters).
+Contract (shared with ``ref.py`` / ``kernel.py``): ``indices [K]`` sorted;
+``unique=True`` (default) means sorted *unique* + sentinel-padded with the
+slab's leading dim, values segment-summed with 0 at padded slots;
+``unique=False`` means sorted-with-duplicates, no sentinels — the bucketed
+striped-layout stream from ``optim/sparse.py::from_bucketed_locations`` —
+and the kernel folds coincident slots in-pass (in-kernel dedup).  States
+are touched only at live slots either way (add-of-delta scatters).
 """
 from __future__ import annotations
 
@@ -61,12 +64,15 @@ def _pallas_ok(algo, indices, values, states) -> bool:
 
 
 def sparse_update(algo: str, indices, values, states: tuple, *,
-                  interpret: bool | None = None, **hyper):
+                  unique: bool = True, interpret: bool | None = None,
+                  **hyper):
     """-> (update_values [K, ...], new_states tuple).
 
-    ``interpret=None``: Pallas (compiled) on TPU when eligible, jnp ref
-    elsewhere.  ``interpret=True`` forces the Pallas kernel in interpret
-    mode (test hook); ``interpret=False`` forces compiled Pallas.
+    ``unique=False`` declares sorted-with-duplicates indices (bucketed
+    layout) and turns on the in-kernel duplicate fold in whichever backend
+    runs.  ``interpret=None``: Pallas (compiled) on TPU when eligible, jnp
+    ref elsewhere.  ``interpret=True`` forces the Pallas kernel in
+    interpret mode (test hook); ``interpret=False`` forces compiled Pallas.
     """
     assert algo in ALGOS, algo
     use_pallas = (interpret is not None
@@ -77,15 +83,19 @@ def sparse_update(algo: str, indices, values, states: tuple, *,
         interp = bool(interpret)
         if algo == "sgd":
             return _k.sparse_sgd_pallas(indices, values, states[0],
-                                        interpret=interp, **hyper)
+                                        unique=unique, interpret=interp,
+                                        **hyper)
         if algo == "adagrad":
             return _k.sparse_adagrad_pallas(indices, values, states[0],
-                                            interpret=interp, **hyper)
-        return _k.sparse_adam_pallas(indices, values, *states,
+                                            unique=unique, interpret=interp,
+                                            **hyper)
+        return _k.sparse_adam_pallas(indices, values, *states, unique=unique,
                                      interpret=interp, **hyper)
     if algo == "sgd":
         mo = states[0] if states else None
-        return _r.sparse_sgd_ref(indices, values, mo, **hyper)
+        return _r.sparse_sgd_ref(indices, values, mo, unique=unique, **hyper)
     if algo == "adagrad":
-        return _r.sparse_adagrad_ref(indices, values, states[0], **hyper)
-    return _r.sparse_adam_ref(indices, values, *states, **hyper)
+        return _r.sparse_adagrad_ref(indices, values, states[0],
+                                     unique=unique, **hyper)
+    return _r.sparse_adam_ref(indices, values, *states, unique=unique,
+                              **hyper)

@@ -1,9 +1,12 @@
 """jnp reference for the sparse optimizer update (and the CPU fast path).
 
-One contract for every algorithm: given deduped ``indices [K]`` (sorted
-unique slot ids, padded at the tail with the sentinel ``state.shape[0]``),
-``values [K, ...]`` (segment-summed gradient contributions, 0 at padded
-slots) and the dense moment slab(s), produce
+One contract for every algorithm: given sorted ``indices [K]`` — either
+deduped (``unique=True``: sorted unique slot ids padded at the tail with
+the sentinel ``state.shape[0]``, values segment-summed, 0 at padded slots)
+or bucketed-but-not-unique (``unique=False``: sorted non-decreasing with
+duplicates, no sentinels — the striped-layout fast path of
+``optim/sparse.py::from_bucketed_locations``) — plus ``values [K, ...]``
+and the dense moment slab(s), produce
 
   * ``update_values [K, ...]`` — the additive parameter delta per touched
     slot (0 at padded slots), to be scattered by ``apply_updates``;
@@ -21,10 +24,45 @@ moment decay/accumulate.  For Adagrad and momentum-less SGD this is exactly
 the dense update (untouched slots get a 0 update there too); for Adam it is
 SparseAdam semantics (global-step bias correction, stale moments on
 untouched slots).
+
+``unique=False`` adds the *in-kernel dedup*: coincident slots are folded
+during the same gather->update->scatter pass (``fold_duplicates``: a
+segmented doubling scan places each run's sum at its head, 0 elsewhere;
+the head mask then guards every moment delta and emitted update so each
+slot decays/accumulates exactly once).  This removes the standalone
+O(K log K) ``dedup_locations`` from the hot path entirely.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+
+def fold_duplicates(indices, values):
+    """Sorted-with-duplicates ``indices [K]`` -> (head [K] bool, folded).
+
+    ``head`` marks the first element of each equal-index run; the folded
+    values carry the full run sum at the head and exactly 0 elsewhere.
+    Segmented Hillis-Steele suffix scan: log2(K) masked doubling steps of
+    ``s[p] += s[p+shift] if indices[p+shift] == indices[p]`` — within-run
+    adds only, so there is none of the catastrophic cancellation a global
+    cumsum-then-difference dedup would reintroduce.  Works unchanged inside
+    a Pallas kernel body (roll + iota, no dynamic shapes).
+    """
+    k = int(indices.shape[0])
+    if k <= 1:
+        return jnp.ones((k,), bool), values
+    head = jnp.concatenate([jnp.ones((1,), bool),
+                            indices[1:] != indices[:-1]])
+    s = values
+    pos = jnp.arange(k, dtype=jnp.int32)
+    shift = 1
+    while shift < k:
+        same = (pos < k - shift) & (jnp.roll(indices, -shift) == indices)
+        same = same.reshape(same.shape + (1,) * (s.ndim - 1))
+        s = s + jnp.where(same, jnp.roll(s, -shift, axis=0), 0)
+        shift *= 2
+    headb = head.reshape(head.shape + (1,) * (s.ndim - 1))
+    return head, jnp.where(headb, s, 0)
 
 
 def _gather(state, safe, trailing_ndim: int):
@@ -39,24 +77,42 @@ def _keep(indices, m: int, values):
     return k.reshape(k.shape + (1,) * (values.ndim - 1))
 
 
-def sparse_sgd_ref(indices, values, mo=None, *, lr, momentum=0.0):
+def _maybe_fold(indices, values, keep, unique):
+    """Shared non-unique handling: fold runs, head-guard ``keep``.
+
+    With the head folded values every run's sum lands once; masking ``keep``
+    with the head makes every moment delta and emitted update 0 at duplicate
+    positions (an unmasked Adam delta there would be ``(b-1)*old`` — a
+    spurious decay per duplicate)."""
+    if unique:
+        return values, keep
+    head, values = fold_duplicates(indices, values)
+    keep = keep & head.reshape(head.shape + (1,) * (keep.ndim - 1))
+    return values, keep
+
+
+def sparse_sgd_ref(indices, values, mo=None, *, lr, momentum=0.0,
+                   unique=True):
     """-> (update_values, (mo,) or ())."""
     m = None if mo is None else mo.shape[0]
     if momentum == 0.0 or mo is None:
+        # scatter-add of -lr*g sums duplicates exactly — no fold needed
         return -lr * values, ()
     safe = jnp.minimum(indices, m - 1)
     keep = _keep(indices, m, values)
+    values, keep = _maybe_fold(indices, values, keep, unique)
     old = _gather(mo, safe, 0)
     new = momentum * old + values
     mo = mo.at[safe].add(jnp.where(keep, new - old, 0.0))
     return jnp.where(keep, -lr * new, 0.0), (mo,)
 
 
-def sparse_adagrad_ref(indices, values, acc, *, lr, eps=1e-10):
+def sparse_adagrad_ref(indices, values, acc, *, lr, eps=1e-10, unique=True):
     """-> (update_values, (acc,)); exact dense-Adagrad math per touched slot."""
     m = acc.shape[0]
     safe = jnp.minimum(indices, m - 1)
     keep = _keep(indices, m, values)
+    values, keep = _maybe_fold(indices, values, keep, unique)
     vf = values.astype(jnp.float32)
     a = _gather(acc, safe, 0) + jnp.square(vf)
     acc = acc.at[safe].add(jnp.where(keep, jnp.square(vf), 0.0))
@@ -65,7 +121,7 @@ def sparse_adagrad_ref(indices, values, acc, *, lr, eps=1e-10):
 
 
 def sparse_adam_ref(indices, values, mu, nu, *, lr, b1=0.9, b2=0.999,
-                    bc1=1.0, bc2=1.0, eps=1e-8):
+                    bc1=1.0, bc2=1.0, eps=1e-8, unique=True):
     """Lazy Adam with row-wise second moment when ``nu`` is 1-D against
     [K, t...] values (DLRM's row-wise Adam); elementwise for flat pools.
 
@@ -76,6 +132,8 @@ def sparse_adam_ref(indices, values, mu, nu, *, lr, b1=0.9, b2=0.999,
     trailing = values.ndim - 1
     safe = jnp.minimum(indices, m - 1)
     keep = _keep(indices, m, values)
+    values, keep = _maybe_fold(indices, values, keep, unique)
+    keep_row = keep.reshape(keep.shape[0]) if trailing else keep
     vf = values.astype(jnp.float32)
     mu_old = _gather(mu, safe, trailing)
     mu_new = b1 * mu_old + (1 - b1) * vf
@@ -84,7 +142,7 @@ def sparse_adam_ref(indices, values, mu, nu, *, lr, b1=0.9, b2=0.999,
         v2_row = jnp.mean(v2, axis=tuple(range(1, v2.ndim)))
         nu_old_row = jnp.take(nu, safe, axis=0)
         nu_new_row = b2 * nu_old_row + (1 - b2) * v2_row
-        nu = nu.at[safe].add(jnp.where(indices < m,
+        nu = nu.at[safe].add(jnp.where(keep_row,
                                        nu_new_row - nu_old_row, 0.0))
         nu_new = nu_new_row.reshape(nu_new_row.shape + (1,) * trailing)
     else:

@@ -211,19 +211,25 @@ def _sparse_worthwhile(rcfg, B: int, mesh) -> bool:
     resolver — one cost model for every cross-device exchange.  It prices
     the per-strategy sparse exchange (the all_to_all form keeps each rank's
     owned (index, value) slices local, ~n_model cheaper than the replicated
-    psum pair) AND the O(K log K) dedup sort the old gate ignored.  Net
-    effect on the committed cells: single-host stays sparse, 16x16
-    element-level (lma) train cells stay dense (the 54M-element sort
-    dominates), and row-aligned schemes (hashed_row / freq) now go sparse
-    at pod scale — the crossover the all_to_all exchange was built to move.
+    psum pair) AND a per-path dedup term.  Net effect on the committed
+    cells: single-host stays sparse; row-aligned schemes (hashed_row /
+    freq) go sparse at pod scale (index traffic d times smaller); and
+    16x16 element-level lma train cells — dense until the bucketed striped
+    layout landed — now go sparse too: per-stripe sorts sharded over
+    'model' plus the update kernel's in-kernel fold price the SparseGrad
+    construction below the dense slab tax.  Only element schemes on a
+    ragged budget (m % d != 0, ``sparse_buckets`` == 0) still pay the flat
+    O(K log K) sort and stay dense at pod scale.
     """
     from repro.embed import get_scheme
     e = rcfg.embedding
     if e.budget is None:
         return False
+    scheme = get_scheme(e.kind)
     return exl.sparse_worthwhile(
         mesh, n_lookups=B * recsys.lookups_per_example(rcfg), d=e.dim,
-        m=e.budget, row_mode=get_scheme(e.kind).row_aligned)
+        m=e.budget, row_mode=scheme.row_aligned,
+        buckets=scheme.sparse_buckets(e))
 
 
 def _exchange_meta(rcfg, n_rows: int, mesh) -> dict:
@@ -251,6 +257,25 @@ def _exchange_meta(rcfg, n_rows: int, mesh) -> dict:
     costs = exl.lookup_cost(n_model, n_flat, e.dim, alloc_row, fused=fused)
     return {"exchange": ex.name,
             "exchange_modeled_bytes": {k: int(v) for k, v in costs.items()}}
+
+
+def _sparse_meta(rcfg, B: int, mesh) -> dict:
+    """Per-path sparse-update cost table for the dryrun artifact: the same
+    ``sparse_update_cost`` call the gate ranks, so a recorded
+    ``sparse_grads`` flag always has its pricing (dense slab tax vs psum /
+    all_to_all sparse exchange, plus the dedup term actually charged —
+    flat, bucketed, or bucket-sharded) sitting next to it in meta."""
+    from repro.embed import get_scheme
+    e = rcfg.embedding
+    if e.budget is None:
+        return {}
+    scheme = get_scheme(e.kind)
+    costs = exl.sparse_update_cost(
+        exl.model_size(mesh), B * recsys.lookups_per_example(rcfg), e.dim,
+        e.budget, row_mode=scheme.row_aligned,
+        buckets=scheme.sparse_buckets(e))
+    return {"sparse_update_modeled_bytes":
+            {k: int(v) for k, v in costs.items()}}
 
 
 def _recsys_bundle(arch: ArchConfig, shape_id: str, mesh) -> Bundle:
@@ -298,6 +323,7 @@ def _recsys_bundle(arch: ArchConfig, shape_id: str, mesh) -> Bundle:
             donate=(0, 1),
             meta={"kind": "train", "examples": B, "sparse_grads": use_sparse,
                   "embedding": rcfg.table.describe(),
+                  **_sparse_meta(rcfg, B, mesh),
                   **_exchange_meta(
                       rcfg, B * recsys.lookups_per_example(rcfg), mesh)})
 

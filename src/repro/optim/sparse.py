@@ -8,11 +8,13 @@ This module replaces both with O(K) work:
 
 ``SparseGrad``
     A registered pytree (children ``indices [K]`` / ``values [K, ...]``,
-    aux ``dense_shape``) carrying the deduped gradient of one pool:
-    ``indices`` are sorted unique slot ids padded at the tail with the
-    sentinel ``dense_shape[0]``; ``values`` are the segment-summed
-    contributions (0 at padded slots).  ``densify()`` is the exact dense
-    oracle the parity tests compare against.
+    aux ``dense_shape`` / ``unique`` / ``buckets``) carrying the gradient
+    of one pool in one of two sorted layouts: deduped (``unique=True`` —
+    sorted unique slot ids, sentinel-padded, segment-summed values) or
+    bucketed (``unique=False`` — sorted with duplicates, built stripe-major
+    by ``from_bucketed_locations`` without any global argsort; duplicates
+    fold inside the update kernel).  ``densify()`` is the exact dense
+    oracle the parity tests compare against, for both layouts.
 
 ``sparse_value_and_grad(loss_fn)``
     Drop-in for ``jax.value_and_grad(loss_fn, has_aux=True)`` that returns
@@ -32,8 +34,11 @@ This module replaces both with O(K) work:
          the dense pool cotangent is a dead zeros leaf that the SparseGrad
          replaces before anything consumes it, so it never reaches HBM.
 
-    Locations + tap grads are deduped on device (sort + segment-sum) into
-    one ``SparseGrad`` per pool.
+    Locations + tap grads become one ``SparseGrad`` per pool: striped-lma
+    pools take the bucketed build (``from_bucketed_locations`` — d
+    per-stripe stable key/value sorts, 7-9x cheaper than the flat path at
+    K=2^13..2^17), everything else the flat on-device dedup
+    (``dedup_locations``: sort + segment-sum).
 
 ``sparse_sgd`` / ``sparse_adagrad`` / ``sparse_rowwise_adam``
     Optimizers whose sparse-leaf update is a single gather -> moment-update
@@ -53,7 +58,11 @@ picked by ``repro.dist.exchange.resolve_update_exchange``: all_to_all by
 default, which elides even the [K]-sized psum — each rank's owner-masked
 update values feed the masked local scatter directly (the values are then
 owner-partial: only ``sharded_sparse_apply`` may consume them).
-``REPRO_DIST_EXCHANGE=psum`` restores the replicated-update oracle.
+Slab-aligned bucketed streams (``buckets % n_model == 0`` — see
+``sharded_memory.slab_aligned``) go further: indices and values enter the
+shard_map already 'model'-sharded and the whole update/apply round-trip
+runs with zero exchange collectives.  ``REPRO_DIST_EXCHANGE=psum``
+restores the replicated-update oracle on the non-aligned paths.
 
 Gate: ``REPRO_SPARSE_GRADS`` (default on; ``=0`` keeps the dense path as
 the bit-exact oracle).  Tests may toggle ``sparse.ENABLED`` directly.
@@ -84,18 +93,44 @@ def sparse_enabled() -> bool:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class SparseGrad:
-    """Deduped sparse gradient of one dense parameter (usually the pool M)."""
+    """Sorted sparse gradient of one dense parameter (usually the pool M).
 
-    indices: jax.Array            # [K] int32, sorted unique + sentinel pad
-    values: jax.Array             # [K, *dense_shape[1:]] segment-summed
+    Two static layouts, distinguished by the ``unique`` aux flag:
+
+    ``unique=True`` (the deduped contract): ``indices`` are sorted *unique*
+    slot ids compacted to the front and padded at the tail with the sentinel
+    ``dense_shape[0]``; ``values`` are the segment-summed contributions
+    (0 at padded slots).
+
+    ``unique=False`` (the bucketed fast path): ``indices`` are sorted
+    non-decreasing but may repeat (no sentinel padding) — coincident slots
+    are folded *inside* the sparse-update kernel's gather->update->scatter
+    pass instead of by a standalone O(K log K) dedup.  ``densify()`` is
+    exact either way (scatter-add sums duplicates).
+
+    ``buckets`` (static, nonzero only with ``unique=False``) records that
+    the stream is *stripe-major*: bucket j's entries occupy the contiguous
+    slice ``[j*K/buckets, (j+1)*K/buckets)`` and index only slots
+    ``[j*m/buckets, (j+1)*m/buckets)``.  When ``buckets`` divides the model
+    mesh size the even [K] split therefore lands each rank's slice exactly
+    on its parameter slab — the sharded update/apply path runs with no
+    collective at all (see repro.dist.sharded_memory.slab_aligned).
+    """
+
+    indices: jax.Array            # [K] int32, sorted (see ``unique``)
+    values: jax.Array             # [K, *dense_shape[1:]] contributions
     dense_shape: tuple[int, ...]  # static (pytree aux)
+    unique: bool = True           # static (pytree aux)
+    buckets: int = 0              # static (pytree aux), stripe-major count
 
     def tree_flatten(self):
-        return (self.indices, self.values), self.dense_shape
+        return ((self.indices, self.values),
+                (self.dense_shape, self.unique, self.buckets))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0], children[1], tuple(aux))
+        shape, unique, buckets = aux
+        return cls(children[0], children[1], tuple(shape), unique, buckets)
 
     @property
     def sentinel(self) -> int:
@@ -107,7 +142,8 @@ class SparseGrad:
         return z.at[self.indices].add(self.values, mode="drop")
 
     def map_values(self, fn) -> "SparseGrad":
-        return SparseGrad(self.indices, fn(self.values), self.dense_shape)
+        return SparseGrad(self.indices, fn(self.values), self.dense_shape,
+                          self.unique, self.buckets)
 
 
 def is_sparse(x) -> bool:
@@ -129,7 +165,10 @@ def dedup_locations(loc: jax.Array, vals: jax.Array,
     sv = jnp.take(vals, order, axis=0)
     head = jnp.concatenate([jnp.ones((1,), bool), si[1:] != si[:-1]])
     seg = jnp.cumsum(head) - 1                       # [K] ids in [0, K)
-    summed = jax.ops.segment_sum(sv, seg, num_segments=k)
+    # seg is a cumsum of 0/1 flags -> monotonically non-decreasing, so the
+    # segment reduction can skip its own sort-or-scatter path
+    summed = jax.ops.segment_sum(sv, seg, num_segments=k,
+                                 indices_are_sorted=True)
     idx = jnp.full((k,), dense_shape[0], jnp.int32).at[seg].set(si)
     return SparseGrad(idx, summed, tuple(dense_shape))
 
@@ -144,6 +183,69 @@ def from_locations(loc: jax.Array, vals: jax.Array,
     else:
         loc, vals = loc.reshape(-1), vals.reshape(-1)
     return dedup_locations(loc, vals, dense_shape)
+
+
+def _bucket_sharding(*arrs, axes: int = 1):
+    """Attack (c): under a model mesh, pin bucket-major operands to the
+    'model' axis so each device sorts only its d/n stripes — no device ever
+    sorts (or holds) the global K.  ``axes=1`` shards [d, N] matrices on
+    dim 0; ``axes=0`` shards flat stripe-major [K] streams, whose even split
+    coincides with the parameter-slab ownership (see
+    ``repro.dist.sharded_memory.slab_aligned``)."""
+    from repro.dist import context as dctx
+    from repro.dist.exchange import model_size
+    mesh = dctx.current_mesh()
+    if mesh is None or model_size(mesh) <= 1:
+        return arrs if len(arrs) > 1 else arrs[0]
+    P = jax.sharding.PartitionSpec
+    spec = P("model", None) if axes else P("model")
+    out = []
+    for a in arrs:
+        divisible = a.shape[0] % model_size(mesh) == 0
+        out.append(jax.lax.with_sharding_constraint(
+            a, jax.sharding.NamedSharding(mesh, spec)) if divisible else a)
+    return tuple(out) if len(out) > 1 else out[0]
+
+
+def from_bucketed_locations(loc: jax.Array, vals: jax.Array,
+                            dense_shape: tuple[int, ...]) -> SparseGrad:
+    """Bucketed (striped-layout) fast path: [N, d] locations whose column j
+    is confined to stripe ``[j*(m//d), (j+1)*(m//d))`` -> a sorted-with-
+    duplicates ``SparseGrad`` (``unique=False``, ``buckets=d``) without any
+    global argsort.
+
+    Column-major emission is location-bucketed by construction (duplicates
+    never cross stripes), so a *batched* per-stripe stable key/value sort
+    of [d, N] offset rows yields a globally sorted index stream — measured
+    7-10x cheaper than the flat argsort + segment-sum dedup at K=131k
+    (bench ``sparse_dedup_sort`` sweep).  Values ride along as a second
+    ``lax.sort`` operand, so under a model mesh the sort stays stripe-local
+    (no cross-device payload gather).  The remaining duplicate fold happens
+    inside the sparse-update kernel (``kernels/sparse_update``), or in
+    ``dedup_locations``-equivalent semantics via ``densify``.
+
+    Falls back to ``from_locations`` for trailing dims or a ragged budget
+    (m % d != 0).
+    """
+    if len(dense_shape) != 1 or loc.ndim != 2:
+        return from_locations(loc, vals, dense_shape)
+    m = int(dense_shape[0])
+    n, d = int(loc.shape[0]), int(loc.shape[1])
+    if n == 0 or d == 0 or m % d != 0:
+        return from_locations(loc, vals, dense_shape)
+    stripe = m // d
+    col = jnp.arange(d, dtype=jnp.int32)[:, None]
+    lT = loc.T.astype(jnp.int32)                     # [d, N] bucket-major
+    vT = vals.reshape(n, d).T
+    off = (lT - col * stripe).astype(jnp.uint32)     # in-stripe offsets
+    off, vT = _bucket_sharding(off, vT, axes=1)
+    # d independent stable sorts; stability keeps coincident slots in
+    # emission order, matching the packed-key oracle bit-for-bit
+    soff, sval = jax.lax.sort((off, vT), dimension=1, num_keys=1,
+                              is_stable=True)
+    sloc = soff.astype(jnp.int32) + col * stripe
+    idx, v = _bucket_sharding(sloc.reshape(-1), sval.reshape(-1), axes=0)
+    return SparseGrad(idx, v, tuple(dense_shape), unique=False, buckets=d)
 
 
 # ------------------------------------------------------- trace-time contexts
@@ -165,6 +267,8 @@ class _Record:
     tap_shape: tuple              # the lookup output shape the tap rides on
     dtype: jnp.dtype
     row_width: int = 0            # d when loc is [N] row ids, else 0
+    n_buckets: int = 0            # d when loc columns are stripe-bucketed
+    #                               (LMAParams.striped layout), else 0
 
 
 class _Recorder:
@@ -173,10 +277,14 @@ class _Recorder:
     def __init__(self):
         self.records: list[_Record] = []
 
-    def record(self, memory, loc):
-        """Element-level locations [N, d] (lma-style hashing)."""
+    def record(self, memory, loc, n_buckets: int = 0):
+        """Element-level locations [N, d] (lma-style hashing).
+
+        ``n_buckets=d`` declares the striped-layout invariant: column j of
+        ``loc`` lies in ``[j*(m//d), (j+1)*(m//d))``, enabling the bucketed
+        dedup-free SparseGrad build (``from_bucketed_locations``)."""
         self.records.append(_Record(memory, loc, tuple(loc.shape),
-                                    memory.dtype))
+                                    memory.dtype, n_buckets=n_buckets))
 
     def record_rows(self, memory, rows, d: int):
         """Row-aligned pool rows [N] (hashed_row / freq): one index per row,
@@ -289,10 +397,23 @@ def sparse_value_and_grad(loss_fn: Callable, has_aux: bool = True):
                     [gt[i].reshape(-1, rw) for i in idxs])
                 replace[kp] = from_locations(rows, vals, (m // rw, rw))
             else:
-                loc = jnp.concatenate(
-                    [rec.records[i].loc.reshape(-1) for i in idxs])
-                vals = jnp.concatenate([gt[i].reshape(-1) for i in idxs])
-                replace[kp] = from_locations(loc, vals, tuple(leaf_shape[kp]))
+                nbs = {rec.records[i].n_buckets for i in idxs}
+                nb = nbs.pop() if len(nbs) == 1 else 0
+                if nb and all(rec.records[i].loc.ndim == 2
+                              and rec.records[i].loc.shape[1] == nb
+                              for i in idxs) and len(leaf_shape[kp]) == 1:
+                    loc = jnp.concatenate(
+                        [rec.records[i].loc for i in idxs], axis=0)
+                    vals = jnp.concatenate(
+                        [gt[i].reshape(-1, nb) for i in idxs], axis=0)
+                    replace[kp] = from_bucketed_locations(
+                        loc, vals, tuple(leaf_shape[kp]))
+                else:
+                    loc = jnp.concatenate(
+                        [rec.records[i].loc.reshape(-1) for i in idxs])
+                    vals = jnp.concatenate([gt[i].reshape(-1) for i in idxs])
+                    replace[kp] = from_locations(loc, vals,
+                                                 tuple(leaf_shape[kp]))
 
         # swap the dead dense pool cotangents (zeros under stop_gradient —
         # unused after this, so XLA never materializes them) for SparseGrads
@@ -336,11 +457,13 @@ def _leaf_sparse_update(algo: str, g: SparseGrad, states: tuple, **hyper):
     if mesh is not None:
         from repro.dist.sharded_memory import sharded_sparse_update
         u, new_states = sharded_sparse_update(algo, g.indices, g.values,
-                                              states, hyper, mesh)
+                                              states, hyper, mesh,
+                                              unique=g.unique,
+                                              buckets=g.buckets)
     else:
         from repro.kernels.sparse_update.ops import sparse_update
         u, new_states = sparse_update(algo, g.indices, g.values, states,
-                                      **hyper)
+                                      unique=g.unique, **hyper)
     new_states = tuple(s.reshape(shp)
                        for s, shp in zip(new_states, orig_shapes))
     return g.map_values(lambda _: u), new_states
@@ -353,7 +476,8 @@ def sparse_apply(p: jax.Array, u: SparseGrad) -> jax.Array:
     mesh = _model_mesh(u.dense_shape[0])
     if mesh is not None:
         from repro.dist.sharded_memory import sharded_sparse_apply
-        out = sharded_sparse_apply(pv, u.indices, vals, mesh)
+        out = sharded_sparse_apply(pv, u.indices, vals, mesh,
+                                   unique=u.unique, buckets=u.buckets)
     else:
         out = pv.at[u.indices].add(vals, mode="drop",
                                    indices_are_sorted=True)
@@ -397,8 +521,13 @@ def adam_leaf(g, mu, nu, p=None, *, lr, b1=0.9, b2=0.999, bc1=1.0, bc2=1.0,
             pv = _pool_view(p, g.dense_shape)
             rows = jnp.take(pv, jnp.minimum(g.indices, pv.shape[0] - 1),
                             axis=0).astype(jnp.float32)
-            keep = (g.indices < pv.shape[0]).reshape(
-                (-1,) + (1,) * (u.values.ndim - 1))
+            keep = g.indices < pv.shape[0]
+            if not g.unique:
+                # non-unique indices scatter-add: decay each slot once, at
+                # the head of its duplicate run
+                keep = keep & jnp.concatenate(
+                    [jnp.ones((1,), bool), g.indices[1:] != g.indices[:-1]])
+            keep = keep.reshape((-1,) + (1,) * (u.values.ndim - 1))
             u = u.map_values(
                 lambda v: v - jnp.where(keep, lr * weight_decay * rows, 0.0))
         return u, mu, nu

@@ -8,7 +8,8 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.check_regression import (BASELINE, compare, load_rows,
+from benchmarks.check_regression import (BASELINE, DEDUP_GATE_SHAPE, compare,
+                                         dedup_speedup_failures, load_rows,
                                          missing_schemes,
                                          sharded_gap_failures)
 
@@ -108,6 +109,40 @@ def test_committed_baseline_passes_sharded_gap_gate():
     best = min(rows[("sharded_lma_lookup_ring", shape8)],
                rows[("sharded_lma_lookup_all_to_all", shape8)])
     assert best < rows[("sharded_lma_lookup_fused", shape8)]
+
+
+def test_dedup_gate_logic(tmp_path):
+    """The bucketed-dedup gate: measured flat/bucketed >= 3x at the pod-gate
+    shape, missing rows flagged, and a committed 16x16 lma train artifact
+    recording sparse_grads: false flagged."""
+    ok = {("sparse_dedup_sort", DEDUP_GATE_SHAPE): 300.0,
+          ("sparse_dedup_bucketed", DEDUP_GATE_SHAPE): 90.0}
+    empty = str(tmp_path)                     # no artifacts -> skip that leg
+    assert dedup_speedup_failures(ok, dryrun_dir=empty) == []
+    slow = {**ok, ("sparse_dedup_bucketed", DEDUP_GATE_SHAPE): 150.0}
+    fails = dedup_speedup_failures(slow, dryrun_dir=empty)
+    assert any("2.00x" in f for f in fails)
+    assert any("cannot run" in f
+               for f in dedup_speedup_failures({}, dryrun_dir=empty))
+    art = tmp_path / "dlrm-rm2__train_batch__16x16.json"
+    art.write_text(json.dumps({"meta": {"sparse_grads": False}}))
+    fails = dedup_speedup_failures(ok, dryrun_dir=empty)
+    assert any("sparse_grads" in f for f in fails)
+
+
+def test_committed_baseline_passes_dedup_gate():
+    """This PR's acceptance artifact: the committed ledger carries the
+    flat/bucketed/in-kernel dedup sweep, the bucketed construction beats
+    flat by >= 3x at K=2^17, and the committed 16x16 lma train dryrun
+    cells record sparse_grads: true."""
+    rows = load_rows(BASELINE)
+    for b in (256, 512, 1024, 2048, 4096):
+        for k in ("sparse_dedup_sort", "sparse_dedup_bucketed",
+                  "sparse_dedup_inkernel"):
+            assert (k, f"{b}x32@m=2^21") in rows, (k, b)
+    assert dedup_speedup_failures(rows) == []
+    assert rows[("sparse_dedup_sort", DEDUP_GATE_SHAPE)] >= \
+        3.0 * rows[("sparse_dedup_bucketed", DEDUP_GATE_SHAPE)]
 
 
 def test_committed_baseline_passes_sparse_update_gate():

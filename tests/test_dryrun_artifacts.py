@@ -125,6 +125,29 @@ def test_recsys_artifacts_record_exchange_strategy():
         assert got in ("ring", "all_to_all"), (arch, got)
 
 
+def test_recsys_train_artifacts_record_sparse_update_costs():
+    """Every recsys TRAIN cell's meta carries the per-path sparse-update
+    cost table (repro.dist.exchange.sparse_update_cost) next to its
+    sparse_grads flag, and flag and table may not contradict each other:
+    sparse_grads is true exactly when the best sparse path models under the
+    dense slab tax.  The bucket-eligible lma archs (dlrm-rm2, dcn-v2 —
+    budget % dim == 0, striped layout) must record sparse_grads: true at
+    pod scale — the flip the bucketed dedup was built for — while the
+    ragged-budget archs (din, xdeepfm: m % d != 0, flat element records)
+    stay dense under the O(K log K) sort."""
+    for arch in ("dlrm-rm2", "dcn-v2", "xdeepfm", "din"):
+        for mesh in ("16x16", "2x16x16"):
+            meta = _load(arch, "train_batch", mesh)["meta"]
+            costs = meta["sparse_update_modeled_bytes"]
+            assert set(costs) == {"dense", "sparse_psum",
+                                  "sparse_all_to_all", "dedup_sort"}
+            best = min(costs["sparse_psum"], costs["sparse_all_to_all"])
+            assert meta["sparse_grads"] == (best < costs["dense"]), \
+                (arch, mesh, meta["sparse_grads"], costs)
+            expect_sparse = arch in ("dlrm-rm2", "dcn-v2")
+            assert meta["sparse_grads"] == expect_sparse, (arch, mesh, meta)
+
+
 def test_lma_memory_traffic_is_activation_sized():
     """The paper-critical property: collective bytes for the recsys train cells
     stay activation-sized — independent of the 135M-slot memory budget."""

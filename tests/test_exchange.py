@@ -132,23 +132,31 @@ def test_sparse_worthwhile_2x4_bench_shape_sparse():
 
 
 def test_sparse_worthwhile_pod_scale_element_vs_row():
-    """The crossover the all_to_all exchange moves: at 16x16 with a 65k
-    global batch, element-level (lma) records stay dense — the O(K log K)
-    dedup sort on ~54M element locations erases the win (the term the old
-    gate in launch/steps.py ignored) — while row-aligned records
-    (hashed_row / freq) now go sparse: the index vector and its sort are d
-    times smaller and the all_to_all exchange keeps owned slices local."""
+    """The three-way split at pod scale: at 16x16 with a 65k global batch,
+    FLAT element-level records (the ragged-budget fallback, m % d != 0)
+    stay dense — the O(K log K) dedup sort on ~54M element locations erases
+    the win; row-aligned records (hashed_row / freq) go sparse (index
+    vector and sort d times smaller, all_to_all keeps owned slices local);
+    and BUCKETED element records (the striped LMA layout, buckets == d) go
+    sparse too — per-stripe sorts sharded over 'model' plus the in-kernel
+    fold price the construction below the dense slab tax.  The last flip is
+    what the bucketed layout was built for (ROADMAP item 1)."""
     n_lookups, d, m = 65536 * 26, 32, 135_266_304
     assert not exl.sparse_worthwhile(MESH_16x16, n_lookups, d, m,
                                      row_mode=False)
+    assert exl.sparse_worthwhile(MESH_16x16, n_lookups, d, m,
+                                 row_mode=False, buckets=d)
     assert exl.sparse_worthwhile(MESH_16x16, n_lookups, d, m, row_mode=True)
-    # ... and the row-mode flip is the all_to_all exchange's doing: under
-    # the replicated psum pair the same cell stays dense
+    # ... and both flips are the all_to_all exchange's doing: under the
+    # replicated psum pair the same cells stay dense (the bucketed sort
+    # cannot shard either — every rank needs the whole stream)
     old = exl.FORCED
     try:
         exl.FORCED = "psum"
         assert not exl.sparse_worthwhile(MESH_16x16, n_lookups, d, m,
                                          row_mode=True)
+        assert not exl.sparse_worthwhile(MESH_16x16, n_lookups, d, m,
+                                         row_mode=False, buckets=d)
     finally:
         exl.FORCED = old
 
@@ -160,6 +168,27 @@ def test_sparse_update_cost_fields():
     assert c["sparse_all_to_all"] < c["sparse_psum"]
     assert c["dedup_sort"] > 0
     assert exl.dedup_sort_bytes(1) == 0.0
+
+
+def test_dedup_sort_bytes_bucketed_paths():
+    """The per-path dedup model: bucketed construction is strictly cheaper
+    than flat at matched K (shallower per-stripe sorts x the measured
+    batched-sort efficiency), the model-sharded variant divides by n_model
+    exactly when the axis divides the bucket count, and degenerate bucket
+    shapes (k % buckets != 0, one key per bucket) fall back to the flat
+    charge — mirroring from_bucketed_locations' own fallback guards."""
+    k, d = 1 << 17, 32
+    flat = exl.dedup_sort_bytes(k)
+    bucketed = exl.dedup_sort_bytes(k, buckets=d)
+    assert 0 < bucketed < flat / exl.BUCKETED_SORT_SPEEDUP
+    assert exl.dedup_sort_bytes(k, buckets=7) == flat       # ragged
+    assert exl.dedup_sort_bytes(d, buckets=d) == exl.dedup_sort_bytes(d)
+    c16 = exl.sparse_update_cost(16, k // d, d, 1 << 27, buckets=d)
+    assert c16["dedup_sort"] == pytest.approx(bucketed / 16)
+    # bucket count the axis does not divide -> replicated bucketed sort
+    c_r = exl.sparse_update_cost(16, k // d, 24, 1 << 27, buckets=24)
+    assert c_r["dedup_sort"] == pytest.approx(
+        exl.dedup_sort_bytes((k // d) * 24, buckets=24))
 
 
 # ----------------------------------------------- 2x4 parity (all schemes)

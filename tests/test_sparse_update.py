@@ -12,6 +12,15 @@ Covers the PR-4 contract:
   * power-of-two batch bucketing keeps the fused engine at one compilation
     across batch-size jitter;
   * the check_regression sparse-update gate logic.
+
+And the bucketed-layout contract that replaced the flat dedup sort: the
+per-stripe ``from_bucketed_locations`` construction against the
+``from_locations`` parity oracle, the in-kernel duplicate fold
+(``fold_duplicates`` + ``unique=False`` through ref and Pallas), the K=1 /
+all-duplicate / sentinel-only / ragged-budget edge cases, and the striped
+LMA config actually taking the bucketed path end-to-end (the 10-step
+parity sweep above runs lma on the striped layout already — its
+``build_config`` auto-stripes whenever budget % dim == 0).
 """
 from __future__ import annotations
 
@@ -65,6 +74,179 @@ def test_dedup_under_jit():
     loc = jnp.asarray([0, 0, 31], jnp.int32)
     out = f(loc, jnp.asarray([1.0, 2.0, 4.0]))
     assert float(out[0]) == 3.0 and float(out[31]) == 4.0
+
+
+# -------------------------------------------- bucketed layout (striped LMA)
+
+def _striped_loc(rng, n: int, d: int, stripe: int) -> jnp.ndarray:
+    return jnp.asarray(np.arange(d)[None, :] * stripe
+                       + rng.integers(0, stripe, (n, d)), jnp.int32)
+
+
+def test_bucketed_locations_matches_flat_oracle():
+    """from_bucketed_locations: d per-stripe sorts, no dedup, no sentinels —
+    same dense gradient as the from_locations oracle, with the layout the
+    unique=False contract promises (sorted non-decreasing, duplicates
+    kept, every entry live)."""
+    m, d, n = 4096, 8, 128
+    rng = np.random.default_rng(5)
+    loc = _striped_loc(rng, n, d, m // d)
+    vals = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    gb = sp.from_bucketed_locations(loc, vals, (m,))
+    assert not gb.unique
+    assert gb.indices.shape == (n * d,)               # duplicates kept
+    idx = np.asarray(gb.indices)
+    assert (np.diff(idx) >= 0).all() and idx.max() < m
+    np.testing.assert_allclose(
+        np.asarray(gb.densify()),
+        np.asarray(sp.from_locations(loc, vals, (m,)).densify()),
+        atol=1e-6, rtol=1e-6)
+
+
+def test_bucketed_edge_cases_k1_and_all_duplicate():
+    m, d = 256, 4
+    # K = 1 row: position bits degenerate to zero width
+    loc1 = _striped_loc(np.random.default_rng(0), 1, d, m // d)
+    v1 = jnp.ones((1, d), jnp.float32)
+    g1 = sp.from_bucketed_locations(loc1, v1, (m,))
+    np.testing.assert_allclose(
+        np.asarray(g1.densify()),
+        np.asarray(sp.from_locations(loc1, v1, (m,)).densify()), atol=1e-6)
+    # every row hits the SAME slot in every stripe: one maximal duplicate
+    # run per bucket, the worst case for the in-kernel fold
+    rng = np.random.default_rng(1)
+    loc = jnp.tile(_striped_loc(rng, 1, d, m // d), (64, 1))
+    vals = jnp.asarray(rng.normal(size=(64, d)).astype(np.float32))
+    gb = sp.from_bucketed_locations(loc, vals, (m,))
+    np.testing.assert_allclose(
+        np.asarray(gb.densify()),
+        np.asarray(sp.from_locations(loc, vals, (m,)).densify()),
+        atol=1e-6, rtol=1e-6)
+    # ... and through the unique=False adagrad update (ref backend)
+    from repro.kernels.sparse_update import ops as su
+    acc = jnp.full((m,), 0.1, jnp.float32)
+    u, (acc1,) = su.sparse_update("adagrad", gb.indices, gb.values, (acc,),
+                                  unique=False, lr=0.05)
+    gsum = np.asarray(gb.densify())
+    np.testing.assert_allclose(np.asarray(acc1), 0.1 + gsum ** 2,
+                               atol=1e-6, rtol=1e-6)
+    applied = np.zeros(m, np.float32)
+    np.add.at(applied, np.asarray(gb.indices), np.asarray(u))
+    expect = np.where(gsum != 0, -0.05 * gsum / np.sqrt(0.1 + gsum ** 2), 0)
+    np.testing.assert_allclose(applied, expect, atol=1e-6, rtol=1e-6)
+
+
+def test_sentinel_only_sparse_grad_is_a_no_op():
+    """An empty SparseGrad (all-sentinel unique layout — e.g. a batch that
+    touched nothing after masking) must leave moments bit-identical and
+    emit all-zero updates; the unique=False layout has no sentinels, so its
+    degenerate form is the zero-value stream."""
+    from repro.kernels.sparse_update import ops as su
+    m = 64
+    acc = jnp.asarray(np.random.default_rng(2).uniform(0.5, 2, m)
+                      .astype(np.float32))
+    idx = jnp.full((8,), m, jnp.int32)
+    u, (acc1,) = su.sparse_update("adagrad", idx, jnp.zeros(8), (acc,),
+                                  unique=True, lr=0.1)
+    assert np.asarray(u).sum() == 0.0
+    np.testing.assert_array_equal(np.asarray(acc1), np.asarray(acc))
+    g = sp.SparseGrad(idx, jnp.zeros(8), (m,))
+    assert np.asarray(g.densify()).sum() == 0.0
+
+
+def test_fold_duplicates_matches_oracle():
+    from repro.kernels.sparse_update import ref as r
+    rng = np.random.default_rng(3)
+    for ii in (np.sort(rng.integers(0, 16, 64)), np.full(64, 7),
+               np.array([3]), np.arange(16)):
+        vv = rng.normal(size=ii.shape).astype(np.float32)
+        head, s = r.fold_duplicates(jnp.asarray(ii, jnp.int32),
+                                    jnp.asarray(vv))
+        dense_o = np.zeros(16, np.float64)
+        np.add.at(dense_o, ii, vv.astype(np.float64))
+        dense_f = np.zeros(16, np.float64)
+        hm = np.asarray(head)
+        np.add.at(dense_f, ii[hm], np.asarray(s)[hm].astype(np.float64))
+        np.testing.assert_allclose(dense_f, dense_o, atol=1e-6)
+        if (~hm).any():                     # non-heads carry exact zeros
+            assert np.abs(np.asarray(s)[~hm]).max() == 0.0
+
+
+@pytest.mark.parametrize("algo", ["sgd", "adagrad", "adam"])
+def test_pallas_kernel_matches_ref_unique_false(algo):
+    """Pallas (interpret) vs jnp reference on the duplicate stream — the
+    in-kernel fold path — checked against the unique=True result on the
+    pre-deduped twin of the same gradient."""
+    from repro.kernels.sparse_update import ops as su
+    m = 512
+    rng = np.random.default_rng(4)
+    idx = jnp.asarray(np.sort(rng.integers(0, m, 96)), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=96).astype(np.float32))
+    uni = sp.from_locations(idx[:, None], vals[:, None], (m,))
+    states = {"sgd": (jnp.zeros(m),),
+              "adagrad": (jnp.full((m,), 0.2, jnp.float32),),
+              "adam": (jnp.zeros(m), jnp.zeros(m))}[algo]
+    hyper = {"sgd": dict(lr=0.1, momentum=0.9),
+             "adagrad": dict(lr=0.1, eps=1e-8),
+             "adam": dict(lr=1e-3, b1=0.9, b2=0.999, bc1=0.9, bc2=0.99,
+                          eps=1e-8)}[algo]
+    u_k, s_k = su.sparse_update(algo, idx, vals, states, unique=False,
+                                interpret=True, **hyper)
+    u_r, s_r = su.sparse_update(algo, idx, vals, states, unique=False,
+                                **hyper)
+    np.testing.assert_allclose(np.asarray(u_k), np.asarray(u_r),
+                               atol=1e-6, rtol=1e-6)
+    for a, b in zip(s_k, s_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6, rtol=1e-6)
+    # applied result == the unique=True path on the deduped twin
+    u_u, s_u = su.sparse_update(algo, uni.indices, uni.values, states,
+                                unique=True, **hyper)
+    keep = np.asarray(uni.indices) < m
+    a_dup = np.zeros(m, np.float32)
+    np.add.at(a_dup, np.asarray(idx), np.asarray(u_r))
+    a_uni = np.zeros(m, np.float32)
+    np.add.at(a_uni, np.asarray(uni.indices)[keep], np.asarray(u_u)[keep])
+    np.testing.assert_allclose(a_dup, a_uni, atol=1e-6, rtol=1e-6)
+    for a, b in zip(s_r, s_u):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6, rtol=1e-6)
+
+
+def test_lma_striped_grad_takes_bucketed_path():
+    """The end-to-end wiring: a striped lma config records bucketed
+    locations and the engine emits the unique=False duplicate stream; a
+    ragged budget (m % d != 0) keeps striping inert and falls back to the
+    flat sorted-unique layout — bit-compatible, just slower."""
+    table, bufs, params = _make_setup("lma")
+    assert table.config.lma.striped and table.scheme.sparse_buckets(
+        table.config) == table.config.dim
+
+    def loss_fn(p, b):
+        e = table.embed_fields(p["embedding"], bufs, b["ids"])
+        return jnp.mean(e ** 2), {}
+
+    (_, _m), g = sp.sparse_value_and_grad(loss_fn)(params, _batch(0))
+    sg = g["embedding"]["memory"]
+    assert isinstance(sg, sp.SparseGrad) and not sg.unique
+    idx = np.asarray(sg.indices)
+    assert (np.diff(idx) >= 0).all() and idx.max() < 4096
+
+    scheme = get_scheme("lma")
+    ragged = EmbeddingTable(scheme.build_config((512,), 8, 4094, seed=3))
+    assert not ragged.config.lma.striped
+    assert scheme.sparse_buckets(ragged.config) == 0
+    store = synthetic_dense_store(512, 8, max_set=32, seed=2)
+    rbufs = ragged.make_buffers(store)
+    rparams = {"embedding": ragged.init(jax.random.key(1))}
+
+    def loss_r(p, ids):
+        return jnp.mean(ragged.embed(p["embedding"], rbufs, 0, ids) ** 2), {}
+
+    (_, _m), gr = sp.sparse_value_and_grad(loss_r)(
+        rparams, jnp.arange(16, dtype=jnp.int32))
+    sgr = gr["embedding"]["memory"]
+    assert isinstance(sgr, sp.SparseGrad) and sgr.unique
 
 
 # ------------------------------------------------- optimizer leaf semantics
