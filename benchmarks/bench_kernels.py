@@ -274,6 +274,80 @@ def bench_sparse_update(rows: list, out: list) -> dict:
     return upd_bytes
 
 
+def bench_guarded_step(rows: list, out: list) -> dict:
+    """Cost of the resilience layer's non-finite step guard at the paper
+    shape: the full lma train step (sparse grads + sparse adagrad, the
+    ``train_step_lma`` setup) built twice through the shared step factory
+    (``repro.resilience.guard.make_step``) — once unguarded (the pre-guard
+    fast path: no checks, no cond) and once guarded (in-jit isfinite +
+    magnitude scan over loss and every gradient leaf, update under
+    ``lax.cond``).  ``check_regression.py::guard_overhead_failures`` gates
+    the ratio at <= GUARD_OVERHEAD_MAX (1.05): always-on protection must
+    stay within 5% of the unguarded step."""
+    from repro.core.signatures import synthetic_dense_store
+    from repro.embed import EmbeddingTable, get_scheme
+    from repro.optim import sparse as sp
+    from repro.resilience import guard as guard_lib
+
+    m, B, d = 1 << 21, 4096, 32
+    shape = f"{B}x{d}@m=2^21"
+    rng = np.random.default_rng(7)
+    scheme = get_scheme("lma")
+    table = EmbeddingTable(scheme.build_config((65536,), d, m, seed=5))
+    store = synthetic_dense_store(65536, 64, max_set=32, seed=2)
+    bufs = table.make_buffers(store)
+    ids = jnp.asarray(rng.integers(0, 65536, (B,), np.int32))
+    y = jnp.asarray(rng.normal(size=(B, d)).astype(np.float32))
+
+    def loss_fn(p, batch):
+        e = table.embed(p["embedding"], bufs, 0, ids)
+        l = jnp.mean((e - y) ** 2)
+        return l, {"l": l}
+
+    opt = sp.sparse_adagrad(0.05)
+    variants = {}
+    for name, guarded in (("train_step_unguarded", False),
+                          ("train_step_guarded", True)):
+        step = guard_lib.make_step(loss_fn, opt, sparse_grads=True,
+                                   guard=guarded, donate=True)
+
+        def carry_step(p, s, batch, fault, _step=step):
+            p, s, *_ = _step(p, s, batch, fault)
+            return p, s
+
+        params = {"embedding": table.init(jax.random.key(1))}
+        variants[name] = [carry_step, (params, opt.init(params))]
+
+    # Interleave the timed iterations: the two variants are within a few
+    # percent of each other, so timing them in separate blocks lets slow
+    # machine-state drift (thermal throttling, background load) bias the
+    # ratio by more than the effect being measured.  Alternating per
+    # iteration makes drift hit both variants equally.
+    import time
+    warmup, iters = 2, 16
+    samples = {name: [] for name in variants}
+    for it in range(warmup + iters):
+        for name, v in variants.items():
+            t0 = time.perf_counter()
+            v[1] = v[0](*v[1], {}, np.float32(1.0))
+            jax.block_until_ready(v[1])
+            if it >= warmup:
+                samples[name].append(time.perf_counter() - t0)
+    us = {name: float(np.median(s) * 1e6) for name, s in samples.items()}
+    for name in ("train_step_unguarded", "train_step_guarded"):
+        rows.append((name, shape, round(us[name], 1)))
+    overhead = us["train_step_guarded"] / max(us["train_step_unguarded"], 1e-9)
+    doc = {"guarded_us": round(us["train_step_guarded"], 1),
+           "unguarded_us": round(us["train_step_unguarded"], 1),
+           "overhead": round(overhead, 4)}
+    out.append(
+        f"kernels guarded_step {shape}: guarded "
+        f"{us['train_step_guarded']:.0f} us vs unguarded "
+        f"{us['train_step_unguarded']:.0f} us "
+        f"({(overhead - 1) * 100:+.1f}% overhead; gate <= +5%)")
+    return doc
+
+
 def bench_dedup_sort(rows: list, out: list) -> None:
     """The SparseGrad construction tax, swept over K = B*d in 2^13..2^17,
     three ways on the SAME striped locations:
@@ -425,6 +499,7 @@ def run() -> list[str]:
     out.append(f"kernels cin ref: {us:.0f} us")
 
     upd_bytes = bench_sparse_update(rows, out)
+    guard_doc = bench_guarded_step(rows, out)
     bench_dedup_sort(rows, out)
     bench_scheme_sweep(rows, out)
 
@@ -466,6 +541,7 @@ def run() -> list[str]:
                             for k, s, u in rows],
                    "modeled_hbm_bytes_per_lookup": hbm,
                    "modeled_update_bytes_per_step": upd_bytes,
+                   "guarded_step_overhead": guard_doc,
                    "sharded_lookup": sharded}, f, indent=1)
     out.append(f"kernels -> {jpath}")
     return out

@@ -11,11 +11,13 @@ memory-pool update loses its edge over the dense O(m) step
 better AND measured wall-clock strictly faster), when the bucketed
 SparseGrad construction loses its measured edge over the flat dedup sort or
 a flipped 16x16 lma train cell stops recording ``sparse_grads: true``
-(``dedup_speedup_failures``), or when the sharded lookup
+(``dedup_speedup_failures``), when the sharded lookup
 loses the exchange layer's win (``sharded_gap_failures``: best-strategy
 sharded/replicated wall-clock <= 2.5x at 8 devices AND ring or all_to_all
-strictly beating psum).  New rows are allowed (they become baseline once
-committed).
+strictly beating psum), or when the resilience layer's non-finite step
+guard costs more than 5% over the unguarded train step
+(``guard_overhead_failures``).  New rows are allowed (they become baseline
+once committed).
 
 Usage:
   python benchmarks/check_regression.py                 # re-run bench, diff
@@ -69,6 +71,11 @@ DEDUP_GATE_SHAPE = "4096x32@m=2^21"
 # (measured: all_to_all ~1.15x), and a chunked strategy must actually beat
 # psum — if it stops doing so the exchange layer has regressed to dead code.
 SHARDED_GAP_MAX = 2.5
+# the guarded train step (resilience layer's in-jit non-finite check +
+# lax.cond update skip) must stay within 5% of the unguarded step at the
+# paper shape — always-on protection has to be affordable or nobody runs it
+GUARD_OVERHEAD_MAX = 1.05
+GUARD_GATE_SHAPE = "4096x32@m=2^21"
 
 
 def load_rows(path_or_doc) -> dict[tuple[str, str], float]:
@@ -232,6 +239,32 @@ def sharded_gap_failures(fresh: dict, fresh_doc: dict | None = None,
     return failures
 
 
+def guard_overhead_failures(fresh: dict, fresh_doc: dict | None = None,
+                            max_overhead: float = None) -> list[str]:
+    """The resilience layer's always-on cost bound: the guarded train step
+    (in-jit non-finite check + ``lax.cond`` update, bench_kernels.
+    bench_guarded_step) must stay within ``GUARD_OVERHEAD_MAX`` (5%) of the
+    unguarded step at the paper shape.  Protection that costs more than
+    that would get turned off in production, which is how poisoned pools
+    get persisted."""
+    if max_overhead is None:
+        max_overhead = GUARD_OVERHEAD_MAX
+    key_g = ("train_step_guarded", GUARD_GATE_SHAPE)
+    key_u = ("train_step_unguarded", GUARD_GATE_SHAPE)
+    missing = [k for k, s in (key_g, key_u) if (k, s) not in fresh]
+    if missing:
+        return [f"{'/'.join(missing)} [{GUARD_GATE_SHAPE}] missing from the "
+                "fresh ledger (the guard-overhead gate cannot run)"]
+    guarded, unguarded = fresh[key_g], fresh[key_u]
+    ratio = guarded / max(unguarded, 1e-9)
+    if ratio > max_overhead:
+        return [
+            f"guarded step overhead {ratio:.3f}x > {max_overhead:.2f}x "
+            f"(guarded {guarded:.1f} us vs unguarded {unguarded:.1f} us at "
+            f"{GUARD_GATE_SHAPE}) — the non-finite guard got too expensive"]
+    return []
+
+
 def compare(baseline: dict, fresh: dict,
             max_ratio: float = MAX_RATIO) -> list[str]:
     """Return human-readable failures (empty == no regression)."""
@@ -292,6 +325,7 @@ def main(argv=None) -> int:
     failures += sparse_speedup_failures(fresh, fresh_doc)
     failures += dedup_speedup_failures(fresh, fresh_doc)
     failures += sharded_gap_failures(fresh, fresh_doc)
+    failures += guard_overhead_failures(fresh, fresh_doc)
     if failures:
         print(f"REGRESSION ({len(failures)} row(s)):")
         for f in failures:

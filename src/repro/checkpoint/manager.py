@@ -1,13 +1,25 @@
-"""Fault-tolerant checkpointing: atomic, versioned, async, elastic.
+"""Fault-tolerant checkpointing: atomic, versioned, async, elastic, healing.
 
 Layout:  <dir>/step_<N>/{manifest.json, arrays.npz}   (+ LATEST marker file)
 
 Guarantees:
   * atomicity — writes land in ``.tmp-*`` and are renamed only after fsync, so
     a preemption mid-save never corrupts the latest valid checkpoint;
-  * integrity — manifest carries per-leaf shape/dtype and a content checksum,
-    verified on restore;
-  * retention — keep the newest ``keep`` checkpoints;
+  * integrity — the manifest carries per-leaf shape/dtype, a whole-tree
+    checksum, a per-leaf sha256, and per-chunk bit sums for memory-pool
+    leaves (``repro.resilience.integrity``), all verified on restore;
+  * finite refusal — ``save`` rejects a state snapshot holding non-finite
+    floats: the guard upstream skips poisoned steps, and the checkpointer is
+    the last line of defense against persisting poison (``check_finite=False``
+    opts out for debugging snapshots);
+  * self-healing restore — a corrupt *latest* checkpoint is not fatal:
+    corruption localized to an integrity-covered pool leaf is repaired by
+    quarantining (zeroing) the mismatched chunks; anything worse falls back
+    to the previous retained step (``restore`` walks retained steps newest to
+    oldest).  ``last_restore_report`` records what healing happened so the
+    trainer can fold it into its health counters;
+  * retention — keep the newest ``keep`` checkpoints (also the fallback
+    budget: keep=3 survives two corrupt checkpoints);
   * async — ``save(..., blocking=False)`` snapshots to host memory and writes
     in a background thread (training continues on device);
   * elasticity — arrays are stored unsharded (single-process container); on
@@ -26,6 +38,8 @@ import threading
 
 import jax
 import numpy as np
+
+from repro.resilience import integrity as integ_lib
 
 
 def _flatten(tree, prefix=""):
@@ -66,20 +80,50 @@ def _unflatten(flat: dict):
     return rebuild(root)
 
 
+def _leaf_sha(a: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest()
+
+
+def _tree_digest(host: dict) -> str:
+    digest = hashlib.sha256()
+    for k in sorted(host):
+        digest.update(k.encode())
+        digest.update(np.ascontiguousarray(host[k]).tobytes())
+    return digest.hexdigest()
+
+
+def _is_pool_leaf(path: str) -> bool:
+    return path.split("/")[-1] == "memory"
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3):
         self.dir = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
+        # what healing the most recent restore performed:
+        # {"quarantined_chunks": int, "repaired_leaves": [..],
+        #  "fell_back_from": step|None}
+        self.last_restore_report: dict = {}
 
     # ----------------------------------------------------------------- save
-    def save(self, step: int, tree, blocking: bool = True) -> None:
+    def save(self, step: int, tree, blocking: bool = True,
+             check_finite: bool = True) -> None:
         self.wait()  # serialize with any in-flight async write
         if os.path.exists(os.path.join(self.dir, f"step_{step:010d}",
                                        "manifest.json")):
             return  # idempotent: this step is already durably saved
         host = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+        if check_finite:
+            # refuse to persist poison — synchronously, so the caller sees
+            # the error even for async saves
+            for k, v in host.items():
+                if (np.issubdtype(v.dtype, np.floating)
+                        and not np.isfinite(v).all()):
+                    raise ValueError(
+                        f"refusing to persist non-finite state at {k!r} "
+                        f"(step {step}); pass check_finite=False to override")
         if blocking:
             self._write(step, host)
         else:
@@ -98,15 +142,22 @@ class CheckpointManager:
         shutil.rmtree(tmp, ignore_errors=True)
         os.makedirs(tmp)
         np.savez(os.path.join(tmp, "arrays.npz"), **host)
-        digest = hashlib.sha256()
-        for k in sorted(host):
-            digest.update(k.encode())
-            digest.update(np.ascontiguousarray(host[k]).tobytes())
+        # memory-pool leaves get chunk-level checksums on top of the leaf
+        # sha: corruption in a pool chunk is repairable (quarantine + zero),
+        # so the restore path needs to localize it
+        integrity = {
+            k: {"chunk": integ_lib.CHUNK,
+                "checksums": [int(c) for c in
+                              integ_lib.np_chunk_checksums(host[k])]}
+            for k in sorted(host) if _is_pool_leaf(k)}
         manifest = {
             "step": step,
-            "checksum": digest.hexdigest(),
+            "checksum": _tree_digest(host),
             "leaves": {k: {"shape": list(host[k].shape),
-                           "dtype": str(host[k].dtype)} for k in sorted(host)},
+                           "dtype": str(host[k].dtype),
+                           "sha256": _leaf_sha(host[k])}
+                       for k in sorted(host)},
+            "integrity": integrity,
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
@@ -140,27 +191,107 @@ class CheckpointManager:
             name = cands[-1]
         return int(name.split("_")[1])
 
-    def restore(self, step: int | None = None, shardings=None, verify: bool = True):
+    def retained_steps(self) -> list[int]:
+        """Steps with an on-disk manifest, ascending."""
+        out = []
+        for d in sorted(os.listdir(self.dir)):
+            if d.startswith("step_") and os.path.exists(
+                    os.path.join(self.dir, d, "manifest.json")):
+                out.append(int(d.split("_")[1]))
+        return out
+
+    def restore(self, step: int | None = None, shardings=None,
+                verify: bool = True, fallback: bool = True):
         """-> (step, tree).  ``shardings``: pytree-or-callable(path)->Sharding
-        used to device_put leaves (elastic re-shard onto the current mesh)."""
-        if step is None:
-            step = self.latest_step()
-            if step is None:
+        used to device_put leaves (elastic re-shard onto the current mesh).
+
+        With ``step=None`` (the resume path) a latest checkpoint that fails
+        to read or verify is not fatal: after attempting chunk-level repair
+        (see ``_read_step``), restore walks the previously retained steps
+        newest-to-oldest and returns the first healthy one, recording the
+        skip in ``last_restore_report["fell_back_from"]``.  An explicitly
+        requested ``step`` never falls back — the caller asked for those
+        exact bytes.
+        """
+        explicit = step is not None
+        if explicit:
+            candidates = [step]
+        else:
+            latest = self.latest_step()
+            if latest is None:
                 raise FileNotFoundError(f"no checkpoint in {self.dir}")
+            candidates = [latest]
+            if fallback:
+                candidates += [s for s in reversed(self.retained_steps())
+                               if s < latest]
+        errors = []
+        for s in candidates:
+            try:
+                got, tree, report = self._read_step(s, shardings, verify)
+            except Exception as e:  # noqa: BLE001 — any unreadable candidate
+                if explicit or not fallback:
+                    raise
+                errors.append(f"step {s}: {type(e).__name__}: {e}")
+                continue
+            report["fell_back_from"] = (candidates[0]
+                                        if s != candidates[0] else None)
+            self.last_restore_report = report
+            return got, tree
+        raise IOError("no restorable checkpoint in "
+                      f"{self.dir}:\n  " + "\n  ".join(errors))
+
+    def _read_step(self, step: int, shardings, verify: bool):
         path = os.path.join(self.dir, f"step_{step:010d}")
+        from repro.resilience import faults as _flt
+        if _flt.io_fault():
+            raise IOError(f"injected host read failure for {path}")
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)
         with np.load(os.path.join(path, "arrays.npz")) as z:
             host = {k: z[k] for k in z.files}
-        if verify:
-            digest = hashlib.sha256()
-            for k in sorted(host):
-                digest.update(k.encode())
-                digest.update(np.ascontiguousarray(host[k]).tobytes())
-            if digest.hexdigest() != manifest["checksum"]:
-                raise IOError(f"checkpoint {path} failed checksum verification")
+        report = {"quarantined_chunks": 0, "repaired_leaves": []}
+        if verify and _tree_digest(host) != manifest["checksum"]:
+            self._chunk_repair(host, manifest, report, path)
         if shardings is not None:
             put = (shardings if callable(shardings)
                    else (lambda p: shardings))
             host = {k: jax.device_put(v, put(k)) for k, v in host.items()}
-        return manifest["step"], _unflatten(host)
+        return manifest["step"], _unflatten(host), report
+
+    def _chunk_repair(self, host: dict, manifest: dict, report: dict,
+                      path: str):
+        """Whole-tree checksum failed: localize, and repair in place iff
+        every corrupt leaf is integrity-covered (a memory pool, where zeroed
+        chunks degrade gracefully).  Raises IOError when the corruption is
+        unrepairable — the caller then falls back to an older step."""
+        leaves = manifest.get("leaves", {})
+        integrity = manifest.get("integrity", {})
+        if set(host) != set(leaves):
+            raise IOError(f"checkpoint {path} failed checksum verification "
+                          "(leaf set mismatch)")
+        bad = [k for k in sorted(host)
+               if leaves[k].get("sha256") not in (None, _leaf_sha(host[k]))]
+        if any(leaves[k].get("sha256") is None for k in sorted(host)):
+            # legacy manifest without per-leaf hashes: cannot localize
+            raise IOError(f"checkpoint {path} failed checksum verification")
+        if not bad:
+            raise IOError(f"checkpoint {path} failed checksum verification "
+                          "(corruption outside array payload)")
+        for k in bad:
+            info = integrity.get(k)
+            if info is None:
+                raise IOError(f"checkpoint {path}: leaf {k!r} is corrupt and "
+                              "not integrity-covered; unrepairable")
+            got = integ_lib.np_chunk_checksums(host[k], info["chunk"])
+            ref = np.asarray(info["checksums"], np.uint32)
+            if got.shape != ref.shape:
+                raise IOError(f"checkpoint {path}: leaf {k!r} chunk layout "
+                              "mismatch; unrepairable")
+            bad_chunks = got != ref
+            if not bad_chunks.any():
+                raise IOError(f"checkpoint {path}: leaf {k!r} sha mismatch "
+                              "but chunks verify; unrepairable")
+            host[k] = integ_lib.np_quarantine_chunks(
+                host[k], bad_chunks, info["chunk"])
+            report["quarantined_chunks"] += int(bad_chunks.sum())
+            report["repaired_leaves"].append(k)

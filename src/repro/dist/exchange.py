@@ -258,6 +258,43 @@ def list_exchanges() -> list[str]:
     return sorted(_STRATEGIES)
 
 
+# --------------------------------------------------------- demotion ladder
+#
+# Degraded-mode operation: when a chunked strategy fails validation
+# (``repro.resilience.exchange_guard`` — injected chunk drop/corruption, or
+# any shape/finite/bitwise mismatch against the psum oracle), it is demoted
+# for the rest of the process and the resolvers stop picking it.  The chain
+# is all_to_all -> ring -> psum: each rung trades performance for a simpler
+# collective, and psum — the bit-exact oracle — is terminal.  Explicit
+# per-call strategy *instances* (tests pinning a strategy) bypass demotion;
+# FORCED and the cost model honor it.
+
+FALLBACK = {"all_to_all": "ring", "ring": "psum", "psum": None}
+DEMOTED: dict[str, str] = {}   # name -> reason it was demoted
+
+
+def demote(name: str, reason: str = "validation failure") -> str:
+    """Demote ``name`` for the rest of the run; -> its effective successor."""
+    if name not in _STRATEGIES:
+        raise KeyError(f"unknown exchange strategy {name!r}")
+    if name == "psum":
+        raise ValueError("psum is the terminal bit-exact oracle; "
+                         "there is nothing to demote it to")
+    DEMOTED[name] = reason
+    return effective(FALLBACK[name])
+
+
+def effective(name: str) -> str:
+    """Map a requested strategy through the demotion chain."""
+    while name in DEMOTED and FALLBACK.get(name):
+        name = FALLBACK[name]
+    return name
+
+
+def reset_demotions():
+    DEMOTED.clear()
+
+
 # -------------------------------------------------------------- cost model
 #
 # Modeled per-device bytes, the same accounting style as
@@ -342,13 +379,14 @@ def resolve_exchange(mesh, B: int | None = None, d: int | None = None,
     if n_model <= 1:
         return PSUM
     if FORCED is not None:
-        return get_exchange(FORCED)
+        return get_exchange(effective(FORCED))
     if B is None or d is None or B % n_model != 0:
         return PSUM
     if fused is None:
         fused = m is not None and fused_slab_eligible(m, n_model)
     costs = lookup_cost(n_model, B, d, alloc_row, fused=fused)
-    name = min(costs, key=costs.get)
+    live = {n: c for n, c in costs.items() if n not in DEMOTED}
+    name = min(live, key=live.get)
     ex = _STRATEGIES[name]
     return ex if ex.eligible(B, n_model) else PSUM
 
@@ -473,6 +511,8 @@ def resolve_update_exchange(mesh) -> Exchange:
     if n_model <= 1:
         return PSUM
     if FORCED is not None:
-        ex = get_exchange(FORCED)
+        ex = get_exchange(effective(FORCED))
         return PSUM if ex is RING else ex
-    return ALL_TO_ALL
+    # demotion: all_to_all's update form has no ring rung — a demoted
+    # all_to_all goes straight to the psum oracle
+    return PSUM if "all_to_all" in DEMOTED else ALL_TO_ALL

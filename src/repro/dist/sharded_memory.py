@@ -102,7 +102,11 @@ def _resolve(exchange, mesh, n_flat: int, d: int, m: int | None,
              fused: bool = False) -> exl.Exchange:
     """Driver-side strategy resolution: explicit arg > env > cost model,
     with an eligibility fallback to psum (odd chunking, tiny batches).
-    ``fused`` prices the psum-only fused-slab discount."""
+    ``fused`` prices the psum-only fused-slab discount.  When a fault
+    injector with an armed exchange fault is installed
+    (``repro.resilience.faults``), the resolved chunked strategy is wrapped
+    so the injected chunk drop/corruption reaches the assembled lookup —
+    the harness behind the demotion ladder's validation tests."""
     if isinstance(exchange, str):
         exchange = exl.get_exchange(exchange)
     if exchange is None:
@@ -111,7 +115,8 @@ def _resolve(exchange, mesh, n_flat: int, d: int, m: int | None,
     n_model = _model_size(mesh)
     if not exchange.eligible(n_flat, n_model):
         exchange = exl.PSUM
-    return exchange
+    from repro.resilience import faults as _flt
+    return _flt.wrap_exchange(exchange)
 
 
 def _local_flat(mesh, dp_axes, gids) -> tuple[tuple, int]:

@@ -105,6 +105,15 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir")
     ap.add_argument("--n-signatures", type=int, default=10_000)
     ap.add_argument("--eval-batches", type=int, default=8)
+    ap.add_argument("--faults", default=None,
+                    help="fault-injection spec, e.g. "
+                         "'nan_grad@17,rot_row@40:8,slow_rank@55:0.5' "
+                         "(see repro.resilience.faults; also REPRO_FAULTS)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the fault injector's corruption bits")
+    ap.add_argument("--no-guard", action="store_true",
+                    help="disable the in-jit non-finite step guard "
+                         "(also REPRO_GUARD_STEP=0)")
     args = ap.parse_args(argv)
 
     if args.exchange is not None:
@@ -142,11 +151,17 @@ def main(argv=None):
           f"device(s)")
     lps = (lookups_per_step(cfg, args.batch) if arch.family == "recsys"
            else min(args.batch, 16) * 64)
+    injector = None
+    if args.faults:
+        from repro.resilience.faults import FaultInjector
+        injector = FaultInjector(args.faults, seed=args.fault_seed)
+        print(f"fault injection armed: {args.faults} (seed {args.fault_seed})")
     trainer = Trainer(
         TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
                       ckpt_every=100, log_every=max(args.steps // 10, 1),
-                      lookups_per_step=lps),
-        loss_fn, params, make_optimizer(arch), batch_fn)
+                      lookups_per_step=lps,
+                      guard_step=False if args.no_guard else None),
+        loss_fn, params, make_optimizer(arch), batch_fn, faults=injector)
     if trainer.sparse_grads:
         from repro.dist import exchange as exl
         print("sparse memory-pool updates ON (REPRO_SPARSE_GRADS=0 for the "
@@ -155,6 +170,8 @@ def main(argv=None):
     trainer.install_signal_handlers()
     out = trainer.fit()
     print(f"done: {out}")
+    if trainer.health.any_faults():
+        print(f"health: {trainer.health.summary()}")
 
     if arch.family == "recsys":
         ev = StreamingEval()

@@ -145,6 +145,16 @@ class SparseGrad:
         return SparseGrad(self.indices, fn(self.values), self.dense_shape,
                           self.unique, self.buckets)
 
+    def all_finite(self, max_abs: float | None = None) -> jax.Array:
+        """Scalar bool: every contribution finite (and ``<= max_abs`` when
+        given).  Sound for both layouts: sentinel-padded tails carry exact
+        zeros (``unique=True``) and bucketed streams are all real entries
+        (``unique=False``), so no masking is needed."""
+        ok = jnp.all(jnp.isfinite(self.values))
+        if max_abs is not None:
+            ok = ok & jnp.all(jnp.abs(self.values) <= max_abs)
+        return ok
+
 
 def is_sparse(x) -> bool:
     return isinstance(x, SparseGrad)

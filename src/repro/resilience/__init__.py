@@ -1,0 +1,23 @@
+"""Self-healing training: fault injection, step guard, integrity, fallback.
+
+The resilience layer makes the training stack survive the faults that
+actually occur at pod scale — non-finite gradient steps, silent storage
+bit-rot in the shared memory pool, flaky collective links, host read
+failures, preemption — and makes every one of those paths *testable* via a
+deterministic, seeded :class:`~repro.resilience.faults.FaultInjector`.
+
+    faults          the injector (``REPRO_FAULTS=nan_grad@17,rot_row@40``)
+                    + the FaultyExchange wrapper the sharded drivers use
+    guard           in-jit non-finite step guard (``make_step``): a poisoned
+                    step is skipped via ``lax.cond``, state bit-untouched
+    integrity       chunked pool checksums + corruption scan + quarantine
+    health          the Health counter record ``Trainer.fit`` reports
+    exchange_guard  probe-validate chunked strategies, retry once, demote
+                    ``all_to_all -> ring -> psum`` on repeated failure
+"""
+from repro.resilience.health import Health                      # noqa: F401
+from repro.resilience.faults import (                           # noqa: F401
+    FaultInjector, parse_faults, install, active_injector, from_env)
+from repro.resilience.guard import (                            # noqa: F401
+    make_step, all_finite, guard_enabled)
+from repro.resilience.exchange_guard import ExchangeGuard       # noqa: F401

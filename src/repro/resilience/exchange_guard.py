@@ -1,0 +1,94 @@
+"""Exchange-strategy validation and the demotion ladder.
+
+A chunked exchange strategy (ring, all_to_all) that silently drops or
+corrupts a chunk poisons every lookup it assembles.  :class:`ExchangeGuard`
+runs a *probe* — a small representative lookup the caller supplies — under
+each candidate strategy and validates the assembled result:
+
+* shape check against the probe contract,
+* finiteness check (a corrupted chunk shows up as NaN/inf),
+* optional bitwise comparison against the psum oracle (all strategies are
+  specified bit-identical, so any discrepancy at all is a fault — this is
+  what catches a *dropped* chunk, which zeros look finite).
+
+A strategy that fails is retried once (transient-fault tolerance, counted in
+``health.retries``); a second failure demotes it process-wide via
+``repro.dist.exchange.demote`` — ``all_to_all -> ring -> psum`` — so every
+subsequent ``resolve_exchange``/``resolve_update_exchange`` call avoids it
+for the rest of the run.  psum, the bit-exact oracle, is terminal and never
+demoted.
+
+Probes run eagerly (outside the training jit): demotion is a Python-level
+policy change, and the guard needs concrete bytes to compare.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.dist import exchange as exl
+from repro.resilience.health import Health
+
+LADDER = ("all_to_all", "ring", "psum")
+
+
+class ExchangeGuard:
+    """Validate chunked strategies against the psum oracle; demote failures.
+
+    ``probe_fn(name)`` runs one representative sharded lookup forced onto
+    strategy ``name`` and returns the assembled array (host- or
+    device-resident).  ``use_oracle=False`` skips the psum comparison and
+    validates shape + finiteness only (for probes with no oracle form).
+    """
+
+    def __init__(self, probe_fn: Callable[[str], np.ndarray],
+                 health: Optional[Health] = None,
+                 log: Callable[[str], None] = print,
+                 use_oracle: bool = True,
+                 ladder: tuple = LADDER):
+        self.probe_fn = probe_fn
+        self.health = health if health is not None else Health()
+        self.log = log
+        self.use_oracle = use_oracle
+        self.ladder = ladder
+
+    def _check(self, name: str, oracle) -> str | None:
+        """-> failure reason, or None when the strategy validates."""
+        try:
+            out = np.asarray(self.probe_fn(name))
+        except Exception as e:  # noqa: BLE001 — any probe crash is a failure
+            return f"probe raised {type(e).__name__}: {e}"
+        if oracle is not None and out.shape != oracle.shape:
+            return f"shape {out.shape} != oracle {oracle.shape}"
+        if np.issubdtype(out.dtype, np.floating) and not np.isfinite(out).all():
+            return "non-finite values in assembled lookup"
+        if oracle is not None and out.tobytes() != oracle.tobytes():
+            return "not bit-identical to the psum oracle"
+        return None
+
+    def validate(self) -> str:
+        """Walk the ladder; -> the first strategy that validates ('psum' in
+        the worst case — the oracle validates by definition)."""
+        oracle = (np.asarray(self.probe_fn("psum"))
+                  if self.use_oracle else None)
+        for name in self.ladder:
+            if name == "psum":
+                return name  # terminal: the oracle is the ground truth
+            if name in exl.DEMOTED:
+                continue
+            reason = self._check(name, oracle)
+            if reason is None:
+                return name
+            # one retry: a transient glitch should not cost a strategy
+            self.health.retries += 1
+            retry_reason = self._check(name, oracle)
+            if retry_reason is None:
+                self.log(f"[exchange-guard] {name} recovered on retry "
+                         f"(first failure: {reason})")
+                return name
+            exl.demote(name, retry_reason)
+            self.health.exchange_demotions += 1
+            self.log(f"[exchange-guard] demoted {name}: {retry_reason} "
+                     f"(retry after: {reason})")
+        return "psum"

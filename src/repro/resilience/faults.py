@@ -1,0 +1,274 @@
+"""Deterministic fault injection for the training stack.
+
+A :class:`FaultInjector` is built from a compact spec — ``kind@step`` tokens,
+comma-separated, each optionally carrying a ``:arg`` —
+
+    REPRO_FAULTS="nan_grad@17,rot_row@40:8,slow_rank@55:0.5,drop_chunk@60"
+
+and is consulted by the trainer (gradient faults, slow ranks, bit-rot,
+preemption), the checkpoint manager (host read failures), and the sharded
+drivers (exchange chunk drop/corrupt).  Injection is seeded and replayable:
+the same spec + seed produces the same corruption bits, so every self-healing
+path in ``tests/test_resilience.py`` asserts exact outcomes.
+
+Fault kinds
+-----------
+``nan_grad`` / ``inf_grad`` / ``huge_grad``
+    Scale that step's gradients by NaN / +inf / 1e30 (``:arg`` overrides the
+    multiplier).  The scale enters the jitted step as a traced scalar; clean
+    steps pass 1.0, which is a bitwise identity for IEEE floats, so arming
+    the injector never perturbs healthy steps.
+``rot_row``
+    Flip an exponent bit in ``:arg`` (default 8) seeded elements of every
+    memory-pool leaf before the step runs — silent storage bit-rot.
+``slow_rank``
+    Sleep ``:arg`` seconds (default 0.25) inside the timed step — a straggler.
+``preempt``
+    Raise the trainer's preemption flag mid-run.
+``read_fail``
+    Fail the next checkpoint host read (consumed once) — exercises the
+    restore fallback ladder.
+``drop_chunk`` / ``corrupt_chunk``
+    Zero / NaN-poison the first batch chunk a chunked exchange strategy
+    assembles, persistently from ``step`` on — a bad link stays bad until
+    the strategy is demoted (``resilience.exchange_guard``).  The psum
+    oracle is exempt by construction.
+
+Gradient, rot, slow and preempt faults fire once (transient faults — the
+realistic case, and what lets rollback-replay actually heal); chunk faults
+persist.  ``reset()`` re-arms everything for tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import exchange as exl
+
+GRAD_KINDS = {
+    "nan_grad": float("nan"),
+    "inf_grad": float("inf"),
+    "huge_grad": 1e30,
+}
+KINDS = tuple(GRAD_KINDS) + ("rot_row", "slow_rank", "preempt", "read_fail",
+                             "drop_chunk", "corrupt_chunk")
+
+
+@dataclasses.dataclass
+class Fault:
+    kind: str
+    step: int
+    arg: float | None = None
+    fired: bool = False
+
+
+def parse_faults(spec: str) -> list[Fault]:
+    """``"kind@step[:arg],..."`` -> sorted fault list.  Raises ValueError on
+    unknown kinds or malformed tokens (fail loud: a typo'd fault spec that
+    silently injects nothing would invalidate a whole resilience drill)."""
+    faults = []
+    for tok in (spec or "").split(","):
+        tok = tok.strip()
+        if not tok:
+            continue
+        kind, at, rest = tok.partition("@")
+        if not at or not rest:
+            raise ValueError(f"malformed fault {tok!r} (want kind@step[:arg])")
+        if kind not in KINDS:
+            raise ValueError(f"unknown fault kind {kind!r} "
+                             f"(known: {', '.join(KINDS)})")
+        step_s, colon, arg_s = rest.partition(":")
+        try:
+            step = int(step_s)
+            arg = float(arg_s) if colon else None
+        except ValueError:
+            raise ValueError(f"malformed fault {tok!r} (want kind@step[:arg])")
+        faults.append(Fault(kind, step, arg))
+    faults.sort(key=lambda f: f.step)
+    return faults
+
+
+class FaultInjector:
+    """Seeded, deterministic fault source shared by the whole stack."""
+
+    def __init__(self, spec: str = "", seed: int = 0):
+        self.spec = spec
+        self.seed = seed
+        self.faults = parse_faults(spec)
+        self.now = 0  # last step the trainer told us about
+
+    def __bool__(self):
+        return bool(self.faults)
+
+    def reset(self):
+        for f in self.faults:
+            f.fired = False
+        self.now = 0
+
+    # ------------------------------------------------------- gradient faults
+    def grad_fault(self, step: int) -> float:
+        """Multiplier for this step's gradients (1.0 = clean, the bitwise
+        identity). Fires at most one gradient fault per step, once each."""
+        self.now = max(self.now, step)
+        for f in self.faults:
+            if not f.fired and f.step == step and f.kind in GRAD_KINDS:
+                f.fired = True
+                return GRAD_KINDS[f.kind] if f.arg is None else f.arg
+        return 1.0
+
+    # ----------------------------------------------------- trainer-side hooks
+    def step_delay(self, step: int) -> float:
+        """Seconds to stall inside the timed region (straggler injection)."""
+        self.now = max(self.now, step)
+        for f in self.faults:
+            if not f.fired and f.step == step and f.kind == "slow_rank":
+                f.fired = True
+                return f.arg if f.arg is not None else 0.25
+        return 0.0
+
+    def pre_step(self, trainer, step: int):
+        """Host-side faults applied before the step launches: bit-rot the
+        memory pool, or raise the preemption flag."""
+        self.now = max(self.now, step)
+        for f in self.faults:
+            if f.fired or f.step != step:
+                continue
+            if f.kind == "rot_row":
+                f.fired = True
+                n = int(f.arg) if f.arg is not None else 8
+                trainer.params = self.rot_memory(trainer.params, step, n)
+            elif f.kind == "preempt":
+                f.fired = True
+                trainer.preempt()
+
+    def rot_memory(self, params, step: int, n: int = 8):
+        """Flip exponent bit 30 in ``n`` seeded f32 elements of every memory
+        leaf — the values become huge (or NaN), as real bit-rot would."""
+        def rot(kp, x):
+            if not _is_memory(kp) or x.dtype != jnp.float32:
+                return x
+            a = np.array(x)
+            flat = a.reshape(-1).view(np.uint32)
+            rng = np.random.default_rng((self.seed << 20) ^ (step + 1))
+            idx = rng.integers(0, flat.size, size=min(n, flat.size))
+            flat[idx] ^= np.uint32(1 << 30)
+            return jnp.asarray(a)
+        return jax.tree_util.tree_map_with_path(rot, params)
+
+    # -------------------------------------------------------------- io faults
+    def io_fault(self) -> bool:
+        """True -> the caller should fail this host read (consumed once)."""
+        for f in self.faults:
+            if not f.fired and f.kind == "read_fail" and self.now >= f.step:
+                f.fired = True
+                return True
+        return False
+
+    # -------------------------------------------------------- exchange faults
+    def exchange_fault(self) -> str | None:
+        """'drop' | 'corrupt' | None.  Persistent once armed — a flaky link
+        stays flaky; healing is the guard demoting away from it."""
+        for f in self.faults:
+            if f.kind in ("drop_chunk", "corrupt_chunk") and self.now >= f.step:
+                return "drop" if f.kind == "drop_chunk" else "corrupt"
+        return None
+
+
+def _is_memory(kp) -> bool:
+    for k in kp:
+        name = getattr(k, "key", getattr(k, "name", None))
+        if name == "memory":
+            return True
+    return False
+
+
+# --------------------------------------------------------- process-global
+#
+# One injector per process, mirroring the other env gates
+# (REPRO_SPARSE_GRADS, REPRO_DIST_EXCHANGE).  The trainer owns its own
+# injector; install() additionally exposes it to the checkpoint manager and
+# the sharded drivers, which have no trainer reference.
+
+ACTIVE: FaultInjector | None = None
+
+
+def install(inj: FaultInjector | None):
+    global ACTIVE
+    ACTIVE = inj
+
+
+def active_injector() -> FaultInjector | None:
+    return ACTIVE
+
+
+def from_env() -> FaultInjector | None:
+    """Build (and install) an injector from ``REPRO_FAULTS`` /
+    ``REPRO_FAULTS_SEED``; None when the env is clean."""
+    spec = os.environ.get("REPRO_FAULTS", "").strip()
+    if not spec:
+        return None
+    inj = FaultInjector(spec, int(os.environ.get("REPRO_FAULTS_SEED", "0")))
+    install(inj)
+    return inj
+
+
+def io_fault() -> bool:
+    """Module-level hook the checkpoint manager consults on every host read."""
+    return ACTIVE is not None and ACTIVE.io_fault()
+
+
+# ------------------------------------------------------- exchange wrapping
+
+class FaultyExchange(exl.Exchange):
+    """Delegates to a real strategy but mangles the first batch chunk of
+    every assembled lookup — the injected form of a flaky inter-rank link.
+    Keeps the base strategy's ``name`` so driver dispatch (and the guard's
+    demotion bookkeeping) see the strategy itself, not the wrapper."""
+
+    def __init__(self, base: exl.Exchange, injector: FaultInjector):
+        self.base = base
+        self.injector = injector
+        self.name = base.name
+        self.partial_updates = base.partial_updates
+
+    def eligible(self, n_flat, n_model):
+        return self.base.eligible(n_flat, n_model)
+
+    def _mangle(self, out, n_model):
+        kind = self.injector.exchange_fault()
+        if kind is None or out.shape[0] == 0:
+            return out
+        c = max(out.shape[0] // max(n_model, 1), 1)
+        if kind == "drop":
+            return out.at[:c].set(jnp.zeros((), out.dtype))
+        if jnp.issubdtype(out.dtype, jnp.floating):
+            return out.at[:c].set(jnp.nan)
+        return out.at[:c].set(jnp.iinfo(out.dtype).max)
+
+    def lookup(self, mem_l, gids, loc_fn, d, n_model, axis="model"):
+        out = self.base.lookup(mem_l, gids, loc_fn, d, n_model, axis)
+        return self._mangle(out, n_model)
+
+    def set_lookup(self, shard, idx, n_model, axis="model"):
+        return self.base.set_lookup(shard, idx, n_model, axis)
+
+    def set_lookup_many(self, shards, idx, n_model, axis="model"):
+        return self.base.set_lookup_many(shards, idx, n_model, axis)
+
+    def reduce_update(self, u, n_model, axis="model"):
+        return self.base.reduce_update(u, n_model, axis)
+
+
+def wrap_exchange(ex: exl.Exchange) -> exl.Exchange:
+    """Driver hook (``sharded_memory._resolve``): wrap the resolved strategy
+    when an installed injector has an armed chunk fault.  The psum oracle is
+    exempt — it is the strategy the guard demotes *to*."""
+    if (ACTIVE is not None and ACTIVE.exchange_fault() is not None
+            and ex.name != "psum"):
+        return FaultyExchange(ex, ACTIVE)
+    return ex

@@ -1,0 +1,36 @@
+"""Health counters for the self-healing training loop.
+
+One mutable :class:`Health` record per Trainer aggregates every resilience
+event the run survived: steps skipped by the non-finite guard, gradient
+non-finites observed, straggler steps, retries, checkpoint rollbacks, pool
+chunks quarantined by the integrity scan, and exchange-strategy demotions.
+``fit()`` surfaces the record in its periodic log lines and merges it into
+the result dict, so a run that healed itself is visibly different from a
+run that never faulted.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class Health:
+    skipped_steps: int = 0        # steps dropped by the non-finite guard
+    nonfinite_grads: int = 0      # skipped steps where the gradient was bad
+    straggler_steps: int = 0      # steps slower than straggler_factor x median
+    retries: int = 0              # retried operations (rollback waits,
+                                  # exchange revalidation attempts)
+    rollbacks: int = 0            # restore-from-checkpoint after K skips
+    quarantined_chunks: int = 0   # pool chunks zeroed by the integrity scan
+    exchange_demotions: int = 0   # strategies demoted down the fallback chain
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def any_faults(self) -> bool:
+        return any(v for v in self.as_dict().values())
+
+    def summary(self) -> str:
+        """Compact ``k=v`` string of the non-zero counters ('' when clean)."""
+        items = [(k, v) for k, v in self.as_dict().items() if v]
+        return " ".join(f"{k}={v}" for k, v in items)

@@ -1,0 +1,131 @@
+"""Pool integrity: chunked checksums, corruption scan, chunk quarantine.
+
+Two complementary defenses for the memory pool (the hash-shared LMA slab,
+where one rotten row poisons a whole semantic neighborhood):
+
+* **In-run scan** (``sanitize`` / ``sanitize_tree``): an on-device pass over
+  every memory leaf, run at each ``ckpt_every`` boundary and after restore.
+  A live pool legitimately changes every step, so there is no reference to
+  checksum against — instead the scan flags chunks holding non-finite or
+  overflow-scale (``> MAX_ABS``) values, the two signatures storage bit-rot
+  leaves on f32 data (an exponent-bit flip lands at ~3e38 or NaN).  Flagged
+  chunks are quarantined: zeroed whole, because under LMA's shared-memory
+  formulation a zero row degrades the model gracefully (tokens mapping there
+  contribute nothing) while a rotten row destroys it.
+
+* **At-rest checksums** (``chunk_checksums`` / ``np_chunk_checksums``): an
+  order-independent uint32 sum of the raw bits of each ``CHUNK``-element
+  chunk, recorded in the checkpoint manifest at save and re-verified at
+  restore.  Wraparound uint32 addition is exact and associative, so the
+  device- and host-computed sums are bit-equal; a mismatched chunk is
+  localized and quarantined instead of failing the whole restore
+  (``CheckpointManager._chunk_repair``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CHUNK = 8192       # elements per integrity chunk (32 KiB of f32)
+MAX_ABS = 1e30     # |x| beyond this is corruption, not training signal
+
+
+def _chunked(x: jax.Array, chunk: int) -> jax.Array:
+    """[(size+pad)/chunk, chunk] view, zero-padded (zeros are clean)."""
+    flat = x.reshape(-1)
+    n = -(-flat.size // chunk)
+    pad = n * chunk - flat.size
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(n, chunk)
+
+
+def _as_u32(c: jax.Array) -> jax.Array:
+    if c.dtype == jnp.float32:
+        return jax.lax.bitcast_convert_type(c, jnp.uint32)
+    if c.dtype in (jnp.int32, jnp.uint32):
+        return c.astype(jnp.uint32)
+    # other widths: canonicalize through f32 (deterministic, not bit-faithful)
+    return jax.lax.bitcast_convert_type(c.astype(jnp.float32), jnp.uint32)
+
+
+def chunk_checksums(x: jax.Array, chunk: int = CHUNK) -> jax.Array:
+    """[n_chunks] uint32 order-independent bit sums (wraparound add)."""
+    return jnp.sum(_as_u32(_chunked(x, chunk)), axis=1, dtype=jnp.uint32)
+
+
+def np_chunk_checksums(a: np.ndarray, chunk: int = CHUNK) -> np.ndarray:
+    """Host twin of :func:`chunk_checksums`, bit-equal on f32/int32 input."""
+    flat = np.ascontiguousarray(a).reshape(-1)
+    if flat.dtype == np.float32:
+        bits = flat.view(np.uint32)
+    elif flat.dtype in (np.int32, np.uint32):
+        bits = flat.astype(np.uint32)
+    else:
+        bits = flat.astype(np.float32).view(np.uint32)
+    n = -(-bits.size // chunk)
+    pad = n * chunk - bits.size
+    if pad:
+        bits = np.concatenate([bits, np.zeros((pad,), np.uint32)])
+    return bits.reshape(n, chunk).sum(axis=1, dtype=np.uint32)
+
+
+def bad_value_chunks(x: jax.Array, chunk: int = CHUNK,
+                     max_abs: float = MAX_ABS) -> jax.Array:
+    """[n_chunks] bool: chunk holds a non-finite or overflow-scale value."""
+    c = _chunked(x, chunk)
+    if not jnp.issubdtype(c.dtype, jnp.floating):
+        return jnp.zeros((c.shape[0],), bool)
+    bad = ~jnp.isfinite(c) | (jnp.abs(c) > max_abs)
+    return jnp.any(bad, axis=1)
+
+
+def quarantine_chunks(x: jax.Array, bad: jax.Array,
+                      chunk: int = CHUNK) -> jax.Array:
+    """Zero every flagged chunk; shape/dtype preserved."""
+    c = _chunked(x, chunk)
+    c = jnp.where(bad[:, None], jnp.zeros((), c.dtype), c)
+    return c.reshape(-1)[: x.size].reshape(x.shape)
+
+
+def np_quarantine_chunks(a: np.ndarray, bad: np.ndarray,
+                         chunk: int = CHUNK) -> np.ndarray:
+    out = np.ascontiguousarray(a).reshape(-1).copy()
+    for i in np.nonzero(bad)[0]:
+        out[i * chunk: (i + 1) * chunk] = 0
+    return out[: a.size].reshape(a.shape)
+
+
+@functools.partial(jax.jit, static_argnums=(1,), static_argnames=("max_abs",))
+def sanitize(x: jax.Array, chunk: int = CHUNK,
+             max_abs: float = MAX_ABS):
+    """-> (clean x, n_bad_chunks scalar).  One fused on-device pass."""
+    bad = bad_value_chunks(x, chunk, max_abs)
+    return quarantine_chunks(x, bad, chunk), jnp.sum(bad.astype(jnp.int32))
+
+
+def _is_memory(kp) -> bool:
+    for k in kp:
+        if getattr(k, "key", getattr(k, "name", None)) == "memory":
+            return True
+    return False
+
+
+def sanitize_tree(params, chunk: int = CHUNK, max_abs: float = MAX_ABS):
+    """Scan + quarantine every memory-pool leaf. -> (params, n_bad int)."""
+    total = 0
+
+    def one(kp, x):
+        nonlocal total
+        if not _is_memory(kp) or not jnp.issubdtype(
+                jnp.asarray(x).dtype, jnp.floating):
+            return x
+        clean, n_bad = sanitize(x, chunk, max_abs=max_abs)
+        total += int(n_bad)
+        return clean
+
+    out = jax.tree_util.tree_map_with_path(one, params)
+    return out, total

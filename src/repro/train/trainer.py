@@ -1,20 +1,42 @@
-"""Generic fault-tolerant training loop.
+"""Generic self-healing training loop.
 
 Works for every model family in the repo: the caller supplies
 ``loss_fn(params, batch) -> (loss, metrics)`` and a host batch iterator.
 
 Fault-tolerance posture (1000+-node design, exercised at container scale):
   * periodic + on-preemption checkpointing through CheckpointManager (atomic,
-    async) — SIGTERM/SIGINT triggers a final save before exit;
+    async) — SIGTERM/SIGINT triggers a final save before exit; a *second*
+    signal restores the default handler so a hung save can still be killed;
   * resume: ``fit`` restores the latest checkpoint (params, opt state, step,
-    data cursor) if one exists, so a killed run continues exactly where it was;
+    data cursor) if one exists, so a killed run continues exactly where it
+    was; a corrupt latest falls back to the previous retained step
+    (``CheckpointManager.restore``);
+  * guarded step (``repro.resilience.guard``): an in-jit all-finite +
+    magnitude check over loss and gradients — dense leaves and SparseGrad
+    values alike.  A poisoned step is *skipped* via ``lax.cond`` (params,
+    opt_state and every moment bit-untouched), counted in ``health``;
+    ``max_consecutive_skips`` skips in a row trigger a rollback to the last
+    checkpoint with bounded exponential backoff.  ``REPRO_GUARD_STEP=0`` or
+    ``TrainerConfig.guard_step=False`` restores the unguarded fast path;
+  * pool integrity (``repro.resilience.integrity``): the memory pool is
+    scanned on-device every ``ckpt_every`` steps and after every restore;
+    chunks holding bit-rot signatures (non-finite / overflow-scale values)
+    are quarantined — zeroed, which LMA's shared-memory formulation degrades
+    under gracefully — and counted in ``health.quarantined_chunks``;
+  * fault injection (``repro.resilience.faults``): a seeded injector
+    (``REPRO_FAULTS`` / the ``faults=`` ctor arg) drives every one of the
+    paths above deterministically in tests;
   * straggler telemetry: per-step wall time ring buffer; steps slower than
-    ``straggler_factor`` x median are counted and reported (on a real mesh this
-    feeds the re-mesh decision — in SPMD a persistent straggler is replaced by
-    checkpoint-restart onto a healthy slice, which is exactly the elastic
-    restore path tested in tests/test_fault_tolerance.py);
-  * data pipeline is index-based (seekable), so restarts do not replay or skip
-    batches.
+    ``straggler_factor`` x median are counted and reported (on a real mesh
+    this feeds the re-mesh decision — in SPMD a persistent straggler is
+    replaced by checkpoint-restart onto a healthy slice, which is exactly
+    the elastic restore path tested in tests/test_fault_tolerance.py);
+  * data pipeline is index-based (seekable), so restarts do not replay or
+    skip batches, and a skipped step still advances the cursor (the faulted
+    batch is dropped, not retried forever).
+
+``fit`` returns one unified result dict on every exit path — step, loss,
+preempted flag, the full health counter set, and throughput stats.
 """
 from __future__ import annotations
 
@@ -22,7 +44,7 @@ import collections
 import dataclasses
 import signal
 import time
-from typing import Callable, Iterator, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +52,11 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.optim import sparse as sparse_lib
-from repro.optim.optimizers import Optimizer, apply_updates
+from repro.optim.optimizers import Optimizer
+from repro.resilience import faults as faults_lib
+from repro.resilience import guard as guard_lib
+from repro.resilience import integrity as integ_lib
+from repro.resilience.health import Health
 
 
 def throughput_stats(step_times, lookups_per_step: int = 0) -> dict:
@@ -64,12 +90,21 @@ class TrainerConfig:
     # embedding-row lookups one step performs (B * F for field models);
     # feeds the lookups_per_sec throughput stat when set
     lookups_per_step: int = 0
+    # --- resilience ---
+    guard_step: Optional[bool] = None   # None -> REPRO_GUARD_STEP (default on)
+    max_abs_grad: float = guard_lib.MAX_ABS_GRAD
+    max_consecutive_skips: int = 3      # skips in a row before rollback
+    rollback_backoff: float = 0.05      # first rollback wait (seconds)
+    rollback_backoff_max: float = 5.0   # backoff ceiling
+    max_rollbacks: int = 8              # then give up (RuntimeError)
+    verify_pool: bool = True            # integrity scan at ckpt boundaries
 
 
 class Trainer:
     def __init__(self, cfg: TrainerConfig, loss_fn: Callable, params,
                  optimizer: Optimizer, batch_fn: Callable[[int], dict],
-                 donate: bool = True, sparse_grads: bool | None = None):
+                 donate: bool = True, sparse_grads: bool | None = None,
+                 faults: faults_lib.FaultInjector | None = None):
         """``batch_fn(step) -> host batch dict`` (seekable by step).
 
         ``sparse_grads=None`` auto-enables the sparse-gradient pipeline
@@ -78,6 +113,10 @@ class Trainer:
         slots and the optimizers route it to the O(K) lazy update — exact
         for Adagrad / momentum-less SGD.  ``REPRO_SPARSE_GRADS=0`` (or
         ``sparse_grads=False``) keeps the dense O(m) path as the oracle.
+
+        ``faults=None`` builds an injector from ``REPRO_FAULTS`` when set;
+        pass an explicit :class:`repro.resilience.faults.FaultInjector` to
+        drive fault drills programmatically.
         """
         self.cfg = cfg
         self.loss_fn = loss_fn
@@ -91,28 +130,39 @@ class Trainer:
         self._preempted = False
         self._step_times: collections.deque[float] = collections.deque(
             maxlen=256)
-        self.straggler_steps = 0
+        self.health = Health()
+        self._consecutive_skips = 0
+        self.faults = faults if faults is not None else faults_lib.from_env()
+        if faults is not None:
+            faults_lib.install(faults)  # manager/driver hooks see it too
         if sparse_grads is None:
             sparse_grads = (sparse_lib.sparse_enabled()
                             and sparse_lib.has_memory(params))
         self.sparse_grads = sparse_grads
-        vg = (sparse_lib.sparse_value_and_grad(loss_fn) if sparse_grads
-              else jax.value_and_grad(loss_fn, has_aux=True))
+        self._has_pool = sparse_lib.has_memory(params)
+        self.guard = (cfg.guard_step if cfg.guard_step is not None
+                      else guard_lib.guard_enabled())
+        self._jit_step = guard_lib.make_step(
+            loss_fn, optimizer, sparse_grads=sparse_grads, guard=self.guard,
+            donate=donate, max_abs_grad=cfg.max_abs_grad)
 
-        def _train_step(params, opt_state, batch):
-            (loss, metrics), grads = vg(params, batch)
-            updates, opt_state = optimizer.update(grads, opt_state, params)
-            params = apply_updates(params, updates)
-            return params, opt_state, loss, metrics
+    # back-compat: straggler count predates the Health record
+    @property
+    def straggler_steps(self) -> int:
+        return self.health.straggler_steps
 
-        # donation intact under sparse grads: the O(K) scatters write
-        # in-place into the donated pool / moment buffers
-        self._jit_step = jax.jit(
-            _train_step, donate_argnums=(0, 1) if donate else ())
+    @straggler_steps.setter
+    def straggler_steps(self, v: int):
+        self.health.straggler_steps = v
 
     # ------------------------------------------------------------ preemption
     def install_signal_handlers(self):
         def handler(signum, frame):
+            if self._preempted:
+                # second signal: the graceful path is presumably hung on a
+                # save — give the user back a killable process
+                signal.signal(signum, signal.SIG_DFL)
+                return
             self._preempted = True
 
         signal.signal(signal.SIGTERM, handler)
@@ -133,7 +183,12 @@ class Trainer:
                           blocking=blocking or not self.cfg.async_ckpt)
 
     def try_resume(self) -> bool:
-        if not self.mgr or self.mgr.latest_step() is None:
+        if not self.mgr:
+            return False
+        # an in-flight async save must land before we look for "latest" —
+        # otherwise restore races the writer (and can read a half-renamed dir)
+        self.mgr.wait()
+        if self.mgr.latest_step() is None:
             return False
         _, state = self.mgr.restore()
         # serialization flattens NamedTuples (AdamState etc.) to plain tuples;
@@ -141,6 +196,10 @@ class Trainer:
         self.params = _restore_like(self.params, state["params"])
         self.opt_state = _restore_like(self.opt_state, state["opt_state"])
         self.step = int(np.asarray(state["step"]))
+        report = self.mgr.last_restore_report
+        self.health.quarantined_chunks += report.get("quarantined_chunks", 0)
+        if self.cfg.verify_pool and self._has_pool:
+            self._verify_pool()
         return True
 
     # ------------------------------------------------------------------- fit
@@ -153,32 +212,102 @@ class Trainer:
             if self._preempted:
                 log(f"[trainer] preempted at step {self.step}; checkpointing")
                 self.save(blocking=True)
-                return {"step": self.step, "loss": last_loss,
-                        "preempted": True, **self.throughput()}
+                return self._result(last_loss, preempted=True)
+            if self.faults:
+                self.faults.pre_step(self, self.step)
+                if self._preempted:
+                    continue
             batch = self.batch_fn(self.step)
+            fault = self.faults.grad_fault(self.step) if self.faults else 1.0
+            delay = self.faults.step_delay(self.step) if self.faults else 0.0
             t0 = time.perf_counter()
-            self.params, self.opt_state, loss, metrics = self._jit_step(
-                self.params, self.opt_state, batch)
+            if delay:
+                time.sleep(delay)  # inside the timed region: a straggler
+            self.params, self.opt_state, loss, metrics, ok, grads_ok = \
+                self._jit_step(self.params, self.opt_state, batch,
+                               np.float32(fault))
             loss.block_until_ready()
             dt = time.perf_counter() - t0
             self._track_straggler(dt)
-            last_loss = float(loss)
+            if bool(ok):
+                self._consecutive_skips = 0
+                last_loss = float(loss)
+            else:
+                self.health.skipped_steps += 1
+                if not bool(grads_ok):
+                    self.health.nonfinite_grads += 1
+                self._consecutive_skips += 1
+                log(f"[trainer] step {self.step} non-finite; skipped "
+                    f"(state untouched, {self._consecutive_skips} in a row)")
             self.step += 1
             if self.cfg.log_every and self.step % self.cfg.log_every == 0:
                 tp = self.throughput()
                 lk = (f" {tp['lookups_per_sec']:,.0f} lookups/s"
                       if self.cfg.lookups_per_step else "")
+                hb = self.health.summary()
                 log(f"[trainer] step {self.step} loss {last_loss:.4f} "
-                    f"({dt*1e3:.1f} ms, {tp['steps_per_sec']:.1f} steps/s{lk})")
-            if (self.mgr and self.cfg.ckpt_every
-                    and self.step % self.cfg.ckpt_every == 0):
-                self.save(blocking=False)
+                    f"({dt*1e3:.1f} ms, {tp['steps_per_sec']:.1f} steps/s{lk})"
+                    + (f" [health: {hb}]" if hb else ""))
+            if self._consecutive_skips >= self.cfg.max_consecutive_skips:
+                self._rollback(log)
+                continue
+            if (self.cfg.ckpt_every and self.step % self.cfg.ckpt_every == 0):
+                if self.cfg.verify_pool and self._has_pool:
+                    self._verify_pool(log)
+                if self.mgr:
+                    self.save(blocking=False)
         if self.mgr:
             self.save(blocking=True)
             self.mgr.wait()
-        return {"step": self.step, "loss": last_loss, "preempted": False,
-                "straggler_steps": self.straggler_steps,
-                **self.throughput()}
+        return self._result(last_loss, preempted=False)
+
+    def _result(self, last_loss: float, preempted: bool) -> dict:
+        # one constructor for every exit path: the preempted dict used to
+        # silently drop straggler_steps (and would have dropped the health
+        # counters), breaking dashboards that key on them
+        return {"step": self.step, "loss": last_loss, "preempted": preempted,
+                **self.health.as_dict(), **self.throughput()}
+
+    # ------------------------------------------------------------ resilience
+    def _verify_pool(self, log: Callable[[str], None] = print):
+        """On-device integrity scan over every memory leaf; quarantine
+        (zero) chunks carrying bit-rot signatures.  Zero rows degrade
+        gracefully under LMA — callers measure the accuracy dent instead of
+        crashing (tests/test_resilience.py does, on the CTR smoke model).
+        The optimizer's pool moments are scanned too: a rotten accumulator
+        chunk poisons every later update it scales (a zeroed one merely
+        restarts accumulation)."""
+        self.params, n_bad = integ_lib.sanitize_tree(self.params)
+        self.opt_state, n_bad_opt = integ_lib.sanitize_tree(self.opt_state)
+        n_bad += n_bad_opt
+        if n_bad:
+            self.health.quarantined_chunks += n_bad
+            log(f"[trainer] pool integrity: quarantined {n_bad} corrupt "
+                f"chunk(s) at step {self.step}")
+
+    def _rollback(self, log: Callable[[str], None] = print):
+        """K consecutive skipped steps: restore the last checkpoint and
+        retry from there, with bounded exponential backoff between attempts;
+        give up (loudly) after ``max_rollbacks``."""
+        self._consecutive_skips = 0
+        self.health.rollbacks += 1
+        if self.health.rollbacks > self.cfg.max_rollbacks:
+            raise RuntimeError(
+                f"giving up after {self.cfg.max_rollbacks} rollbacks: "
+                "training cannot make progress (persistent non-finite steps)")
+        if not self.mgr or self.mgr.latest_step() is None:
+            log("[trainer] consecutive non-finite steps but no checkpoint "
+                "to roll back to; continuing")
+            return
+        delay = min(self.cfg.rollback_backoff
+                    * (2 ** (self.health.rollbacks - 1)),
+                    self.cfg.rollback_backoff_max)
+        time.sleep(delay)
+        self.health.retries += 1
+        self.try_resume()
+        log(f"[trainer] rolled back to step {self.step} after "
+            f"{self.cfg.max_consecutive_skips} consecutive skipped steps "
+            f"(backoff {delay*1e3:.0f} ms)")
 
     def throughput(self) -> dict:
         """steps/s + lookups/s from the step wall-time ring buffer — the
@@ -190,4 +319,4 @@ class Trainer:
         if len(self._step_times) >= 16:
             med = float(np.median(self._step_times))
             if dt > self.cfg.straggler_factor * med:
-                self.straggler_steps += 1
+                self.health.straggler_steps += 1

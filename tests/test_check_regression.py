@@ -159,3 +159,34 @@ def test_committed_baseline_passes_sparse_update_gate():
     assert doc["modeled_update_bytes_per_step"]["speedup"] >= 3.0
     assert rows[("sparse_update_adagrad", shape)] < \
         rows[("dense_update_adagrad", shape)]
+
+
+def test_guard_overhead_gate_logic():
+    """The resilience-layer gate: guarded/unguarded train step <= 1.05x at
+    the paper shape; missing rows are flagged (the gate must not silently
+    pass when the bench didn't run)."""
+    from benchmarks.check_regression import (GUARD_GATE_SHAPE,
+                                             guard_overhead_failures)
+    ok = {("train_step_guarded", GUARD_GATE_SHAPE): 100.0,
+          ("train_step_unguarded", GUARD_GATE_SHAPE): 98.0}
+    assert guard_overhead_failures(ok) == []
+    slow = dict(ok)
+    slow[("train_step_guarded", GUARD_GATE_SHAPE)] = 110.0   # 1.122x
+    fails = guard_overhead_failures(slow)
+    assert any("overhead" in f and "1.12" in f for f in fails)
+    fails = guard_overhead_failures({})
+    assert any("cannot run" in f for f in fails)
+
+
+def test_committed_baseline_passes_guard_gate():
+    """This PR's acceptance artifact: both step rows are in the committed
+    ledger and the guarded step is within 5% of the unguarded one."""
+    from benchmarks.check_regression import (GUARD_GATE_SHAPE,
+                                             guard_overhead_failures)
+    with open(BASELINE) as f:
+        doc = json.load(f)
+    rows = load_rows(doc)
+    assert ("train_step_guarded", GUARD_GATE_SHAPE) in rows
+    assert ("train_step_unguarded", GUARD_GATE_SHAPE) in rows
+    assert guard_overhead_failures(rows, doc) == []
+    assert doc["guarded_step_overhead"]["overhead"] <= 1.05

@@ -148,3 +148,121 @@ if HAVE_HYPOTHESIS:
 else:
     def test_property_flatten_unflatten_roundtrip():
         pytest.importorskip("hypothesis")
+
+
+# -------------------------------------------------- self-healing restore
+
+def _pool_tree(seed=0, m=3 * 8192):
+    """A tree with an integrity-covered memory-pool leaf (> 1 chunk)."""
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"memory": jnp.asarray(
+            rng.normal(0, 0.1, (m,)).astype(np.float32)),
+            "w": jnp.asarray(rng.normal(0, 1, (4, 3)).astype(np.float32))},
+        "step": jnp.asarray(seed, jnp.int32),
+    }
+
+
+def test_restore_falls_back_on_truncated_latest(tmp_path):
+    """A torn/truncated arrays.npz in the latest checkpoint is not fatal:
+    restore walks back to the previous retained step."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, _tree(1))
+    mgr.save(2, _tree(2))
+    npz = os.path.join(tmp_path, "step_0000000002", "arrays.npz")
+    with open(npz, "r+b") as f:
+        f.truncate(os.path.getsize(npz) // 2)
+    step, restored = mgr.restore()
+    assert step == 1
+    _assert_tree_equal(_tree(1), restored)
+    assert mgr.last_restore_report["fell_back_from"] == 2
+
+    # with the only checkpoint torn, restore raises (listing what it tried)
+    mgr2 = CheckpointManager(str(tmp_path / "solo"), keep=3)
+    mgr2.save(7, _tree(7))
+    npz = os.path.join(tmp_path, "solo", "step_0000000007", "arrays.npz")
+    with open(npz, "r+b") as f:
+        f.truncate(10)
+    with pytest.raises(IOError, match="no restorable checkpoint"):
+        mgr2.restore()
+
+
+def test_explicit_step_never_falls_back(tmp_path):
+    """restore(step=N) means those exact bytes: corruption raises even when
+    older healthy steps exist."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, _tree(1))
+    mgr.save(2, _tree(2))
+    npz = os.path.join(tmp_path, "step_0000000002", "arrays.npz")
+    with open(npz, "r+b") as f:
+        f.truncate(10)
+    with pytest.raises(Exception):
+        mgr.restore(step=2)
+    step, _ = mgr.restore(step=1)      # older one still explicitly loadable
+    assert step == 1
+
+
+def test_chunk_repair_quarantines_pool_corruption(tmp_path):
+    """Bit-flips inside an integrity-covered pool leaf are repaired in place
+    (mismatched chunks zeroed) instead of discarding the checkpoint."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    tree = _pool_tree(3)
+    mgr.save(3, tree)
+    npz = os.path.join(tmp_path, "step_0000000003", "arrays.npz")
+    with np.load(npz) as z:
+        host = {k: z[k].copy() for k in z.files}
+    host["params/memory"][8192 + 5] += 1.0     # rot inside chunk 1
+    np.savez(npz, **host)
+    step, restored = mgr.restore()
+    assert step == 3
+    mem = np.asarray(restored["params"]["memory"])
+    want = np.asarray(tree["params"]["memory"])
+    np.testing.assert_array_equal(mem[:8192], want[:8192])         # chunk 0
+    assert (mem[8192:2 * 8192] == 0).all()                         # quarantined
+    np.testing.assert_array_equal(mem[2 * 8192:], want[2 * 8192:])  # chunk 2
+    assert mgr.last_restore_report == {
+        "quarantined_chunks": 1, "repaired_leaves": ["params/memory"],
+        "fell_back_from": None}
+
+
+def test_non_pool_corruption_falls_back(tmp_path):
+    """Corruption in a leaf with no chunk integrity (a dense weight) cannot
+    be repaired -> fall back to the previous step."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, _pool_tree(1))
+    mgr.save(2, _pool_tree(2))
+    npz = os.path.join(tmp_path, "step_0000000002", "arrays.npz")
+    with np.load(npz) as z:
+        host = {k: z[k].copy() for k in z.files}
+    host["params/w"][0, 0] += 1.0
+    np.savez(npz, **host)
+    step, restored = mgr.restore()
+    assert step == 1
+    assert mgr.last_restore_report["fell_back_from"] == 2
+
+
+def test_save_refuses_nonfinite(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    tree = _tree()
+    tree["params"]["w"] = tree["params"]["w"].at[0, 0].set(jnp.nan)
+    with pytest.raises(ValueError, match="refusing to persist non-finite"):
+        mgr.save(1, tree)
+    assert mgr.latest_step() is None
+    mgr.save(1, tree, check_finite=False)      # explicit debug override
+    assert mgr.latest_step() == 1
+
+
+def test_injected_read_failure_falls_back(tmp_path):
+    """A read_fail fault makes the next host read raise -> restore falls
+    back to the previous retained step."""
+    from repro.resilience import faults as flt
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, _tree(1))
+    mgr.save(2, _tree(2))
+    flt.install(flt.FaultInjector("read_fail@0"))
+    try:
+        step, restored = mgr.restore()
+        assert step == 1
+        assert mgr.last_restore_report["fell_back_from"] == 2
+    finally:
+        flt.install(None)

@@ -112,3 +112,82 @@ def test_straggler_telemetry():
     t._track_straggler(0.200)        # 20x median -> straggler
     t._track_straggler(0.012)        # normal
     assert t.straggler_steps == 1
+
+
+# ----------------------------------------------------- step-exact resume
+#
+# The strongest resume contract: N steps + preempt + restore + N more steps
+# must be BIT-identical (params and every optimizer moment) to 2N
+# uninterrupted steps — across the dense path and both sparse-gradient
+# layouts (hashed_row: unique sorted indices; lma striped: bucketed
+# unique=False streams).
+
+def _embed_problem(kind):
+    from repro.core.signatures import synthetic_dense_store
+    from repro.embed import EmbeddingTable, get_scheme
+
+    vocab, d, m = 512, 16, 4096          # m % d == 0 -> lma runs striped
+    scheme = get_scheme(kind)
+    table = EmbeddingTable(scheme.build_config((vocab,), d, m, seed=3))
+    store = (synthetic_dense_store(vocab, 64, max_set=16, seed=2)
+             if scheme.buffer_source == "signatures" else None)
+    bufs = table.make_buffers(store)
+    rng = np.random.default_rng(1)
+    Y = rng.normal(size=(vocab, d)).astype(np.float32)
+
+    def batch_fn(step):
+        r = np.random.default_rng(step)
+        ids = r.integers(0, vocab, (64,), np.int32)
+        return {"ids": jnp.asarray(ids), "y": jnp.asarray(Y[ids])}
+
+    def loss_fn(params, batch):
+        e = table.embed(params["embedding"], bufs, 0, batch["ids"])
+        return jnp.mean((e - batch["y"]) ** 2), {}
+
+    return loss_fn, batch_fn, lambda: {"embedding": table.init(
+        jax.random.key(0))}
+
+
+def _resume_parity(tmp_path, loss_fn, batch_fn, fresh_params, opt, n=6):
+    def make(total):
+        cfg = TrainerConfig(total_steps=total, ckpt_dir=str(tmp_path),
+                            ckpt_every=1000, log_every=0)
+        return Trainer(cfg, loss_fn, fresh_params(), opt, batch_fn)
+
+    # interrupted: the preempt flag is checked at the top of the loop, so
+    # the step that raises it still completes -> checkpoint lands at n+1
+    t1 = make(2 * n)
+    t1.batch_fn = lambda s: (t1.preempt() if s == n else None) or batch_fn(s)
+    out1 = t1.fit(log=lambda *_: None)
+    assert out1["preempted"] and out1["step"] == n + 1
+    t2 = make(2 * n)
+    out2 = t2.fit(log=lambda *_: None)
+    assert out2["step"] == 2 * n and not out2["preempted"]
+
+    # uninterrupted oracle
+    t_full = Trainer(TrainerConfig(total_steps=2 * n, log_every=0),
+                     loss_fn, fresh_params(), opt, batch_fn)
+    t_full.fit(log=lambda *_: None)
+
+    for got, want in ((t2.params, t_full.params),
+                      (t2.opt_state, t_full.opt_state)):
+        for a, b in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(want)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_parity_dense(tmp_path):
+    loss_fn, batch_fn, params = _problem()
+    _resume_parity(tmp_path, loss_fn, batch_fn,
+                   lambda: {"w": jnp.zeros((8, 1), jnp.float32)},
+                   opt_lib.adam(5e-2))
+
+
+def test_resume_parity_sparse_hashed_row(tmp_path):
+    loss_fn, batch_fn, fresh = _embed_problem("hashed_row")
+    _resume_parity(tmp_path, loss_fn, batch_fn, fresh, opt_lib.adagrad(0.1))
+
+
+def test_resume_parity_sparse_lma_striped(tmp_path):
+    loss_fn, batch_fn, fresh = _embed_problem("lma")
+    _resume_parity(tmp_path, loss_fn, batch_fn, fresh, opt_lib.adagrad(0.1))
