@@ -348,6 +348,198 @@ def bench_guarded_step(rows: list, out: list) -> dict:
     return doc
 
 
+def bench_tiered(rows: list, out: list) -> dict:
+    """Cost of the tiered store (``repro.tier``) at the paper shape: an
+    m=2^21 pool under a quarter-pool HBM budget (512-slot blocks), head-heavy
+    CTR traffic routed by the ``freq`` scheme.
+
+    ``tiered_lookup_hot`` / ``tiered_lookup_cold``
+        the compact-pool gather (``remap_locations`` binary search +
+        ``jnp.take``) with every touched block resident in the hot slab vs
+        landing in the stage region — the device-side tax of tiering, paid
+        on every lookup.  Both are asserted bit-identical to the full-pool
+        gather before timing.
+    ``host_fetch_bandwidth``
+        one staged-buffer ``jax.device_put`` (the async prefetch's copy) —
+        the host->HBM bandwidth the cold tier's real price is set by.
+    ``train_step_tiered`` / ``train_step_resident``
+        the end-to-end comparison behind
+        ``check_regression.tiered_slowdown_failures``: a full adagrad train
+        step driven through the TierController (writeback + EMA observe +
+        stage + install + compact-pool step) vs the same model on the
+        fully-resident pool.  Interleaved timing, like the guard bench.
+    """
+    from repro.data.synthetic_ctr import CTRGenerator, CTRSpec
+    from repro.embed import EmbeddingTable, get_scheme
+    from repro.optim import optimizers as opt_lib
+    from repro.tier import TierController, TieredStore, remap_locations, \
+        split_batch
+
+    m, B, d, block = 1 << 21, 4096, 32, 512
+    n_blocks = m // block
+    hot_budget_slots = m // 4
+    shape = f"{B}x{d}@m=2^21"
+    rng = np.random.default_rng(13)
+    scheme = get_scheme("freq")
+    fcfg = scheme.build_config((65536,), d, m, seed=5)
+    table = EmbeddingTable(fcfg)
+
+    # head-heavy CTR traffic over a 2048-id field: the ~1k hot ids own
+    # dedicated head rows, the tail row-hashes into a recurring working set
+    # — the skew the observed-count re-tiering is built to exploit
+    spec = CTRSpec(n_fields=1, n_dense=0, vocab_sizes=(2048,), seed=3)
+    gen = CTRGenerator(spec)
+    sample = np.concatenate([gen.batch(B, s)["sparse"][:, 0]
+                             for s in range(4)])
+    bufs = table.make_buffers(
+        np.bincount(sample, minlength=fcfg.total_vocab).astype(np.int64))
+    locate = jax.jit(lambda g: scheme.locations(fcfg, bufs, g))
+    loc_s = np.asarray(locate(jnp.asarray(sample, jnp.int32)))
+    blocks_s, counts_s = np.unique(loc_s // block, return_counts=True)
+    bcounts = np.zeros(n_blocks, np.float64)
+    bcounts[blocks_s] = counts_s
+
+    # stage capacity: worst observed cold-touch count under the seeded hot
+    # set, with 2x headroom for post-retier drift (overflow raises — the
+    # store's honest failure mode — so a blown margin fails loudly)
+    order = np.lexsort((np.arange(n_blocks), -bcounts))
+    hot_preview = np.sort(order[: hot_budget_slots // block])
+    worst = 1
+    for s in range(8):
+        loc = np.asarray(locate(jnp.asarray(
+            gen.batch(B, 100 + s)["sparse"][:, 0], jnp.int32)))
+        worst = max(worst, np.setdiff1d(np.unique(loc // block),
+                                        hot_preview).size)
+    cap = 2 * worst + 8
+
+    emb0 = table.init(jax.random.key(1))
+    full = emb0["memory"]
+    st = TieredStore(np.asarray(full), hot_budget_slots, block=block,
+                     stage_blocks=cap, counts=bcounts)
+    gather = jax.jit(lambda c, l, h, s_, b: jnp.take(
+        c, remap_locations(l, h, s_, b)))
+
+    # hot: every location in a resident block (remap overhead only)
+    off = rng.integers(0, block, (B, d))
+    loc_hot = jnp.asarray(
+        st.hot_ids[rng.integers(0, st.hot_ids.size, (B, d))] * block + off,
+        jnp.int32)
+    compact = st.initial_compact()
+    tb = st.batch_tier_buffers()
+    args_hot = (compact, loc_hot, tb["tier_hot_ids"], tb["tier_stage_ids"],
+                tb["tier_block"])
+    np.testing.assert_array_equal(np.asarray(gather(*args_hot)),
+                                  np.asarray(jnp.take(full, loc_hot)))
+    us_hot = time_fn(gather, *args_hot)
+
+    # cold: every location in a staged block (same device math — the remap
+    # is membership-oblivious; the cold tier's real cost is the host fetch)
+    cold_all = np.setdiff1d(np.arange(n_blocks), st.hot_ids)
+    sel = np.sort(rng.choice(cold_all, size=min(cap, cold_all.size),
+                             replace=False))
+    loc_cold = jnp.asarray(
+        sel[rng.integers(0, sel.size, (B, d))] * block + off, jnp.int32)
+    st.stage(sel)
+    compact = st.install({"memory": compact})["memory"]
+    tb = st.batch_tier_buffers()
+    args_cold = (compact, loc_cold, tb["tier_hot_ids"], tb["tier_stage_ids"],
+                 tb["tier_block"])
+    np.testing.assert_array_equal(np.asarray(gather(*args_cold)),
+                                  np.asarray(jnp.take(full, loc_cold)))
+    us_cold = time_fn(gather, *args_cold)
+    us_plain = time_fn(jax.jit(lambda m_, l: jnp.take(m_, l)), full, loc_hot)
+    rows.append(("tiered_lookup_hot", shape, round(us_hot, 1)))
+    rows.append(("tiered_lookup_cold", shape, round(us_cold, 1)))
+    out.append(
+        f"kernels tiered_lookup {shape}: hot {us_hot:.0f} us / cold "
+        f"{us_cold:.0f} us vs full-pool take {us_plain:.0f} us "
+        f"(remap adds {us_hot - us_plain:+.0f} us; both bit-exact)")
+
+    # host->device staging bandwidth: the async prefetch's device_put
+    sbuf = np.zeros((1024, block), np.float32)
+    us_fetch = time_fn(jax.device_put, sbuf)
+    gbps = sbuf.nbytes / (us_fetch / 1e6) / 1e9
+    rows.append(("host_fetch_bandwidth", f"1024x{block}@f32",
+                 round(us_fetch, 1)))
+    out.append(f"kernels host_fetch_bandwidth: {sbuf.nbytes / 2**20:.0f} MiB "
+               f"staged in {us_fetch:.0f} us ({gbps:.1f} GB/s host->device)")
+
+    # end-to-end: controller-driven tiered train step vs resident twin
+    st2 = TieredStore(np.asarray(full), hot_budget_slots, block=block,
+                      stage_blocks=cap, counts=bcounts)
+    y = jnp.asarray(rng.normal(size=(B, d)).astype(np.float32))
+
+    def raw_batch_fn(i):
+        return {"ids": jnp.asarray(gen.batch(B, i)["sparse"][:, 0],
+                                   jnp.int32), "y": y}
+
+    ctrl = TierController(st2, raw_batch_fn, lambda b: locate(b["ids"]),
+                          retier_every=8)
+    opt = opt_lib.adagrad(0.05)
+
+    def make_step(loss):
+        def step(p, s_, batch):
+            g = jax.grad(loss)(p, batch)
+            u, s_ = opt.update(g, s_, p)
+            return opt_lib.apply_updates(p, u), s_
+        return jax.jit(step, donate_argnums=(0, 1))
+
+    def loss_tiered(p, batch):
+        clean, tier = split_batch(batch)
+        e = table.embed(p["embedding"], {**bufs, **tier}, 0, clean["ids"])
+        return jnp.mean((e - clean["y"]) ** 2)
+
+    def loss_res(p, batch):
+        e = table.embed(p["embedding"], bufs, 0, batch["ids"])
+        return jnp.mean((e - batch["y"]) ** 2)
+
+    step_t, step_r = make_step(loss_tiered), make_step(loss_res)
+    params_t = {"embedding": {"memory": st2.initial_compact()}}
+    params_r = {"embedding": {"memory": jnp.asarray(np.asarray(full))}}
+    opt_t, opt_r = opt.init(params_t), opt.init(params_r)
+
+    import time
+    warm, iters = 4, 12
+    samples = {"train_step_tiered": [], "train_step_resident": []}
+    for i in range(warm + iters):
+        t0 = time.perf_counter()
+        params_t, opt_t, _ = ctrl.pre_step(i, params_t, opt_t)
+        params_t, opt_t = step_t(params_t, opt_t, ctrl.batch_fn(i))
+        jax.block_until_ready(params_t)
+        if i >= warm:
+            samples["train_step_tiered"].append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        params_r, opt_r = step_r(params_r, opt_r, raw_batch_fn(i))
+        jax.block_until_ready(params_r)
+        if i >= warm:
+            samples["train_step_resident"].append(time.perf_counter() - t0)
+    us = {n: float(np.median(s) * 1e6) for n, s in samples.items()}
+    for name in ("train_step_tiered", "train_step_resident"):
+        rows.append((name, shape, round(us[name], 1)))
+    slowdown = us["train_step_tiered"] / max(us["train_step_resident"], 1e-9)
+    s2 = st2.stats
+    staged = s2["staged_blocks"] / max(s2["stage_steps"], 1)
+    doc = {"tiered_us": round(us["train_step_tiered"], 1),
+           "resident_us": round(us["train_step_resident"], 1),
+           "slowdown": round(slowdown, 4),
+           "hot_rows": st2.hot_slots, "cold_rows": m - st2.hot_slots,
+           "stage_capacity_blocks": int(cap),
+           "staged_blocks_per_step": round(staged, 1),
+           "host_fetch_bytes_per_step": int(
+               s2["host_fetch_bytes"] / max(s2["stage_steps"], 1)),
+           "host_fetch_gbps": round(gbps, 2),
+           "lookup_hot_us": round(us_hot, 1),
+           "lookup_cold_us": round(us_cold, 1)}
+    out.append(
+        f"kernels tiered train step {shape}: tiered "
+        f"{us['train_step_tiered']:.0f} us vs resident "
+        f"{us['train_step_resident']:.0f} us ({slowdown:.2f}x; hot "
+        f"{st2.hot_slots / 2**18:.1f} MiB of {m / 2**18:.0f} MiB pool, "
+        f"{staged:.0f} blocks staged/step, "
+        f"{doc['host_fetch_bytes_per_step'] / 2**10:.0f} KiB host fetch/step)")
+    return doc
+
+
 def bench_dedup_sort(rows: list, out: list) -> None:
     """The SparseGrad construction tax, swept over K = B*d in 2^13..2^17,
     three ways on the SAME striped locations:
@@ -500,6 +692,7 @@ def run() -> list[str]:
 
     upd_bytes = bench_sparse_update(rows, out)
     guard_doc = bench_guarded_step(rows, out)
+    tier_doc = bench_tiered(rows, out)
     bench_dedup_sort(rows, out)
     bench_scheme_sweep(rows, out)
 
@@ -542,6 +735,7 @@ def run() -> list[str]:
                    "modeled_hbm_bytes_per_lookup": hbm,
                    "modeled_update_bytes_per_step": upd_bytes,
                    "guarded_step_overhead": guard_doc,
+                   "tiered": tier_doc,
                    "sharded_lookup": sharded}, f, indent=1)
     out.append(f"kernels -> {jpath}")
     return out

@@ -14,9 +14,12 @@ a flipped 16x16 lma train cell stops recording ``sparse_grads: true``
 (``dedup_speedup_failures``), when the sharded lookup
 loses the exchange layer's win (``sharded_gap_failures``: best-strategy
 sharded/replicated wall-clock <= 2.5x at 8 devices AND ring or all_to_all
-strictly beating psum), or when the resilience layer's non-finite step
+strictly beating psum), when the resilience layer's non-finite step
 guard costs more than 5% over the unguarded train step
-(``guard_overhead_failures``).  New rows are allowed (they become baseline
+(``guard_overhead_failures``), or when the tiered train step
+(``repro.tier``: quarter-pool HBM budget, controller-driven staging) falls
+more than 2x behind the fully-resident step
+(``tiered_slowdown_failures``).  New rows are allowed (they become baseline
 once committed).
 
 Usage:
@@ -76,6 +79,14 @@ SHARDED_GAP_MAX = 2.5
 # paper shape — always-on protection has to be affordable or nobody runs it
 GUARD_OVERHEAD_MAX = 1.05
 GUARD_GATE_SHAPE = "4096x32@m=2^21"
+# the tiered train step (repro.tier: quarter-pool HBM budget, controller-
+# driven stage/writeback/re-tier — bench_kernels.bench_tiered) must stay
+# within this factor of the fully-resident step at the paper shape.  On
+# XLA:CPU the remap binary search dominates (measured ~1.4x); the gate's 2x
+# bound catches the real regressions — a remap that stops vectorizing, or
+# staging that degrades to synchronous whole-pool copies
+TIERED_SLOWDOWN_MAX = 2.0
+TIER_GATE_SHAPE = "4096x32@m=2^21"
 
 
 def load_rows(path_or_doc) -> dict[tuple[str, str], float]:
@@ -265,6 +276,37 @@ def guard_overhead_failures(fresh: dict, fresh_doc: dict | None = None,
     return []
 
 
+def tiered_slowdown_failures(fresh: dict, fresh_doc: dict | None = None,
+                             max_slowdown: float = None) -> list[str]:
+    """The tiered store's affordability bound: the controller-driven tiered
+    train step (``bench_kernels.bench_tiered`` — writeback + EMA observe +
+    async stage + install + compact-pool step) must stay within
+    ``TIERED_SLOWDOWN_MAX`` of the fully-resident step at the paper shape.
+    A pool that exceeds the HBM budget has no resident option at all, but
+    tiering that costs more than this would push users back to sharding
+    even when one device's host memory could hold the pool."""
+    if max_slowdown is None:
+        max_slowdown = TIERED_SLOWDOWN_MAX
+    key_t = ("train_step_tiered", TIER_GATE_SHAPE)
+    key_r = ("train_step_resident", TIER_GATE_SHAPE)
+    missing = [k for k, s in (key_t, key_r) if (k, s) not in fresh]
+    if missing:
+        return [f"{'/'.join(missing)} [{TIER_GATE_SHAPE}] missing from the "
+                "fresh ledger (the tiered-slowdown gate cannot run)"]
+    failures = []
+    tiered, resident = fresh[key_t], fresh[key_r]
+    ratio = tiered / max(resident, 1e-9)
+    if ratio > max_slowdown:
+        failures.append(
+            f"tiered train step slowdown {ratio:.2f}x > {max_slowdown:.2f}x "
+            f"(tiered {tiered:.1f} us vs resident {resident:.1f} us at "
+            f"{TIER_GATE_SHAPE}) — the tiered store got too expensive")
+    if fresh_doc is not None and not fresh_doc.get("tiered"):
+        failures.append("tiered block missing from the fresh ledger "
+                        "(bench_tiered's summary stopped being recorded)")
+    return failures
+
+
 def compare(baseline: dict, fresh: dict,
             max_ratio: float = MAX_RATIO) -> list[str]:
     """Return human-readable failures (empty == no regression)."""
@@ -326,6 +368,7 @@ def main(argv=None) -> int:
     failures += dedup_speedup_failures(fresh, fresh_doc)
     failures += sharded_gap_failures(fresh, fresh_doc)
     failures += guard_overhead_failures(fresh, fresh_doc)
+    failures += tiered_slowdown_failures(fresh, fresh_doc)
     if failures:
         print(f"REGRESSION ({len(failures)} row(s)):")
         for f in failures:

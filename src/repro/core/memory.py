@@ -10,12 +10,32 @@ location tensor gathered with jnp.take (transpose-of-gather gives the
 scatter-add gradient automatically).  It is the ``split`` LookupBackend of
 ``repro.embed.backends`` — the bit-exact oracle every other backend must
 match — and the fallback when the pool exceeds the fused engine's VMEM
-budget.  The production hot path is the ``fused`` backend
-(``repro/kernels/fused_embed``: locations AND gather, plus bag-pooling, in
-one Pallas VMEM pass with a scatter-add custom VJP); the 512-chip ``sharded``
-backend lives in ``repro/dist/sharded_memory.py`` (mask-local-gather + psum,
-O(B*d) traffic, fused per-slab kernel inside the shard_map).  Backend choice
-is resolved per lookup by ``repro.embed.backends.resolve_backend``.
+budget.
+
+The store abstraction, in layers.  This module defines the *logical* pool:
+one flat [m] vector addressed by scheme-computed locations.  How those m
+slots are physically *stored* is a separate, composable axis:
+
+* resident — ``params["memory"]`` IS the [m] vector on one device; the
+  ``split`` oracle here and the ``fused`` backend
+  (``repro/kernels/fused_embed``: locations AND gather, plus bag-pooling,
+  in one Pallas VMEM pass with a scatter-add custom VJP) both read it
+  directly;
+* sharded — the [m] vector split over the 'model' mesh axis
+  (``repro/dist/sharded_memory.py``), traffic through the pluggable
+  ``Exchange`` layer (psum | ring | all_to_all); the scheme's *auxiliary*
+  stores shard too — dense signature sets row-wise, CSR sets via the
+  exchange set-gather (``sharded_csr_set_lookup``);
+* tiered — an over-budget [m] pool split into an HBM-resident compact pool
+  (hot blocks + this step's staged cold blocks) and a host-memory full
+  mirror (``repro/tier``); locations pass through
+  ``repro.tier.store.remap_locations`` and everything downstream of the
+  gather is unchanged.
+
+Every physical store preserves the bit-exact contract with this module's
+``lookup`` over the logical [m] vector.  Backend choice is resolved per
+lookup by ``repro.embed.backends.resolve_backend`` (tiered > sharded >
+fused > split).
 """
 from __future__ import annotations
 

@@ -139,6 +139,27 @@ class Exchange:
                         axis: str = "model") -> tuple:
         raise NotImplementedError
 
+    def partial_sum_lookup(self, local_fn, idx, n_model: int,
+                           axis: str = "model") -> tuple:
+        """The generalized set-gather: assemble ``sum over ranks of
+        local_fn(idx)`` for per-rank ``idx``, through this strategy's
+        collective pattern.
+
+        ``local_fn(idx)`` -> tuple of arrays whose leading axis matches
+        ``idx``'s; each rank contributes its owned part and EXACT ZEROS
+        elsewhere (exactly one owner per element -> the cross-rank sum is
+        bit-exact for floats, exact for ints).  ``local_fn`` must be
+        collective-free and uniform in chunk length — chunked strategies
+        apply it to permuted / concatenated index chunks.
+
+        ``set_lookup_many`` is the special case ``local_fn = local_gather
+        over row-sharded tables``; the CSR signature-store gather
+        (``repro.dist.sharded_memory.sharded_csr_set_lookup``) is the case
+        that needs the general form — its "table" is a ragged flat/offsets
+        pair that cannot be row-gathered directly.
+        """
+        raise NotImplementedError
+
     def reduce_update(self, u, n_model: int, axis: str = "model") -> jax.Array:
         return jax.lax.psum(u, axis)
 
@@ -155,6 +176,10 @@ class PsumExchange(Exchange):
         # requires ``idx`` replicated over 'model' (true under psum.lookup,
         # whose loc_fn sees the full batch on every rank)
         return tuple(local_gather_psum(s, idx, axis) for s in shards)
+
+    def partial_sum_lookup(self, local_fn, idx, n_model, axis="model"):
+        # replicated idx (psum.lookup's loc_fn sees the full batch)
+        return tuple(jax.lax.psum(p, axis) for p in local_fn(idx))
 
 
 class RingExchange(Exchange):
@@ -195,6 +220,20 @@ class RingExchange(Exchange):
                      for s in shards)
         return self._ring(shards, idx, accs, n_model, axis)
 
+    def partial_sum_lookup(self, local_fn, idx, n_model, axis="model"):
+        # same traversal as _ring with the first application seeding the
+        # accumulators (no eval_shape needed for local_fn's output shapes)
+        perm = [(i, (i + 1) % n_model) for i in range(n_model)]
+        accs = None
+        for t in range(n_model):
+            part = tuple(local_fn(idx))
+            accs = part if accs is None else tuple(
+                a + p for a, p in zip(accs, part))
+            if t < n_model - 1:
+                idx = jax.lax.ppermute(idx, axis, perm)
+                accs = tuple(jax.lax.ppermute(a, axis, perm) for a in accs)
+        return tuple(jax.lax.ppermute(a, axis, perm) for a in accs)
+
 
 class AllToAllExchange(Exchange):
     """Owner-sliced exchanges: reduce-scatter spelled as all_to_all + sum.
@@ -230,6 +269,15 @@ class AllToAllExchange(Exchange):
         for s in shards:
             part = local_gather(s, full, axis)
             part = part.reshape((n_model,) + idx.shape + s.shape[1:])
+            outs.append(jnp.sum(jax.lax.all_to_all(part, axis, 0, 0), axis=0))
+        return tuple(outs)
+
+    def partial_sum_lookup(self, local_fn, idx, n_model, axis="model"):
+        full = jax.lax.all_gather(idx, axis)           # [P, ...idx]
+        flat = full.reshape((-1,) + idx.shape[1:])
+        outs = []
+        for part in tuple(local_fn(flat)):
+            part = part.reshape((n_model, idx.shape[0]) + part.shape[1:])
             outs.append(jnp.sum(jax.lax.all_to_all(part, axis, 0, 0), axis=0))
         return tuple(outs)
 
@@ -328,6 +376,18 @@ def alloc_bytes_per_row(d: int, set_width: int = 0):
 RING_OVERLAP = 0.5   # fraction of ring step transfers hidden behind gathers
 
 
+def tier_fetch_bytes(n_cold_blocks: int, block: int, n_leaves: int = 1,
+                     itemsize: int = 4) -> int:
+    """Modeled host<->device bytes per step of a tiered pool
+    (``repro.tier``): each cold block a step touches crosses PCIe twice —
+    the staged fetch down and the post-update writeback up — for every
+    pool leaf (values + optimizer moments).  The dryrun meta records this
+    next to the collective terms so an over-budget config's step cost is
+    priced end to end; the measured twin is the ``host_fetch_bandwidth``
+    bench row."""
+    return 2 * n_cold_blocks * block * itemsize * n_leaves
+
+
 def lookup_cost(n_model: int, n: int, d: int,
                 alloc_row: float | None = None,
                 fused: bool = False) -> dict[str, float]:
@@ -384,6 +444,12 @@ def resolve_exchange(mesh, B: int | None = None, d: int | None = None,
         return PSUM
     if fused is None:
         fused = m is not None and fused_slab_eligible(m, n_model)
+    elif fused and m is not None:
+        # a caller-asserted fused flag cannot outrun the VMEM gate: an
+        # explicit over-budget pool config (m too big for the per-device
+        # slab) pays full location bytes like everyone else — previously
+        # the discount leaked through and could mis-pick psum
+        fused = fused_slab_eligible(m, n_model)
     costs = lookup_cost(n_model, B, d, alloc_row, fused=fused)
     live = {n: c for n, c in costs.items() if n not in DEMOTED}
     name = min(live, key=live.get)

@@ -369,6 +369,191 @@ def sharded_sparse_apply(param: jax.Array, indices, values, mesh,
     return fn(param, indices, values)
 
 
+# ------------------------------------------------------ sharded CSR store
+#
+# The CSR signature-store form (store_flat [nnz] / store_offsets [n+1])
+# could not shard before this: offsets are positions into the GLOBAL flat
+# array, so an even row split leaves every rank needing the whole flat
+# buffer — the store replicated onto every device.  ``shard_csr`` re-bases
+# once on the host (each rank's rows become a local CSR over its own slice
+# of flat, padded to a uniform cap), and ``Exchange.partial_sum_lookup``
+# assembles set rows across ranks exactly like the dense ``set_lookup``:
+# the owning rank emits real elements, everyone else exact zeros, and the
+# integer sum is exact under all three strategies.
+
+
+def shard_csr(flat, offsets, n_model: int):
+    """Host-side prep: global CSR -> per-rank re-based CSR, stacked.
+
+    Returns (flat_sh [n_model, cap] uint32, offs_sh [n_model, c+1] int32)
+    where ``c = n_rows / n_model`` and ``cap`` is the max per-rank nnz
+    (zero-padded — uniform shapes so the stack shards over 'model' with one
+    row per rank).  Must run OUTSIDE jit (the split depends on offset
+    *values*); launchers do it once at buffer-build time
+    (``shard_csr_buffers``).
+    """
+    flat = np.asarray(flat)
+    offsets = np.asarray(offsets, np.int64)
+    n = int(offsets.shape[0]) - 1
+    assert n % n_model == 0, (n, n_model)
+    c = n // n_model
+    bounds = [(int(offsets[r * c]), int(offsets[(r + 1) * c]))
+              for r in range(n_model)]
+    cap = max(max(e - s for s, e in bounds), 1)
+    flat_sh = np.zeros((n_model, cap), flat.dtype)
+    offs_sh = np.zeros((n_model, c + 1), np.int32)
+    for r, (s, e) in enumerate(bounds):
+        flat_sh[r, : e - s] = flat[s:e]
+        offs_sh[r] = (offsets[r * c: (r + 1) * c + 1] - s).astype(np.int32)
+    return jnp.asarray(flat_sh), jnp.asarray(offs_sh)
+
+
+def shard_csr_buffers(buffers: dict, mesh) -> dict:
+    """Replace raw CSR store buffers with their 'model'-sharded form
+    (``store_flat_sh`` / ``store_offsets_sh``) when a non-trivial model
+    axis exists and divides the row count; otherwise pass through."""
+    n_model = _model_size(mesh) if mesh is not None else 1
+    if "store_flat" not in buffers or n_model <= 1:
+        return buffers
+    n = int(buffers["store_offsets"].shape[0]) - 1
+    if n % n_model != 0:
+        return buffers
+    flat_sh, offs_sh = shard_csr(buffers["store_flat"],
+                                 buffers["store_offsets"], n_model)
+    out = {k: v for k, v in buffers.items()
+           if k not in ("store_flat", "store_offsets")}
+    out["store_flat_sh"] = flat_sh
+    out["store_offsets_sh"] = offs_sh
+    return out
+
+
+def _csr_local_sets(flat_l, offs_l, v, max_len: int, axis: str = "model"):
+    """This rank's contribution to the ragged-set gather for global row ids
+    ``v`` [B]: (elems [B, max_len] uint32, length [B] int32), real values on
+    owned rows and EXACT ZEROS elsewhere — the ``local_fn`` contract of
+    ``Exchange.partial_sum_lookup``.  Owned-row output matches
+    ``core.minhash.gather_ragged_sets`` masked to zeros."""
+    c = int(offs_l.shape[0]) - 1
+    rank = jax.lax.axis_index(axis)
+    rel = v.astype(jnp.int32) - rank * c
+    mine = (rel >= 0) & (rel < c)
+    safe = jnp.clip(rel, 0, c - 1)
+    start = jnp.take(offs_l, safe)
+    length = jnp.take(offs_l, safe + 1) - start
+    pos = jnp.arange(max_len, dtype=jnp.int32)[None, :]
+    mask = (pos < jnp.minimum(length, max_len)[:, None]) & mine[:, None]
+    idx = jnp.clip(start[:, None] + pos, 0, flat_l.shape[0] - 1)
+    elems = jnp.take(flat_l, idx, axis=0).astype(jnp.uint32)
+    return (jnp.where(mask, elems, jnp.uint32(0)),
+            jnp.where(mine, length, 0).astype(jnp.int32))
+
+
+def sharded_csr_set_lookup(flat_sh, offs_sh, lengths, value_ids, max_len: int,
+                           mesh, dp_axes, exchange=None):
+    """Gather D_v rows from the 'model'-sharded CSR store.
+
+    ``flat_sh`` / ``offs_sh``: the stacked per-rank CSR from
+    :func:`shard_csr`; ``lengths`` [n] row-sharded.  value_ids [...] ->
+    (elems [..., max_len] uint32 zero-padded, mask, support [...]) —
+    bit-identical to ``gather_ragged_sets`` + masked fill on the replicated
+    store.  Integer sums: exact under every strategy.
+    """
+    n_model = _model_size(mesh)
+    n_rows = int(lengths.shape[0])
+    if n_model <= 1 or n_rows % n_model != 0:
+        raise ValueError("sharded_csr_set_lookup needs a non-trivial "
+                         "'model' axis dividing the store rows")
+    batch, n_flat = _local_flat(mesh, dp_axes, value_ids)
+    ex = _resolve(exchange, mesh, n_flat, max_len, None, alloc_row=0.0)
+    bspec = _bspec(batch)
+    gspec = P(bspec, *([None] * (value_ids.ndim - 1)))
+
+    def body(flat_l, offs_l, len_l, v_l):
+        flat_v = v_l.reshape(-1)
+
+        def local_fn(g):
+            elems, ln = _csr_local_sets(flat_l[0], offs_l[0], g, max_len)
+            sup = exl.local_gather(len_l, g)
+            return elems, ln, sup
+
+        if ex.name == "psum":
+            elems, ln, sup = ex.partial_sum_lookup(local_fn, flat_v, n_model)
+        else:
+            rank = jax.lax.axis_index("model")
+            chunk = exl.chunk_for_rank(flat_v, rank, n_model)
+            e_c, l_c, s_c = ex.partial_sum_lookup(local_fn, chunk, n_model)
+            elems = jax.lax.all_gather(e_c, "model").reshape(-1, max_len)
+            ln = jax.lax.all_gather(l_c, "model").reshape(-1)
+            sup = jax.lax.all_gather(s_c, "model").reshape(-1)
+        pos = jnp.arange(max_len, dtype=jnp.int32)[None, :]
+        mask = pos < jnp.minimum(ln, max_len)[:, None]
+        shape = v_l.shape
+        return (elems.reshape(shape + (max_len,)),
+                mask.reshape(shape + (max_len,)), sup.reshape(shape))
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P("model", None), P("model", None), P("model"), gspec),
+        out_specs=(P(bspec, *([None] * value_ids.ndim)),
+                   P(bspec, *([None] * value_ids.ndim)),
+                   P(bspec, *([None] * (value_ids.ndim - 1)))),
+        check_vma=False)
+    return fn(flat_sh, offs_sh, lengths, value_ids)
+
+
+def sharded_lma_lookup_csr(memory: jax.Array, flat_sh, offs_sh,
+                           store_lengths, gids: jax.Array, params: LMAParams,
+                           mesh, dp_axes, exchange=None) -> jax.Array:
+    """LMA lookup with M and the *CSR* D' store both sharded over 'model'.
+
+    The ragged-set reconstruction rides the strategy's
+    ``partial_sum_lookup`` inside the lookup's ``loc_fn`` (chunked
+    strategies run it on 1/n_model of the batch, like the dense
+    ``set_lookup_many`` path), then funnels through
+    ``alloc_lma_from_rows`` — bit-identical to
+    ``lookup(memory, alloc_lma(params, SignatureStore(...), gids))``.
+    """
+    n_model = _model_size(mesh)
+    n_rows = int(store_lengths.shape[0])
+    if n_model <= 1 or params.m % n_model != 0 or n_rows % n_model != 0:
+        raise ValueError("sharded_lma_lookup_csr needs a non-trivial "
+                         "'model' axis dividing pool and store rows")
+    batch, n_flat = _local_flat(mesh, dp_axes, gids)
+    ex = _resolve(exchange, mesh, n_flat, params.d, params.m,
+                  alloc_row=exl.alloc_bytes_per_row(
+                      params.d, set_width=params.max_set))
+    bspec = _bspec(batch)
+    gspec = P(bspec, *([None] * (gids.ndim - 1)))
+    PAD = jnp.uint32(DenseSignatureStore.PAD)
+
+    def body(mem_l, flat_l, offs_l, len_l, gids_l):
+        flat_v = gids_l.reshape(-1)
+
+        def loc_fn(g):
+            def local_fn(q):
+                elems, ln = _csr_local_sets(flat_l[0], offs_l[0], q,
+                                            params.max_set)
+                sup = exl.local_gather(len_l, q)
+                return elems, ln, sup
+
+            elems, ln, sup = ex.partial_sum_lookup(local_fn, g, n_model)
+            pos = jnp.arange(params.max_set, dtype=jnp.int32)[None, :]
+            mask = pos < jnp.minimum(ln, params.max_set)[:, None]
+            rows = jnp.where(mask, elems, PAD)
+            return alc.alloc_lma_from_rows(params, rows, sup, g)
+
+        out = ex.lookup(mem_l, flat_v, loc_fn, params.d, n_model)
+        return out.reshape(*gids_l.shape, params.d)
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P("model"), P("model", None), P("model", None),
+                  P("model"), gspec),
+        out_specs=P(bspec, *([None] * gids.ndim)),
+        check_vma=False)
+    return fn(memory, flat_sh, offs_sh, store_lengths, gids)
+
+
 def sharded_lma_lookup(memory: jax.Array, store_sets: jax.Array,
                        store_lengths: jax.Array, gids: jax.Array,
                        params: LMAParams, mesh, dp_axes,

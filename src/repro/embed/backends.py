@@ -120,8 +120,43 @@ class ShardedBackend:
         return out
 
 
+class TieredBackend:
+    """Over-budget pools: compact HBM pool + host-cold tier (``repro.tier``).
+
+    The scheme computes its *global* pool locations exactly as it would for
+    the split oracle; :func:`repro.tier.store.remap_locations` then folds
+    them into the compact pool the :class:`~repro.tier.store.TieredStore`
+    keeps resident (hot slab + this step's staged cold rows) using the three
+    remap buffers the :class:`~repro.tier.training.TierController` rides in
+    each batch.  Bit-identical to the split path over the full pool whenever
+    the controller staged the step's cold blocks — which it guarantees by
+    planning from the same ``scheme.locations`` math.
+    """
+    name = "tiered"
+
+    def lookup(self, cfg: EmbeddingConfig, scheme: Scheme, params: dict,
+               buffers: dict, gids: jax.Array) -> jax.Array:
+        return lookup(params["memory"],
+                      tiered_locations(cfg, scheme, buffers, gids))
+
+
 SPLIT = SplitBackend()
 FUSED = FusedBackend()
+TIERED = TieredBackend()
+
+
+def tiered_active(buffers: dict | None) -> bool:
+    """Do these buffers carry live tier remap state (hot/stage ids)?"""
+    return bool(buffers) and "tier_hot_ids" in buffers
+
+
+def tiered_locations(cfg: EmbeddingConfig, scheme: Scheme, buffers: dict,
+                     gids: jax.Array) -> jax.Array:
+    """Scheme locations remapped into the compact tiered pool."""
+    from repro.tier.store import remap_locations
+    loc = scheme.locations(cfg, buffers, gids)
+    return remap_locations(loc, buffers["tier_hot_ids"],
+                           buffers["tier_stage_ids"], buffers["tier_block"])
 
 
 def sparse_locations(cfg: EmbeddingConfig, scheme: Scheme, params: dict,
@@ -132,7 +167,12 @@ def sparse_locations(cfg: EmbeddingConfig, scheme: Scheme, params: dict,
     engine is eligible its in-VMEM location kernel emits the tensor (the
     same hash math the scatter kernel would have recomputed to *consume*);
     otherwise the scheme's split oracle computes it.  Either way the result
-    is bit-identical to ``scheme.locations``."""
+    is bit-identical to ``scheme.locations``.  Under a tiered pool the
+    gradient target is the *compact* pool, so the recorded locations are
+    the remapped ones — again matching what the provide-pass lookup reads.
+    """
+    if tiered_active(buffers):
+        return tiered_locations(cfg, scheme, buffers, gids)
     if sharded_ctx() is None and fused_eligible(cfg, scheme, params):
         from repro.kernels.fused_embed import ops as fe
         spec = scheme.fused_spec(cfg)
@@ -142,17 +182,23 @@ def sparse_locations(cfg: EmbeddingConfig, scheme: Scheme, params: dict,
 
 
 def resolve_backend(cfg: EmbeddingConfig, params: dict,
-                    scheme: Scheme | None = None):
+                    scheme: Scheme | None = None, buffers: dict | None = None):
     """The dispatch policy, in one inspectable place.
 
     Returns the backend for a memory-family lookup, or ``None`` for
     table-family schemes (they embed directly, no shared pool).  Priority:
-    sharded (a mesh is installed) > fused (engine enabled + spec + VMEM fit)
-    > split.
+    tiered (the buffers carry tier remap state — the pool exceeded the
+    per-device budget and ``repro.tier`` split it) > sharded (a mesh is
+    installed) > fused (engine enabled + spec + VMEM fit) > split.
+    ``fused_eligible`` independently rejects tiered pools: the compact pool
+    has fewer than ``memory_slots`` slots, so the slab gate fails closed
+    even if a caller forgets to pass ``buffers``.
     """
     scheme = get_scheme(cfg.kind) if scheme is None else scheme
     if scheme.family != "memory":
         return None
+    if tiered_active(buffers):
+        return TIERED
     ctx = sharded_ctx()
     if ctx is not None:
         return ShardedBackend(*ctx)

@@ -197,12 +197,23 @@ class LMAScheme(Scheme):
 
     def sharded_lookup(self, cfg, params, buffers, gids, mesh, dp_axes,
                        exchange=None):
-        from repro.dist.sharded_memory import sharded_lma_lookup
-        assert "store_sets" in buffers, (
-            "the sharded LMA path needs the dense D' store (densify_store)")
-        return sharded_lma_lookup(params["memory"], buffers["store_sets"],
-                                  buffers["store_lengths"], gids, cfg.lma,
-                                  mesh, dp_axes, exchange=exchange)
+        from repro.dist.sharded_memory import (sharded_lma_lookup,
+                                               sharded_lma_lookup_csr)
+        if "store_flat_sh" in buffers:
+            # 'model'-sharded CSR store (shard_csr_buffers): ragged sets
+            # reconstructed through Exchange.partial_sum_lookup — the store
+            # no longer replicates
+            return sharded_lma_lookup_csr(
+                params["memory"], buffers["store_flat_sh"],
+                buffers["store_offsets_sh"], buffers["store_lengths"], gids,
+                cfg.lma, mesh, dp_axes, exchange=exchange)
+        if "store_sets" in buffers:
+            return sharded_lma_lookup(params["memory"], buffers["store_sets"],
+                                      buffers["store_lengths"], gids, cfg.lma,
+                                      mesh, dp_axes, exchange=exchange)
+        # raw (unsharded) CSR buffers: generic location fallback — the
+        # store stays replicated; run shard_csr_buffers at setup to shard it
+        return NotImplemented
 
     def exchange_set_width(self, cfg):
         return int(cfg.lma.max_set)

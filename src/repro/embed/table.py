@@ -52,11 +52,15 @@ def _memory_lookup(cfg: EmbeddingConfig, params: dict, buffers: dict,
     from repro.optim import sparse as _sparse
     scheme = get_scheme(cfg.kind)
     st = _sparse.active()
+    tiered = bke.tiered_active(buffers)
     if st is not None and st.mode == "record":
         rows = scheme.sparse_row_ids(cfg, buffers, gids)
         # row mode needs the pool to tile exactly into d-wide rows; a
-        # ragged budget (m % d != 0) falls back to element-level records
-        if rows is not None and scheme.memory_slots(cfg) % cfg.dim == 0:
+        # ragged budget (m % d != 0) falls back to element-level records.
+        # A tiered pool also falls back: the tier remap is element-wise
+        # over the compact pool, so row/stripe structure does not survive.
+        if not tiered and rows is not None and \
+                scheme.memory_slots(cfg) % cfg.dim == 0:
             st.record_rows(params["memory"], rows, cfg.dim)
         else:
             loc = bke.sparse_locations(cfg, scheme, params, buffers, gids)
@@ -64,15 +68,15 @@ def _memory_lookup(cfg: EmbeddingConfig, params: dict, buffers: dict,
             # engine then builds the SparseGrad with d per-stripe sorts
             # instead of one global O(K log K) argsort
             st.record(params["memory"], loc,
-                      n_buckets=scheme.sparse_buckets(cfg))
+                      n_buckets=0 if tiered else scheme.sparse_buckets(cfg))
         return jnp.zeros((gids.shape[0], cfg.dim), params["memory"].dtype)
     if st is not None and st.mode == "provide":
         tap = st.next_tap((gids.shape[0], cfg.dim))
         params = dict(params,
                       memory=jax.lax.stop_gradient(params["memory"]))
-        backend = bke.resolve_backend(cfg, params, scheme)
+        backend = bke.resolve_backend(cfg, params, scheme, buffers)
         return backend.lookup(cfg, scheme, params, buffers, gids) + tap
-    backend = bke.resolve_backend(cfg, params, scheme)
+    backend = bke.resolve_backend(cfg, params, scheme, buffers)
     return backend.lookup(cfg, scheme, params, buffers, gids)
 
 
@@ -120,7 +124,7 @@ def embed_bag(cfg: EmbeddingConfig, params: dict, buffers: dict, table: int,
     """
     from repro.optim import sparse as _sparse
     scheme = get_scheme(cfg.kind)
-    backend = bke.resolve_backend(cfg, params, scheme)
+    backend = bke.resolve_backend(cfg, params, scheme, buffers)
     if backend is bke.FUSED and _sparse.active() is None:
         # under a sparse-grad trace bags decompose into embed + masked
         # reduce, so the per-element lookup carries the tap and the values

@@ -278,6 +278,42 @@ def _sparse_meta(rcfg, B: int, mesh) -> dict:
             {k: int(v) for k, v in costs.items()}}
 
 
+def _tier_meta(rcfg, B: int) -> dict:
+    """Tier split + modeled host-fetch traffic for the dryrun artifact.
+
+    Always emitted for memory-pool train cells so the artifact records the
+    tiering posture the cell would launch with: no budget (or a pool that
+    fits) lowers as all-hot with zero host traffic.  The split comes from
+    the same ``tier_split`` rule the launcher applies, and the byte model
+    from ``exchange.tier_fetch_bytes`` — staged cold blocks are bounded by
+    one block per looked-up row and by the cold tier itself, and each
+    staged block is fetched (stage) and returned (writeback) once.
+    """
+    from repro.embed import get_scheme
+    from repro.tier.store import BLOCK_DEFAULT, tier_budget_mb, tier_split
+    e = rcfg.embedding
+    if e.budget is None:
+        return {}
+    scheme = get_scheme(e.kind)
+    if scheme.family != "memory":
+        return {}
+    m = scheme.memory_slots(e)
+    block = BLOCK_DEFAULT
+    while m % block:
+        block //= 2
+    budget = tier_budget_mb()
+    hot, cold = tier_split(m, budget, e.jdtype.itemsize, block)
+    n_rows = B * recsys.lookups_per_example(rcfg)
+    staged = min(cold // block, n_rows)
+    # two pool leaves: the value pool + one optimizer-moment mirror (the
+    # committed recsys archs all run a single-moment optimizer)
+    fetch = exl.tier_fetch_bytes(staged, block, n_leaves=2,
+                                 itemsize=e.jdtype.itemsize)
+    return {"tier": {"tier_budget_mb": budget, "hot_rows": int(hot),
+                     "cold_rows": int(cold),
+                     "host_fetch_bytes_per_step": int(fetch)}}
+
+
 def _recsys_bundle(arch: ArchConfig, shape_id: str, mesh) -> Bundle:
     t = RECSYS_SHAPE_TABLE[shape_id]
     rcfg = arch.make_model(shape_id)
@@ -324,6 +360,7 @@ def _recsys_bundle(arch: ArchConfig, shape_id: str, mesh) -> Bundle:
             meta={"kind": "train", "examples": B, "sparse_grads": use_sparse,
                   "embedding": rcfg.table.describe(),
                   **_sparse_meta(rcfg, B, mesh),
+                  **_tier_meta(rcfg, B),
                   **_exchange_meta(
                       rcfg, B * recsys.lookups_per_example(rcfg), mesh)})
 

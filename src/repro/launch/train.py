@@ -31,7 +31,7 @@ from repro.optim import sparse as sparse_lib
 from repro.train.trainer import Trainer, TrainerConfig
 
 
-def make_optimizer(arch):
+def make_optimizer(arch, sparse_ok: bool = True):
     dense = {"adam": opt_lib.adam, "adagrad": opt_lib.adagrad,
              "adafactor": opt_lib.adafactor,
              "sgd": lambda lr: opt_lib.sgd(lr, momentum=0.9)}[
@@ -40,7 +40,7 @@ def make_optimizer(arch):
               "adagrad": sparse_lib.sparse_adagrad,
               "sgd": lambda lr: sparse_lib.sparse_sgd(lr, momentum=0.9)}.get(
         arch.optimizer)
-    if sparse_lib.sparse_enabled() and sparse is not None:
+    if sparse_ok and sparse_lib.sparse_enabled() and sparse is not None:
         # the memory pool routes to the explicit sparse optimizer by path;
         # every other param keeps the arch's dense transform untouched
         return opt_lib.multi_transform(
@@ -53,6 +53,62 @@ def lookups_per_step(cfg, batch: int) -> int:
     lookups_per_sec stat; per-example rule shared with steps.py's
     sparse-traffic model via models.recsys)."""
     return batch * recsys.lookups_per_example(cfg)
+
+
+def _maybe_tier(cfg, params, bufs, batch_fn, budget_mb):
+    """Wrap a recsys setup in the tiered memory store when the pool exceeds
+    the per-device HBM budget (``--tier-budget-mb`` / REPRO_TIER_BUDGET_MB).
+
+    Returns ``(params, loss_fn, controller)``; untiered runs return
+    ``(params, None, None)`` and keep the resident loss function.  Tiered
+    params hold the *compact* pool; the controller's ``export_params``
+    reconstructs the full pool for eval.  The tiered loss peels the
+    per-step remap buffers out of the batch and merges them into the
+    embedding buffers — the only change the model stack sees.
+    """
+    from repro.tier import (BLOCK_DEFAULT, TieredStore, TierController,
+                            budget_slots, needs_tiering, split_batch)
+    e = cfg.embedding
+    scheme = get_scheme(e.kind)
+    if budget_mb is None or getattr(scheme, "family", None) != "memory":
+        return params, None, None
+    if cfg.model == "xdeepfm":
+        # xdeepfm carries a second (linear) memory pool; the tier remap
+        # buffers ride in the shared embedding buffers dict, so tiering the
+        # main pool would corrupt the linear table's locations.
+        print("tiering skipped: xdeepfm's dual memory pools stay resident")
+        return params, None, None
+    mem = np.asarray(params["embedding"]["memory"])
+    m, itemsize = int(mem.shape[0]), mem.dtype.itemsize
+    if not needs_tiering(m, itemsize, budget_mb):
+        print(f"pool fits the {budget_mb} MB tier budget ({m} slots); "
+              "untiered")
+        return params, None, None
+    block = BLOCK_DEFAULT
+    while m % block:
+        block //= 2
+    store = TieredStore(mem, budget_slots(budget_mb, itemsize, block),
+                        block=block)
+    offs = np.asarray(e.table_offsets()[:-1], np.int32)
+
+    def plan_fn(batch):
+        if cfg.model == "din":
+            g = jnp.concatenate([jnp.ravel(batch["hist"]),
+                                 jnp.ravel(batch["target"])])
+        else:
+            g = (batch["sparse"].astype(jnp.int32)
+                 + jnp.asarray(offs)[None, :]).reshape(-1)
+        return scheme.locations(e, bufs, g.astype(jnp.int32))
+
+    def tiered_loss(p, b):
+        clean, tier = split_batch(b)
+        return recsys.loss_fn(p, cfg, clean, {**bufs, **tier})
+
+    params = dict(params, embedding=dict(
+        params["embedding"], memory=store.initial_compact()))
+    print(f"tiered memory pool: {m} slots -> {store.hot_slots} hot + "
+          f"{m - store.hot_slots} cold (block {block}, budget {budget_mb} MB)")
+    return params, tiered_loss, TierController(store, batch_fn, plan_fn)
 
 
 def _recsys_setup(arch, cfg, n_s: int, batch: int):
@@ -111,6 +167,12 @@ def main(argv=None):
                          "(see repro.resilience.faults; also REPRO_FAULTS)")
     ap.add_argument("--fault-seed", type=int, default=0,
                     help="seed for the fault injector's corruption bits")
+    ap.add_argument("--tier-budget-mb", type=float, default=None,
+                    help="per-device HBM budget for the embedding memory "
+                         "pool; a pool that exceeds it trains through the "
+                         "tiered store (HBM-hot / host-cold, repro.tier) "
+                         "bit-identically to the resident run (also "
+                         "REPRO_TIER_BUDGET_MB; recsys archs only)")
     ap.add_argument("--no-guard", action="store_true",
                     help="disable the in-jit non-finite step guard "
                          "(also REPRO_GUARD_STEP=0)")
@@ -126,10 +188,18 @@ def main(argv=None):
     cfg = arch.make_smoke(**kind_kw) if (args.smoke or arch.family == "lm") \
         else arch.make_model(None, **kind_kw)
 
+    tier_ctrl = None
     if arch.family == "recsys":
         gen, bufs, batch_fn, loss_fn = _recsys_setup(
             arch, cfg, args.n_signatures, args.batch)
         params = recsys.init(jax.random.key(0), cfg)
+        from repro.tier import tier_budget_mb
+        budget_mb = (args.tier_budget_mb if args.tier_budget_mb is not None
+                     else tier_budget_mb())
+        params, tiered_loss, tier_ctrl = _maybe_tier(
+            cfg, params, bufs, batch_fn, budget_mb)
+        if tier_ctrl is not None:
+            loss_fn = tiered_loss
     elif arch.family == "lm":
         gen = LMGenerator(cfg.vocab_size, seed=0)
 
@@ -161,7 +231,14 @@ def main(argv=None):
                       ckpt_every=100, log_every=max(args.steps // 10, 1),
                       lookups_per_step=lps,
                       guard_step=False if args.no_guard else None),
-        loss_fn, params, make_optimizer(arch), batch_fn, faults=injector)
+        # a tiered pool updates densely: the compact pool is already only
+        # the budgeted hot+stage slots, and the sparse pipeline's explicit
+        # per-pool optimizer keeps its moments in a state shape the tier
+        # migration cannot mirror (the full-pool layout)
+        loss_fn, params, make_optimizer(arch, sparse_ok=tier_ctrl is None),
+        batch_fn, faults=injector,
+        sparse_grads=False if tier_ctrl is not None else None,
+        tier=tier_ctrl)
     if trainer.sparse_grads:
         from repro.dist import exchange as exl
         print("sparse memory-pool updates ON (REPRO_SPARSE_GRADS=0 for the "
@@ -175,11 +252,18 @@ def main(argv=None):
 
     if arch.family == "recsys":
         ev = StreamingEval()
+        # a tiered run evaluates through the reconstructed full pool
+        # (bit-exact export) — eval batches are unplanned, so they may
+        # touch blocks the training staging never covered
+        eval_params = (tier_ctrl.export_params(trainer.params)
+                       if tier_ctrl is not None else trainer.params)
+        if tier_ctrl is not None:
+            print(f"tier: {trainer.tier.stats()}")
         fwd = jax.jit(lambda p, b: recsys.forward(p, cfg, b, bufs))
         for i in range(args.eval_batches):
             b = gen.batch(2048, 700_000 + i)
             jb = {k: jnp.asarray(v) for k, v in b.items() if k != "label"}
-            ev.add(b["label"], np.asarray(fwd(trainer.params, jb)))
+            ev.add(b["label"], np.asarray(fwd(eval_params, jb)))
         print(f"eval: {ev.compute()}")
 
 

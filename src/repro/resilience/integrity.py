@@ -99,6 +99,33 @@ def np_quarantine_chunks(a: np.ndarray, bad: np.ndarray,
     return out[: a.size].reshape(a.shape)
 
 
+def np_bad_value_chunks(a: np.ndarray, chunk: int = CHUNK,
+                        max_abs: float = MAX_ABS) -> np.ndarray:
+    """Host twin of :func:`bad_value_chunks` — same flags, same chunking."""
+    flat = np.ascontiguousarray(a).reshape(-1)
+    if not np.issubdtype(flat.dtype, np.floating):
+        return np.zeros((-(-flat.size // chunk),), bool)
+    n = -(-flat.size // chunk)
+    pad = n * chunk - flat.size
+    if pad:
+        flat = np.concatenate([flat, np.zeros((pad,), flat.dtype)])
+    c = flat.reshape(n, chunk)
+    with np.errstate(invalid="ignore"):
+        bad = ~np.isfinite(c) | (np.abs(c) > max_abs)
+    return np.any(bad, axis=1)
+
+
+def np_sanitize(a: np.ndarray, chunk: int = CHUNK,
+                max_abs: float = MAX_ABS) -> tuple[np.ndarray, int]:
+    """Host twin of :func:`sanitize` for tiers that never visit the device
+    (the host-cold pool mirror in ``repro.tier``).  -> (clean, n_bad)."""
+    bad = np_bad_value_chunks(a, chunk, max_abs)
+    n = int(bad.sum())
+    if not n:
+        return a, 0
+    return np_quarantine_chunks(a, bad, chunk), n
+
+
 @functools.partial(jax.jit, static_argnums=(1,), static_argnames=("max_abs",))
 def sanitize(x: jax.Array, chunk: int = CHUNK,
              max_abs: float = MAX_ABS):

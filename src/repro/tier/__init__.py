@@ -1,0 +1,22 @@
+"""repro.tier — tiered memory store: HBM-hot / host-cold pools.
+
+See :mod:`repro.tier.store` for the storage layer (compact device pool,
+host mirror, async staging, EMA re-tiering) and
+:mod:`repro.tier.training` for the training-loop controller.
+"""
+from repro.tier.store import (  # noqa: F401
+    BLOCK_DEFAULT,
+    TieredStore,
+    budget_slots,
+    needs_tiering,
+    remap_locations,
+    tier_budget_mb,
+    tier_split,
+)
+from repro.tier.training import (  # noqa: F401
+    TIER_KEYS,
+    TierController,
+    pool_leaf_paths,
+    split_batch,
+    tiered_active,
+)

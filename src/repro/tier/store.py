@@ -1,0 +1,440 @@
+"""Tiered memory store: HBM-hot / host-cold pools for over-budget memory.
+
+The paper's pool M is one flat [m] vector, and until now the whole vector
+had to live resident per device (or sharded, but still wholly in HBM).
+RecShard / MTrainS (PAPERS.md) show production DLRM tables spanning
+heterogeneous memories with *statistically predictable* skew — the ``freq``
+scheme already exploits that skew inside the id space (dedicated hot rows,
+hashed tail).  :class:`TieredStore` generalizes the same split to the
+*storage* layer, for every registered scheme, with no scheme edits:
+
+  * the pool is divided into fixed ``block``-slot **tier blocks**;
+  * **host DRAM holds the full pool** (the big tier — this is the MTrainS
+    posture: host memory is capacity, HBM is a cache);
+  * the ``hot_blocks`` most-touched blocks are **resident on device** as one
+    compact slab (sorted by block id, so membership is a binary search);
+  * the cold blocks a batch touches are **staged** ahead of the step with an
+    async, double-buffered ``jax.device_put`` — the step-N cold fetch
+    overlaps the step-N-1 compute, and the step's donated params make the
+    previous compact pool's buffers reusable;
+  * between steps an **EMA of observed per-block touch counts** (the same
+    observed-count signal the ``freq`` scheme's ``id_counts`` buffers are
+    built from) promotes/demotes blocks with **bit-exact** row migration —
+    values and any registered optimizer-moment leaves move verbatim.
+
+The device-visible state is three small buffers (``tier_hot_ids``,
+``tier_stage_ids``, ``tier_block``) plus the compact pool
+``[(hot_blocks + stage_blocks) * block]``; :func:`remap_locations` turns any
+scheme's *global* pool locations into compact-pool indices, so
+``jnp.take(compact, remap(loc))`` is bit-identical to
+``jnp.take(full_pool, loc)`` whenever staging covered the batch (which the
+:class:`~repro.tier.training.TierController` guarantees by planning the
+stage set from the very same location math).  Gradients flow into the
+compact pool — hot rows train in place, staged cold rows are written back to
+host after the step — so training over the tiered store is bit-identical to
+the fully-resident oracle (``tests/test_tier.py`` pins 30 steps, with
+re-tiering, against it).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK_DEFAULT = 512          # slots per tier block (= store_rows granularity)
+EMA_DECAY = 0.8              # per-observation decay of the touch-count EMA
+
+
+# ----------------------------------------------------------- budget helpers
+
+def tier_budget_mb() -> float | None:
+    """Per-device HBM budget for the pool, from ``REPRO_TIER_BUDGET_MB``
+    (the env twin of ``launch/train.py --tier-budget-mb``); None = untiered."""
+    v = os.environ.get("REPRO_TIER_BUDGET_MB", "").strip()
+    return float(v) if v else None
+
+
+def budget_slots(budget_mb: float, itemsize: int = 4,
+                 block: int = BLOCK_DEFAULT) -> int:
+    """How many pool slots a per-device budget admits, floored to whole
+    blocks (the tier granularity)."""
+    slots = int(budget_mb * 2**20 / itemsize)
+    return (slots // block) * block
+
+
+def tier_split(m: int, budget_mb: float | None, itemsize: int = 4,
+               block: int = BLOCK_DEFAULT) -> tuple[int, int]:
+    """(hot_slots, cold_slots) for an [m]-slot pool under ``budget_mb``.
+
+    ``None`` (or a budget the pool fits) keeps everything hot — the
+    untiered fast path.  This is the one split rule the launcher, the
+    dryrun meta, and the bench all share.
+    """
+    if budget_mb is None:
+        return m, 0
+    hot = min(m, budget_slots(budget_mb, itemsize, block))
+    return hot, m - hot
+
+
+def needs_tiering(m: int, itemsize: int = 4,
+                  budget_mb: float | None = None) -> bool:
+    """Does an [m]-slot pool exceed the per-device budget?"""
+    budget_mb = tier_budget_mb() if budget_mb is None else budget_mb
+    return tier_split(m, budget_mb, itemsize)[1] > 0
+
+
+# ------------------------------------------------------- location remapping
+
+def remap_locations(loc: jax.Array, hot_ids: jax.Array, stage_ids: jax.Array,
+                    block) -> jax.Array:
+    """Global pool locations -> compact tiered-pool indices (pure jnp math).
+
+    ``hot_ids`` [H] / ``stage_ids`` [S]: sorted int32 block ids (stage padded
+    with the ``n_blocks`` sentinel, which sorts after every real id).  The
+    compact pool is ``concat(hot slab, stage slab)``; a location in block
+    ``b`` maps to ``rank_of(b) * block + offset``.  Bit-exact contract: for
+    every location whose block is hot or staged,
+    ``take(compact, remap(loc)) == take(full_pool, loc)`` bitwise.  A
+    location in an *unstaged cold* block has no defined image — the
+    controller plans the stage set from the same location math, so by
+    construction that never happens in a training step.
+    """
+    shape = loc.shape
+    flat = loc.reshape(-1).astype(jnp.int32)
+    blk = jnp.asarray(block, jnp.int32).reshape(())
+    b = flat // blk
+    off = flat - b * blk
+    H = int(hot_ids.shape[0])
+    S = int(stage_ids.shape[0])
+    if H:
+        hpos = jnp.clip(jnp.searchsorted(hot_ids, b), 0, H - 1)
+        hpos = hpos.astype(jnp.int32)
+        is_hot = jnp.take(hot_ids, hpos) == b
+    else:
+        hpos = jnp.zeros_like(b)
+        is_hot = jnp.zeros(b.shape, bool)
+    if S:
+        spos = jnp.clip(jnp.searchsorted(stage_ids, b), 0, S - 1)
+        spos = spos.astype(jnp.int32)
+    else:
+        spos = jnp.zeros_like(b)
+    row = jnp.where(is_hot, hpos, H + spos)
+    return (row * blk + off).reshape(shape)
+
+
+# ----------------------------------------------------------------- the store
+
+class TieredStore:
+    """Host-authoritative full pool + device-resident hot slab + stage slots.
+
+    One store manages several same-shaped pool *leaves* (the value pool
+    ``memory`` plus any optimizer-moment leaves that mirror it); every leaf
+    shares the one block layout, so promote/demote migrates value rows and
+    their moments together, bit-exactly.
+
+    The device-side truth at any moment is the caller's *compact tree*
+    ``{leaf name: [(hot_blocks + stage_blocks) * block] array}`` — the slab
+    region ``[: hot_slots]`` is authoritative for hot blocks, the stage
+    region for the currently-staged cold blocks, and the host mirror for
+    everything else.  The per-step protocol (driven by
+    :class:`~repro.tier.training.TierController`):
+
+        writeback(tree)          # staged rows of step N-1 -> host
+        tree = retier(tree)      # optional: EMA promote/demote, bit-exact
+        stage(blocks)            # async prefetch for step N (device_put)
+        tree = install(tree)     # compact = concat(hot, staged)
+
+    ``stage`` issues the ``jax.device_put`` immediately and returns — the
+    host->device copy runs while the caller finishes step N-1's bookkeeping
+    and the trainer dispatches step N (double-buffered host staging keeps
+    the in-flight copy's source buffer stable).
+    """
+
+    def __init__(self, memory, budget_slots_or_hot: int,
+                 block: int = BLOCK_DEFAULT, stage_blocks: int | None = None,
+                 counts=None, ema_decay: float = EMA_DECAY):
+        """``memory``: the full [m] initial pool (host or device).
+        ``budget_slots_or_hot``: hot-tier size in slots (floored to blocks).
+        ``stage_blocks``: staging capacity; a batch may touch at most this
+        many cold blocks per step (default: every cold block — callers with
+        a real budget pass the batch-derived bound).  ``counts``: optional
+        [n_blocks] observed touch counts seeding the hot set (the freq
+        scheme's id-count signal, aggregated per block); default: the pool
+        head, matching freq's dedicated-rows-first layout."""
+        mem = np.asarray(memory)
+        assert mem.ndim == 1, "TieredStore manages flat [m] pools"
+        self.m = int(mem.shape[0])
+        self.block = int(block)
+        assert self.m % self.block == 0, (
+            f"pool size {self.m} must tile into {self.block}-slot blocks")
+        self.n_blocks = self.m // self.block
+        self.dtype = mem.dtype
+        hot_blocks = min(self.n_blocks,
+                         max(int(budget_slots_or_hot) // self.block, 0))
+        self.hot_blocks = hot_blocks
+        cold = self.n_blocks - hot_blocks
+        self.stage_blocks = cold if stage_blocks is None \
+            else max(min(int(stage_blocks), cold), 1 if cold else 0)
+        # EMA of observed touches; seeds the initial hot set when given
+        self.ema = np.zeros(self.n_blocks, np.float64)
+        if counts is not None:
+            c = np.asarray(counts, np.float64)
+            assert c.shape == (self.n_blocks,), (c.shape, self.n_blocks)
+            self.ema = c.copy()
+            order = np.lexsort((np.arange(self.n_blocks), -c))
+            self.hot_ids = np.sort(order[:hot_blocks]).astype(np.int32)
+        else:
+            self.hot_ids = np.arange(hot_blocks, dtype=np.int32)
+        self.ema_decay = float(ema_decay)
+        # host mirror: the full pool, per leaf; hot blocks' rows go stale
+        # while device-resident (writeback_hot refreshes them at retier)
+        self._host: dict[str, np.ndarray] = {
+            "memory": mem.reshape(self.n_blocks, self.block).copy()}
+        # double-buffered pinned host staging + in-flight device arrays
+        self._hbuf: dict[str, list[np.ndarray]] = {}
+        self._flip = 0
+        self._pending: dict[str, jax.Array] | None = None
+        self._pending_ids: np.ndarray | None = None   # [S] with sentinel pad
+        self._staged_ids: np.ndarray | None = None    # real ids of live stage
+        self._stage_ids_dev = jnp.full((max(self.stage_blocks, 1),),
+                                       self.n_blocks, jnp.int32)
+        # telemetry (cumulative)
+        self.stats = {"host_fetch_bytes": 0, "writeback_bytes": 0,
+                      "staged_blocks": 0, "stage_steps": 0,
+                      "promoted": 0, "demoted": 0,
+                      "quarantined_cold_chunks": 0}
+
+    # ------------------------------------------------------------ geometry
+    @property
+    def hot_slots(self) -> int:
+        return self.hot_blocks * self.block
+
+    @property
+    def stage_slots(self) -> int:
+        return max(self.stage_blocks, 1) * self.block
+
+    @property
+    def compact_slots(self) -> int:
+        return self.hot_slots + self.stage_slots
+
+    @property
+    def cold_blocks(self) -> int:
+        return self.n_blocks - self.hot_blocks
+
+    # ------------------------------------------------------------- leaves
+    def register_leaf(self, name: str, leaf) -> None:
+        """Adopt an optimizer-moment leaf mirroring the pool.  The compact
+        device leaf must still be at its *uniform* initial value (fresh
+        ``opt.init``) — the host mirror is filled with that value, so the
+        cold tier's moments start exactly where the resident oracle's do."""
+        if name in self._host:
+            return
+        arr = jnp.asarray(leaf)
+        lo, hi = jax.device_get((jnp.min(arr), jnp.max(arr)))
+        if lo != hi:
+            raise ValueError(
+                f"pool leaf {name!r} must be uniform at registration "
+                f"(fresh optimizer init); got range [{lo}, {hi}]")
+        self._host[name] = np.full((self.n_blocks, self.block), lo,
+                                   np.asarray(arr).dtype)
+
+    def _register_tree(self, tree: dict) -> None:
+        for name, leaf in tree.items():
+            if name not in self._host:
+                self.register_leaf(name, leaf)
+
+    # ----------------------------------------------------- compact <-> full
+    def initial_compact(self, name: str = "memory") -> jax.Array:
+        """The leaf's initial compact pool: hot slab from the host mirror,
+        stage region zeroed (install overwrites it before any lookup)."""
+        host = self._host[name]
+        hot = host[self.hot_ids].reshape(-1)
+        stage = np.zeros(self.stage_slots, host.dtype)
+        return jnp.asarray(np.concatenate([hot, stage]))
+
+    def full_pool(self, compact, name: str = "memory") -> np.ndarray:
+        """Reconstruct the full [m] pool a resident run would hold —
+        host mirror overlaid with the live hot slab and stage rows.
+        Bit-exact (pure row copies); the oracle for tests and the export
+        path for eval/checkpointing a tiered run."""
+        out = self._host[name].copy()
+        dev = np.asarray(jax.device_get(compact))
+        out[self.hot_ids] = dev[: self.hot_slots].reshape(
+            self.hot_blocks, self.block)
+        if self._staged_ids is not None and self._staged_ids.size:
+            rows = dev[self.hot_slots:].reshape(-1, self.block)
+            out[self._staged_ids] = rows[: self._staged_ids.size]
+        return out.reshape(-1)
+
+    # ------------------------------------------------------- device buffers
+    def batch_tier_buffers(self) -> dict:
+        """The three remap buffers for *this* step, to ride in the batch
+        (they change per step, so they must be traced jit inputs, not
+        closed-over constants)."""
+        return {"tier_hot_ids": jnp.asarray(self.hot_ids),
+                "tier_stage_ids": self._stage_ids_dev,
+                "tier_block": jnp.asarray(self.block, jnp.int32)}
+
+    # ------------------------------------------------------------- planning
+    def touched_blocks(self, locations) -> tuple[np.ndarray, np.ndarray]:
+        """Host-side: unique (block ids, touch counts) of a location set."""
+        loc = np.asarray(locations).reshape(-1)
+        return np.unique(loc // self.block, return_counts=True)
+
+    def observe(self, blocks: np.ndarray, counts: np.ndarray) -> None:
+        """Fold one step's touches into the EMA (the re-tier signal)."""
+        self.ema *= self.ema_decay
+        np.add.at(self.ema, np.asarray(blocks, np.int64),
+                  np.asarray(counts, np.float64))
+
+    # -------------------------------------------------------------- staging
+    def stage(self, blocks: np.ndarray) -> dict:
+        """Start the async host->device fetch of every *cold* block in
+        ``blocks``.  Returns per-call stats.  Raises if the batch touches
+        more cold blocks than the staging capacity — the honest failure
+        mode; silent truncation would break bit-exactness."""
+        blocks = np.asarray(blocks, np.int64)
+        cold = np.setdiff1d(blocks, self.hot_ids, assume_unique=False)
+        if cold.size > self.stage_blocks:
+            raise ValueError(
+                f"batch touches {cold.size} cold blocks but stage capacity "
+                f"is {self.stage_blocks}; raise stage_blocks (or the "
+                f"tier budget)")
+        S = max(self.stage_blocks, 1)
+        ids = np.full(S, self.n_blocks, np.int32)      # sentinel pad
+        ids[: cold.size] = np.sort(cold).astype(np.int32)
+        self._flip ^= 1
+        pend = {}
+        for name, host in self._host.items():
+            bufs = self._hbuf.setdefault(name, [
+                np.zeros((S, self.block), host.dtype) for _ in range(2)])
+            buf = bufs[self._flip]
+            buf[: cold.size] = host[np.sort(cold)]
+            # async: returns immediately, the copy overlaps caller's work;
+            # the double buffer keeps the in-flight source stable
+            pend[name] = jax.device_put(buf)
+        self._pending = pend
+        self._pending_ids = ids
+        nbytes = int(sum(cold.size * self.block * h.dtype.itemsize
+                         for h in self._host.values()))
+        self.stats["host_fetch_bytes"] += nbytes
+        self.stats["staged_blocks"] += int(cold.size)
+        self.stats["stage_steps"] += 1
+        return {"staged": int(cold.size), "fetch_bytes": nbytes}
+
+    def install(self, tree: dict) -> dict:
+        """Consume the pending stage: compact = concat(hot slab, staged
+        rows), per leaf.  Must follow a :meth:`stage` call."""
+        assert self._pending is not None, "install() without stage()"
+        self._register_tree(tree)
+        out = {}
+        for name, leaf in tree.items():
+            staged = self._pending[name].reshape(-1)
+            out[name] = jnp.concatenate([leaf[: self.hot_slots], staged])
+        ids = self._pending_ids
+        self._staged_ids = ids[ids < self.n_blocks].astype(np.int64)
+        self._stage_ids_dev = jnp.asarray(ids)
+        self._pending = None
+        self._pending_ids = None
+        return out
+
+    def writeback(self, tree: dict) -> None:
+        """Persist the previous step's staged rows (post-update) to the host
+        mirror.  No-op before the first stage.  Registers any moment leaves
+        it has not seen (their first appearance is the fresh opt init)."""
+        self._register_tree(tree)
+        if self._staged_ids is None or not self._staged_ids.size:
+            return
+        n = self._staged_ids.size
+        nbytes = 0
+        for name, leaf in tree.items():
+            rows = np.asarray(jax.device_get(leaf[self.hot_slots:])).reshape(
+                -1, self.block)
+            self._host[name][self._staged_ids] = rows[:n]
+            nbytes += n * self.block * self._host[name].dtype.itemsize
+        self.stats["writeback_bytes"] += nbytes
+
+    # ------------------------------------------------------------- re-tier
+    def retier(self, tree: dict, max_swaps: int | None = None,
+               hysteresis: float = 1.0) -> tuple[dict, dict]:
+        """Promote/demote by the touch-count EMA, migrating rows bit-exactly.
+
+        Call AFTER :meth:`writeback` (the host must be fresh for staged
+        blocks) and BEFORE the next :meth:`stage`.  The whole hot slab is
+        first written back — making the host mirror authoritative for every
+        block — then the new top-``hot_blocks`` set (with ``hysteresis``:
+        a cold block must beat the weakest incumbent by that factor) is
+        re-uploaded in sorted-id order.  Round-tripping rows through host
+        numpy preserves f32 bits, so lookups and optimizer moments are
+        unchanged for every surviving block (``tests/test_tier.py`` pins a
+        resident-oracle training run across re-tier boundaries).
+        """
+        self._register_tree(tree)
+        if not self.hot_blocks or not self.cold_blocks:
+            return tree, {"promoted": 0, "demoted": 0}
+        # 1. host becomes authoritative for the hot slab
+        for name, leaf in tree.items():
+            rows = np.asarray(jax.device_get(leaf[: self.hot_slots]))
+            self._host[name][self.hot_ids] = rows.reshape(
+                self.hot_blocks, self.block)
+        # 2. pick the new hot set (ties -> lower block id, like freq's top-k)
+        order = np.lexsort((np.arange(self.n_blocks), -self.ema))
+        ideal = np.sort(order[: self.hot_blocks])
+        incoming = np.setdiff1d(ideal, self.hot_ids)
+        if hysteresis > 1.0 or max_swaps is not None:
+            out_cand = np.setdiff1d(self.hot_ids, ideal)
+            # weakest incumbents leave first; a challenger must beat the
+            # incumbent it replaces by the hysteresis factor
+            out_sorted = out_cand[np.argsort(self.ema[out_cand],
+                                             kind="stable")]
+            in_sorted = incoming[np.argsort(-self.ema[incoming],
+                                            kind="stable")]
+            n = min(out_sorted.size, in_sorted.size)
+            if max_swaps is not None:
+                n = min(n, int(max_swaps))
+            keep = self.ema[in_sorted[:n]] > hysteresis * self.ema[
+                out_sorted[:n]]
+            in_sorted, out_sorted = in_sorted[:n][keep], out_sorted[:n][keep]
+            new_hot = np.sort(np.concatenate([
+                np.setdiff1d(self.hot_ids, out_sorted), in_sorted]))
+            incoming = in_sorted
+        else:
+            new_hot = ideal
+        n_swap = int(incoming.size)
+        if n_swap == 0:
+            # slab content may still need no rebuild; hot set unchanged
+            if np.array_equal(new_hot, self.hot_ids):
+                return tree, {"promoted": 0, "demoted": 0}
+        # 3. rebuild the compact slab from the (now authoritative) host
+        self.hot_ids = new_hot.astype(np.int32)
+        out = {}
+        for name, leaf in tree.items():
+            hot = jnp.asarray(self._host[name][self.hot_ids].reshape(-1))
+            out[name] = jnp.concatenate([hot, leaf[self.hot_slots:]])
+        self.stats["promoted"] += n_swap
+        self.stats["demoted"] += n_swap
+        return out, {"promoted": n_swap, "demoted": n_swap}
+
+    # ----------------------------------------------------------- integrity
+    def sanitize_cold(self) -> int:
+        """Chunked integrity scan over the host-cold tier (the np twin of
+        ``resilience.integrity.sanitize``): quarantine (zero) blocks of the
+        host mirror carrying bit-rot signatures.  Hot blocks are skipped —
+        the device copy is authoritative and the trainer's in-run scan
+        covers it.  Returns quarantined chunk count."""
+        from repro.resilience import integrity as integ
+        n_bad = 0
+        cold_mask = np.ones(self.n_blocks, bool)
+        cold_mask[self.hot_ids] = False
+        for host in self._host.values():
+            if not np.issubdtype(host.dtype, np.floating):
+                continue
+            cold = host[cold_mask]
+            clean, bad = integ.np_sanitize(cold)
+            if bad:
+                host[cold_mask] = clean
+                n_bad += bad
+        self.stats["quarantined_cold_chunks"] += n_bad
+        return n_bad

@@ -1,0 +1,190 @@
+"""TierController — drives a :class:`~repro.tier.store.TieredStore` through
+the training loop.
+
+The controller owns the per-step protocol (writeback -> retier -> plan ->
+stage -> install) and the two seams that make tiering invisible to the rest
+of the stack:
+
+  * **batch transport**: the remap buffers (``tier_hot_ids`` /
+    ``tier_stage_ids`` / ``tier_block``) change every step, so they cannot
+    be jit-closed constants — the controller's :meth:`batch_fn` rides them
+    inside the batch dict, and the loss function peels them back out with
+    :func:`split_batch` and merges them into the embedding buffers;
+  * **pytree surgery**: the compact pool and its optimizer-moment leaves
+    live wherever the optimizer put them; :func:`pool_leaf_paths` finds
+    every 1-D, float, ``compact_slots``-sized leaf on a path through a
+    ``memory`` key (in both ``params`` and ``opt_state``) so promotion /
+    demotion migrates values and moments together.
+
+The controller plans the stage set from the *same* location math the step
+itself uses (``scheme.locations`` on the upcoming batch's global ids), which
+is what guarantees every location the step touches has a compact image —
+the bit-exactness precondition of
+:func:`~repro.tier.store.remap_locations`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TIER_KEYS = ("tier_hot_ids", "tier_stage_ids", "tier_block")
+RETIER_EVERY_DEFAULT = 8
+
+
+def split_batch(batch: dict) -> tuple[dict, dict]:
+    """Peel the per-step tier remap buffers out of a batch dict.
+
+    Returns ``(model_batch, tier_buffers)``; the loss function merges
+    ``tier_buffers`` into the embedding buffers before calling the model.
+    A batch from an untiered run passes through unchanged (empty dict).
+    """
+    tier = {k: batch[k] for k in TIER_KEYS if k in batch}
+    clean = {k: v for k, v in batch.items() if k not in TIER_KEYS}
+    return clean, tier
+
+
+def tiered_active(buffers: dict | None) -> bool:
+    """Do these embedding buffers carry live tier remap state?"""
+    return bool(buffers) and "tier_hot_ids" in buffers
+
+
+def _through_memory(path) -> bool:
+    for k in path:
+        if getattr(k, "key", None) == "memory" or \
+                getattr(k, "name", None) == "memory":
+            return True
+    return False
+
+
+def pool_leaf_paths(tree, compact_slots: int) -> list:
+    """``[(keystr, leaf)]`` for every leaf mirroring the compact pool:
+    1-D, floating, exactly ``compact_slots`` long, reached through a
+    ``memory`` pytree key.  Works on ``params`` and on arbitrarily nested
+    optimizer state (masked / multi_transform wrappers keep param-shaped
+    moment leaves under the same key names)."""
+    hits = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        if getattr(leaf, "ndim", None) != 1:
+            continue
+        if int(leaf.shape[0]) != compact_slots:
+            continue
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            continue
+        if not _through_memory(path):
+            continue
+        hits.append((jax.tree_util.keystr(path), leaf))
+    return hits
+
+
+def _replace(tree, mapping: dict):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: mapping.get(jax.tree_util.keystr(p), l), tree)
+
+
+class TierController:
+    """Between-steps driver for one tiered pool.
+
+    ``batch_fn``: the raw step -> batch function (the controller wraps it).
+    ``plan_fn``: batch -> global pool locations (any shape, int) the step
+    will touch — normally ``scheme.locations`` over the batch's global ids.
+    ``retier_every``: promote/demote cadence in steps (0 disables).
+    """
+
+    def __init__(self, store, batch_fn, plan_fn,
+                 retier_every: int = RETIER_EVERY_DEFAULT,
+                 max_swaps: int | None = None, hysteresis: float = 1.0):
+        self.store = store
+        self._raw_batch_fn = batch_fn
+        self.plan_fn = plan_fn
+        self.retier_every = int(retier_every)
+        self.max_swaps = max_swaps
+        self.hysteresis = float(hysteresis)
+        self._cache_step = None
+        self._cache_batch = None
+
+    # ------------------------------------------------------------ batches
+    def _peek(self, step: int):
+        if self._cache_step != step:
+            self._cache_batch = self._raw_batch_fn(step)
+            self._cache_step = step
+        return self._cache_batch
+
+    def batch_fn(self, step: int) -> dict:
+        """The trainer-facing batch function: the raw batch plus this
+        step's tier remap buffers (stage must already have run — the
+        trainer calls :meth:`pre_step` first)."""
+        return {**self._peek(step), **self.store.batch_tier_buffers()}
+
+    # ------------------------------------------------------- pytree seams
+    def _collect(self, params, opt_state):
+        """-> (name -> leaf dict, put(tree) -> (params, opt_state)).
+
+        The value pool (under ``params``) is the store's ``"memory"``
+        leaf; optimizer moments get stable ``opt:<path>`` names."""
+        slots = self.store.compact_slots
+        p_hits = pool_leaf_paths(params, slots)
+        assert len(p_hits) == 1, (
+            f"expected exactly one pool leaf in params, got "
+            f"{[k for k, _ in p_hits]}")
+        o_hits = pool_leaf_paths(opt_state, slots)
+        tree = {"memory": p_hits[0][1]}
+        tree.update({f"opt:{k}": leaf for k, leaf in o_hits})
+        p_key = p_hits[0][0]
+
+        def put(new_tree):
+            new_params = _replace(params, {p_key: new_tree["memory"]})
+            omap = {k: new_tree[f"opt:{k}"] for k, _ in o_hits}
+            return new_params, _replace(opt_state, omap)
+
+        return tree, put
+
+    # ------------------------------------------------------------ the hook
+    def pre_step(self, step: int, params, opt_state):
+        """Run between steps, before the trainer asks for the batch:
+        writes back the previous stage, re-tiers on cadence, plans and
+        stages this step's cold blocks, installs the new compact pool.
+        Returns ``(params, opt_state, info)``."""
+        st = self.store
+        tree, put = self._collect(params, opt_state)
+        st.writeback(tree)
+        info = {"promoted": 0, "demoted": 0}
+        if self.retier_every and step > 0 and step % self.retier_every == 0:
+            tree, info = st.retier(tree, max_swaps=self.max_swaps,
+                                   hysteresis=self.hysteresis)
+        batch = self._peek(step)
+        loc = np.asarray(jax.device_get(self.plan_fn(batch)))
+        blocks, counts = st.touched_blocks(loc)
+        st.observe(blocks, counts)
+        info.update(st.stage(blocks))
+        tree = st.install(tree)
+        params, opt_state = put(tree)
+        return params, opt_state, info
+
+    def on_restore(self):
+        """Checkpoint restore replaced the compact device pool: the
+        previously staged rows no longer correspond to it, so drop them
+        (the next :meth:`pre_step`'s writeback becomes a no-op; the host
+        mirror keeps its last written-back values — the cold tier is not
+        checkpointed, a documented limitation)."""
+        self.store._staged_ids = None
+        self._cache_step = None
+        self._cache_batch = None
+
+    # ------------------------------------------------------------- export
+    def export_params(self, params):
+        """Params with the compact pool replaced by the reconstructed full
+        [m] pool — what eval / checkpoint-export code should see.  Bit-exact
+        (pure row copies through the host mirror)."""
+        hits = pool_leaf_paths(params, self.store.compact_slots)
+        assert len(hits) == 1, [k for k, _ in hits]
+        key, leaf = hits[0]
+        full = jnp.asarray(self.store.full_pool(leaf, "memory"))
+        return _replace(params, {key: full})
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        s = dict(self.store.stats)
+        s["hot_rows"] = self.store.hot_slots
+        s["cold_rows"] = self.store.m - self.store.hot_slots
+        return s

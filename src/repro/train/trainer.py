@@ -59,15 +59,33 @@ from repro.resilience import integrity as integ_lib
 from repro.resilience.health import Health
 
 
-def throughput_stats(step_times, lookups_per_step: int = 0) -> dict:
+def throughput_stats(step_times, lookups_per_step: int = 0,
+                     tier_stats: dict | None = None) -> dict:
     """One throughput definition for trainer logs AND the kernel bench:
     median step wall-time -> steps/s, scaled by the embedding-row lookups a
-    step performs (0 when unknown)."""
+    step performs (0 when unknown).  ``tier_stats`` (a
+    ``TierController.stats()`` dict, when the pool is tiered) adds the
+    host-traffic view: staged cold blocks and host-fetch bytes averaged
+    per staging step, plus the hot/cold row split."""
     if not len(step_times):
-        return {"steps_per_sec": 0.0, "lookups_per_sec": 0.0}
-    sps = 1.0 / max(float(np.median(np.asarray(step_times))), 1e-12)
-    return {"steps_per_sec": sps,
-            "lookups_per_sec": sps * lookups_per_step}
+        out = {"steps_per_sec": 0.0, "lookups_per_sec": 0.0}
+    else:
+        sps = 1.0 / max(float(np.median(np.asarray(step_times))), 1e-12)
+        out = {"steps_per_sec": sps,
+               "lookups_per_sec": sps * lookups_per_step}
+    if tier_stats:
+        n = max(tier_stats.get("stage_steps", 0), 1)
+        out.update({
+            "tier_hot_rows": tier_stats.get("hot_rows", 0),
+            "tier_cold_rows": tier_stats.get("cold_rows", 0),
+            "tier_staged_blocks_per_step":
+                tier_stats.get("staged_blocks", 0) / n,
+            "tier_host_fetch_bytes_per_step":
+                tier_stats.get("host_fetch_bytes", 0) / n,
+            "tier_promoted": tier_stats.get("promoted", 0),
+            "tier_demoted": tier_stats.get("demoted", 0),
+        })
+    return out
 
 
 def _restore_like(template, restored):
@@ -104,8 +122,17 @@ class Trainer:
     def __init__(self, cfg: TrainerConfig, loss_fn: Callable, params,
                  optimizer: Optimizer, batch_fn: Callable[[int], dict],
                  donate: bool = True, sparse_grads: bool | None = None,
-                 faults: faults_lib.FaultInjector | None = None):
+                 faults: faults_lib.FaultInjector | None = None,
+                 tier=None):
         """``batch_fn(step) -> host batch dict`` (seekable by step).
+
+        ``tier``: a :class:`repro.tier.training.TierController` when the
+        memory pool exceeds the per-device budget.  The trainer then runs
+        the controller's between-steps hook (writeback -> re-tier -> stage
+        -> install) before fetching each batch, and draws batches through
+        the controller so the per-step tier remap buffers ride along.
+        The checkpointed state is the *compact* device pool; the host-cold
+        tier is not checkpointed (a rollback drops any staged rows).
 
         ``sparse_grads=None`` auto-enables the sparse-gradient pipeline
         (``repro.optim.sparse``) when the gate is on and the params hold a
@@ -123,7 +150,8 @@ class Trainer:
         self.optimizer = optimizer
         self.params = params
         self.opt_state = optimizer.init(params)
-        self.batch_fn = batch_fn
+        self.tier = tier
+        self.batch_fn = tier.batch_fn if tier is not None else batch_fn
         self.step = 0
         self.mgr = (CheckpointManager(cfg.ckpt_dir, cfg.keep)
                     if cfg.ckpt_dir else None)
@@ -196,6 +224,8 @@ class Trainer:
         self.params = _restore_like(self.params, state["params"])
         self.opt_state = _restore_like(self.opt_state, state["opt_state"])
         self.step = int(np.asarray(state["step"]))
+        if self.tier is not None:
+            self.tier.on_restore()
         report = self.mgr.last_restore_report
         self.health.quarantined_chunks += report.get("quarantined_chunks", 0)
         if self.cfg.verify_pool and self._has_pool:
@@ -217,6 +247,13 @@ class Trainer:
                 self.faults.pre_step(self, self.step)
                 if self._preempted:
                     continue
+            if self.tier is not None:
+                # writeback previous stage -> re-tier on cadence -> plan +
+                # stage this step's cold blocks (async device_put) ->
+                # install the new compact pool.  Runs before batch_fn so
+                # the remap buffers in the batch match the installed pool.
+                self.params, self.opt_state, _ = self.tier.pre_step(
+                    self.step, self.params, self.opt_state)
             batch = self.batch_fn(self.step)
             fault = self.faults.grad_fault(self.step) if self.faults else 1.0
             delay = self.faults.step_delay(self.step) if self.faults else 0.0
@@ -264,8 +301,14 @@ class Trainer:
     def _result(self, last_loss: float, preempted: bool) -> dict:
         # one constructor for every exit path: the preempted dict used to
         # silently drop straggler_steps (and would have dropped the health
-        # counters), breaking dashboards that key on them
+        # counters), breaking dashboards that key on them.  guard_enabled +
+        # the resolved exchange make bench rows / logs self-describing —
+        # health counters without the mode that produced them were ambiguous
+        from repro.dist import exchange as exchange_lib
         return {"step": self.step, "loss": last_loss, "preempted": preempted,
+                "guard_enabled": bool(self.guard),
+                "exchange": exchange_lib.effective(exchange_lib.FORCED)
+                if exchange_lib.FORCED else "auto",
                 **self.health.as_dict(), **self.throughput()}
 
     # ------------------------------------------------------------ resilience
@@ -280,6 +323,10 @@ class Trainer:
         self.params, n_bad = integ_lib.sanitize_tree(self.params)
         self.opt_state, n_bad_opt = integ_lib.sanitize_tree(self.opt_state)
         n_bad += n_bad_opt
+        if self.tier is not None:
+            # the host-cold tier never visits the device, so the on-device
+            # scan cannot see it — run the numpy twin over the host mirror
+            n_bad += self.tier.store.sanitize_cold()
         if n_bad:
             self.health.quarantined_chunks += n_bad
             log(f"[trainer] pool integrity: quarantined {n_bad} corrupt "
@@ -311,8 +358,11 @@ class Trainer:
 
     def throughput(self) -> dict:
         """steps/s + lookups/s from the step wall-time ring buffer — the
-        same definition bench_kernels reports (trainer.throughput_stats)."""
-        return throughput_stats(self._step_times, self.cfg.lookups_per_step)
+        same definition bench_kernels reports (trainer.throughput_stats) —
+        plus the tier host-traffic stats when the pool is tiered."""
+        return throughput_stats(
+            self._step_times, self.cfg.lookups_per_step,
+            tier_stats=self.tier.stats() if self.tier is not None else None)
 
     def _track_straggler(self, dt: float):
         self._step_times.append(dt)   # deque(maxlen=256): O(1) ring buffer

@@ -178,6 +178,43 @@ def test_guard_overhead_gate_logic():
     assert any("cannot run" in f for f in fails)
 
 
+def test_tiered_slowdown_gate_logic():
+    """The tiered-store gate: controller-driven tiered train step within
+    2x of the fully-resident step at the paper shape; missing rows and a
+    ledger without the tiered summary block are flagged."""
+    from benchmarks.check_regression import (TIER_GATE_SHAPE,
+                                             tiered_slowdown_failures)
+    ok = {("train_step_tiered", TIER_GATE_SHAPE): 150.0,
+          ("train_step_resident", TIER_GATE_SHAPE): 100.0}
+    assert tiered_slowdown_failures(ok) == []
+    slow = dict(ok)
+    slow[("train_step_tiered", TIER_GATE_SHAPE)] = 210.0     # 2.1x
+    fails = tiered_slowdown_failures(slow)
+    assert any("slowdown" in f and "2.10x" in f for f in fails)
+    assert any("cannot run" in f for f in tiered_slowdown_failures({}))
+    assert any("tiered block missing" in f
+               for f in tiered_slowdown_failures(ok, {"rows": []}))
+
+
+def test_committed_baseline_passes_tiered_gate():
+    """This PR's acceptance artifact: the committed ledger carries the
+    tiered lookup/fetch/train rows and the tiered train step is within the
+    2x slowdown gate of the resident step."""
+    from benchmarks.check_regression import (TIER_GATE_SHAPE,
+                                             TIERED_SLOWDOWN_MAX,
+                                             tiered_slowdown_failures)
+    with open(BASELINE) as f:
+        doc = json.load(f)
+    rows = load_rows(doc)
+    for k in ("tiered_lookup_hot", "tiered_lookup_cold", "train_step_tiered",
+              "train_step_resident"):
+        assert (k, TIER_GATE_SHAPE) in rows, k
+    assert any(k == "host_fetch_bandwidth" for k, _s in rows)
+    assert tiered_slowdown_failures(rows, doc) == []
+    assert doc["tiered"]["slowdown"] <= TIERED_SLOWDOWN_MAX
+    assert doc["tiered"]["host_fetch_bytes_per_step"] > 0
+
+
 def test_committed_baseline_passes_guard_gate():
     """This PR's acceptance artifact: both step rows are in the committed
     ledger and the guarded step is within 5% of the unguarded one."""

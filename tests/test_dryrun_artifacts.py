@@ -148,6 +148,46 @@ def test_recsys_train_artifacts_record_sparse_update_costs():
             assert meta["sparse_grads"] == expect_sparse, (arch, mesh, meta)
 
 
+def test_recsys_train_artifacts_record_tier_split():
+    """Every memory-family recsys train cell's meta carries the tiering
+    posture it would launch with (repro.launch.steps._tier_meta): hot/cold
+    split from the same ``tier_split`` rule the launcher applies, plus the
+    modeled host-fetch bytes/step.  The committed cells lower with no
+    per-device budget, so the recorded posture is all-hot with zero host
+    traffic — and the split must still account for every pool slot.  The
+    non-trivial branch (a budget smaller than the pool) is pinned here
+    directly against the same helper the artifacts were lowered through."""
+    from repro.embed import get_scheme
+    from repro.launch.steps import _tier_meta
+
+    for arch in ("dlrm-rm2", "dcn-v2", "xdeepfm", "din"):
+        rcfg = get_config(arch).make_model("train_batch")
+        e = rcfg.embedding
+        m = get_scheme(e.kind).memory_slots(e)
+        for mesh in ("16x16", "2x16x16"):
+            tier = _load(arch, "train_batch", mesh)["meta"]["tier"]
+            assert set(tier) == {"tier_budget_mb", "hot_rows", "cold_rows",
+                                 "host_fetch_bytes_per_step"}
+            assert tier["hot_rows"] + tier["cold_rows"] == m, (arch, mesh)
+            assert tier["tier_budget_mb"] is None
+            assert tier["cold_rows"] == 0
+            assert tier["host_fetch_bytes_per_step"] == 0
+
+    # the over-budget branch of the same helper: a 256 MB budget on the
+    # 135M-slot pool splits hot/cold and models real host traffic
+    rcfg = get_config("dlrm-rm2").make_model("train_batch")
+    os.environ["REPRO_TIER_BUDGET_MB"] = "256"
+    try:
+        tier = _tier_meta(rcfg, 4096)["tier"]
+    finally:
+        del os.environ["REPRO_TIER_BUDGET_MB"]
+    m = get_scheme(rcfg.embedding.kind).memory_slots(rcfg.embedding)
+    assert tier["tier_budget_mb"] == 256.0
+    assert 0 < tier["hot_rows"] <= 256 * 2**20 // 4
+    assert tier["hot_rows"] + tier["cold_rows"] == m
+    assert tier["host_fetch_bytes_per_step"] > 0
+
+
 def test_lma_memory_traffic_is_activation_sized():
     """The paper-critical property: collective bytes for the recsys train cells
     stay activation-sized — independent of the 135M-slot memory budget."""

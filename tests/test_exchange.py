@@ -90,6 +90,37 @@ def test_lookup_cost_alloc_term_moves_the_choice():
     assert c_fus["all_to_all"] == pytest.approx(c_def["all_to_all"])
 
 
+def test_resolve_clamps_caller_asserted_fused_flag():
+    """An explicit ``fused=True`` cannot outrun the VMEM gate: when the pool
+    is known and its per-device slab exceeds the fused engine's budget, the
+    discount is clamped off — previously it leaked through and could
+    mis-pick psum for an over-budget pool config."""
+    m_big = 135_266_304                       # 34 MiB/device at 4 ranks: over
+    assert not exl.fused_slab_eligible(m_big, 4)
+    honest = exl.resolve_exchange(MESH_2x4, B=4096, d=32, m=m_big)
+    asserted = exl.resolve_exchange(MESH_2x4, B=4096, d=32, m=m_big,
+                                    fused=True)
+    assert asserted is honest
+    assert asserted is not exl.PSUM
+    # the cost-table entry the clamp protects: with the discount leaked,
+    # psum prices below the chunked strategies and would be mis-picked
+    leaked = exl.lookup_cost(4, 4096, 32, fused=True)
+    clamped = exl.lookup_cost(4, 4096, 32, fused=False)
+    assert min(leaked, key=leaked.get) == "psum"
+    assert min(clamped, key=clamped.get) != "psum"
+    # a genuinely eligible slab keeps the explicit flag untouched
+    assert exl.fused_slab_eligible(1 << 21, 4)
+
+
+def test_tier_fetch_bytes_model():
+    """Host-fetch cost term for the tiered store: each staged cold block
+    crosses PCIe twice (fetch + writeback) per pool leaf."""
+    assert exl.tier_fetch_bytes(0, 512) == 0
+    assert exl.tier_fetch_bytes(3, 512) == 2 * 3 * 512 * 4
+    assert exl.tier_fetch_bytes(3, 512, n_leaves=2) == 2 * exl.tier_fetch_bytes(3, 512)
+    assert exl.tier_fetch_bytes(3, 512, itemsize=2) == exl.tier_fetch_bytes(3, 512) // 2
+
+
 def test_eligibility_fallback():
     assert exl.RING.eligible(64, 4) and exl.ALL_TO_ALL.eligible(64, 4)
     assert not exl.RING.eligible(63, 4)
@@ -326,6 +357,67 @@ print("ALL_EXCHANGE_TRAIN_OK")
 """
 
 
+_CSR_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core.signatures import synthetic_dense_store
+from repro.dist import exchange as exl
+from repro.dist.context import use_mesh
+from repro.dist.sharded_memory import shard_csr, shard_csr_buffers
+from repro.embed import EmbeddingTable, get_scheme
+
+assert len(jax.devices()) == 8
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+rng = np.random.default_rng(0)
+
+# a ragged CSR signature store built from the dense synthetic one
+ds = synthetic_dense_store(512, 8, max_set=32, seed=2)
+lengths = np.asarray(ds.lengths)
+sets = np.asarray(ds.sets)
+flat = np.concatenate([sets[i, : lengths[i]] for i in range(512)])
+offsets = np.concatenate([[0], np.cumsum(lengths)]).astype(np.int32)
+bufs = {"store_flat": jnp.asarray(flat),
+        "store_offsets": jnp.asarray(offsets),
+        "store_lengths": jnp.asarray(lengths)}
+
+# shard_csr round-trip: per-rank re-based offsets reconstruct every row
+flat_sh, offs_sh = shard_csr(flat, offsets, 4)
+per = 512 // 4
+for r in range(4):
+    for v in range(per):
+        s, e = offs_sh[r, v], offs_sh[r, v + 1]
+        g = r * per + v
+        np.testing.assert_array_equal(
+            flat_sh[r, s:e], flat[offsets[g]: offsets[g + 1]])
+print("shard_csr round-trip OK")
+
+scheme = get_scheme("lma")
+table = EmbeddingTable(scheme.build_config((512,), 16, 4096, seed=3))
+params = table.init(jax.random.key(1))
+ids = jnp.asarray(rng.integers(0, 512, (64,), np.int32))
+want = table.embed(params, bufs, 0, ids)          # no mesh, raw CSR: oracle
+
+sh_bufs = shard_csr_buffers(bufs, mesh)
+assert "store_flat_sh" in sh_bufs and "store_flat" not in sh_bufs
+
+for name in ("psum", "ring", "all_to_all"):
+    exl.FORCED = name
+    try:
+        with use_mesh(mesh):
+            got = table.embed(params, sh_bufs, 0, ids)
+            raw = table.embed(params, bufs, 0, ids)   # unsharded CSR fallback
+    finally:
+        exl.FORCED = None
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(raw), np.asarray(want))
+    print("csr sharded lookup", name, "OK (and raw-CSR fallback)")
+
+print("CSR_SHARDED_ALL_OK")
+"""
+
+
 def _run_sub(script):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -346,3 +438,15 @@ def test_exchange_sparse_training_parity_2x4():
     r = _run_sub(_TRAIN_SCRIPT)
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
     assert "ALL_EXCHANGE_TRAIN_OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_csr_sharded_store_parity_2x4():
+    """The 'model'-sharded CSR signature store (shard_csr_buffers) through
+    the public embed path: ragged sets reconstructed with
+    Exchange.partial_sum_lookup are bit-identical to the replicated raw-CSR
+    oracle under psum, ring and all_to_all — the store stops replicating
+    without moving a single output bit."""
+    r = _run_sub(_CSR_SCRIPT)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+    assert "CSR_SHARDED_ALL_OK" in r.stdout

@@ -90,6 +90,76 @@ def test_batching_scorer_with_recsys_model():
         assert g == pytest.approx(want, rel=1e-5)
 
 
+def test_batching_scorer_embedding_table_all_registry_schemes():
+    """An EmbeddingTable-backed score function for every registered scheme:
+    the batching layer (power-of-two padding, worker-thread batches) must
+    not perturb any scheme's lookup — per-row scores equal the direct
+    single-example forward."""
+    from repro.core.signatures import synthetic_dense_store
+    from repro.embed import EmbeddingTable, get_scheme, list_schemes
+
+    rng = np.random.default_rng(0)
+    for kind in list_schemes():
+        scheme = get_scheme(kind)
+        table = EmbeddingTable(scheme.build_config((512,), 16, 4096, seed=3))
+        store = None
+        if scheme.buffer_source == "signatures":
+            store = synthetic_dense_store(512, 8, max_set=32, seed=2)
+        elif scheme.buffer_source == "id_counts":
+            store = rng.integers(0, 50, 512).astype(np.int64)
+        bufs = table.make_buffers(store)
+        params = table.init(jax.random.key(1))
+        fwd = jax.jit(
+            lambda p, ids, _t=table, _b=bufs: _t.embed(p, _b, 0, ids).sum(-1))
+
+        def score_fn(batch, _fwd=fwd, _p=params):
+            return np.asarray(_fwd(_p, jnp.asarray(batch["ids"])))
+
+        feats = [{"ids": np.int32(i * 37 % 512)} for i in range(9)]
+        scorer = BatchingScorer(score_fn, max_batch=4, max_delay_ms=3.0)
+        try:
+            got = [scorer.score(f) for f in feats]
+        finally:
+            scorer.close()
+        for f, g in zip(feats, got):
+            want = float(fwd(params, jnp.asarray([f["ids"]]))[0])
+            assert g == pytest.approx(want, rel=1e-6), kind
+
+
+def test_batching_scorer_serves_tiered_export():
+    """Serving a pool trained through repro.tier: the exported full pool
+    (TieredStore.full_pool) scores bit-identically to the resident pool —
+    the serve path needs no tier awareness at all."""
+    from repro.embed import EmbeddingTable
+    from repro.embed.config import EmbeddingConfig
+    from repro.tier import TieredStore
+
+    cfg = EmbeddingConfig(kind="hashed_elem", vocab_sizes=(1000, 500),
+                          dim=16, budget=4096)
+    table = EmbeddingTable(cfg)
+    bufs = table.make_buffers()
+    params = table.init(jax.random.key(1))
+    st = TieredStore(np.asarray(params["memory"]), 1024, block=128)
+    st.stage(np.arange(8, 32))
+    tree = st.install({"memory": st.initial_compact()})
+    served = {"memory": jnp.asarray(st.full_pool(tree["memory"]))}
+
+    fwd = jax.jit(lambda p, ids: table.embed_fields(p, bufs, ids).sum((-2, -1)))
+    rng = np.random.default_rng(2)
+    feats = [{"ids": np.stack([rng.integers(0, 1000), rng.integers(0, 500)]
+                              ).astype(np.int32)} for _ in range(6)]
+    scorer = BatchingScorer(
+        lambda b: np.asarray(fwd(served, jnp.asarray(b["ids"]))),
+        max_batch=4, max_delay_ms=3.0)
+    try:
+        got = [scorer.score(f) for f in feats]
+    finally:
+        scorer.close()
+    for f, g in zip(feats, got):
+        want = float(fwd(params, jnp.asarray(f["ids"])[None])[0])
+        assert g == want, "tiered export must serve bit-identically"
+
+
 def test_lm_server_generates_and_reuses_slots():
     from repro.configs.base import get_config
     from repro.models import transformer
