@@ -278,16 +278,22 @@ def _sparse_meta(rcfg, B: int, mesh) -> dict:
             {k: int(v) for k, v in costs.items()}}
 
 
-def _tier_meta(rcfg, B: int) -> dict:
+def _tier_meta(rcfg, B: int, mesh=None) -> dict:
     """Tier split + modeled host-fetch traffic for the dryrun artifact.
 
     Always emitted for memory-pool train cells so the artifact records the
     tiering posture the cell would launch with: no budget (or a pool that
-    fits) lowers as all-hot with zero host traffic.  The split comes from
-    the same ``tier_split`` rule the launcher applies, and the byte model
+    fits) lowers as all-hot with zero host traffic, and xdeepfm — whose
+    dual memory pools the launcher refuses to tier — records an explicit
+    skipped marker instead of a split it would never apply.  The split
+    comes from the same ``tier_split`` rule the launcher applies (budget
+    over both compact leaves plus their stage regions), and the byte model
     from ``exchange.tier_fetch_bytes`` — staged cold blocks are bounded by
-    one block per looked-up row and by the cold tier itself, and each
-    staged block is fetched (stage) and returned (writeback) once.
+    one block per per-device location element (set schemes read
+    ``exchange_set_width`` slots per lookup; the batch divides over the
+    data axes like ``_exchange_meta``'s n_flat) and by the cold tier
+    itself, and each staged block is fetched (stage) and returned
+    (writeback) once.
     """
     from repro.embed import get_scheme
     from repro.tier.store import BLOCK_DEFAULT, tier_budget_mb, tier_split
@@ -297,16 +303,29 @@ def _tier_meta(rcfg, B: int) -> dict:
     scheme = get_scheme(e.kind)
     if scheme.family != "memory":
         return {}
+    if rcfg.model == "xdeepfm":
+        # mirrors launch/train._maybe_tier: the remap buffers ride in the
+        # shared embedding buffers, so the second (linear) pool would see
+        # the main pool's remap — xdeepfm always launches resident
+        return {"tier": {"skipped": "dual memory pools stay resident"}}
     m = scheme.memory_slots(e)
     block = BLOCK_DEFAULT
     while m % block:
         block //= 2
     budget = tier_budget_mb()
-    hot, cold = tier_split(m, budget, e.jdtype.itemsize, block)
-    n_rows = B * recsys.lookups_per_example(rcfg)
-    staged = min(cold // block, n_rows)
+    dp = [int(mesh.shape[a]) for a in ("pod", "data")
+          if mesh is not None and a in mesh.axis_names]
+    prod = int(np.prod(dp)) if dp else 1
+    n_rows = B * recsys.lookups_per_example(rcfg) // prod
     # two pool leaves: the value pool + one optimizer-moment mirror (the
-    # committed recsys archs all run a single-moment optimizer)
+    # committed recsys archs all run a single-moment optimizer); staging
+    # bound: one block per location element, like the launcher's measured
+    # plan — set schemes read exchange_set_width slots per lookup
+    n_loc = n_rows * max(scheme.exchange_set_width(e), 1)
+    cap = min(n_loc, m // block)
+    hot, cold = tier_split(m, budget, e.jdtype.itemsize, block,
+                           n_leaves=2, stage_blocks=cap)
+    staged = min(cold // block, cap)
     fetch = exl.tier_fetch_bytes(staged, block, n_leaves=2,
                                  itemsize=e.jdtype.itemsize)
     return {"tier": {"tier_budget_mb": budget, "hot_rows": int(hot),
@@ -360,7 +379,7 @@ def _recsys_bundle(arch: ArchConfig, shape_id: str, mesh) -> Bundle:
             meta={"kind": "train", "examples": B, "sparse_grads": use_sparse,
                   "embedding": rcfg.table.describe(),
                   **_sparse_meta(rcfg, B, mesh),
-                  **_tier_meta(rcfg, B),
+                  **_tier_meta(rcfg, B, mesh),
                   **_exchange_meta(
                       rcfg, B * recsys.lookups_per_example(rcfg), mesh)})
 

@@ -55,9 +55,23 @@ def lookups_per_step(cfg, batch: int) -> int:
     return batch * recsys.lookups_per_example(cfg)
 
 
-def _maybe_tier(cfg, params, bufs, batch_fn, budget_mb):
+# compact pool leaves the dense optimizer keeps per pool slot, besides the
+# value pool itself (adam: mu + nu; adagrad: acc; momentum-sgd: trace;
+# adafactor: unfactored v — the pool is 1-D, under min_factor_dim)
+MOMENT_LEAVES = {"adam": 2, "adagrad": 1, "sgd": 1, "adafactor": 1}
+
+
+def _maybe_tier(cfg, arch, params, bufs, batch_fn, budget_mb):
     """Wrap a recsys setup in the tiered memory store when the pool exceeds
     the per-device HBM budget (``--tier-budget-mb`` / REPRO_TIER_BUDGET_MB).
+
+    The budget bounds the pool's whole device footprint: the compact value
+    pool, one same-sized mirror per optimizer moment, and each leaf's stage
+    region.  Staging capacity is the per-step touched-block bound — one
+    block per planned location element, measured from one planned batch —
+    so the compact pool is genuinely budget-sized and staging can never
+    overflow mid-run: an over-budget pool that would OOM resident fits
+    after tiering.
 
     Returns ``(params, loss_fn, controller)``; untiered runs return
     ``(params, None, None)`` and keep the resident loss function.  Tiered
@@ -67,7 +81,7 @@ def _maybe_tier(cfg, params, bufs, batch_fn, budget_mb):
     embedding buffers — the only change the model stack sees.
     """
     from repro.tier import (BLOCK_DEFAULT, TieredStore, TierController,
-                            budget_slots, needs_tiering, split_batch)
+                            needs_tiering, split_batch, tier_split)
     e = cfg.embedding
     scheme = get_scheme(e.kind)
     if budget_mb is None or getattr(scheme, "family", None) != "memory":
@@ -80,15 +94,14 @@ def _maybe_tier(cfg, params, bufs, batch_fn, budget_mb):
         return params, None, None
     mem = np.asarray(params["embedding"]["memory"])
     m, itemsize = int(mem.shape[0]), mem.dtype.itemsize
-    if not needs_tiering(m, itemsize, budget_mb):
-        print(f"pool fits the {budget_mb} MB tier budget ({m} slots); "
-              "untiered")
+    n_leaves = 1 + MOMENT_LEAVES[arch.optimizer]
+    if not needs_tiering(m, itemsize, budget_mb, n_leaves=n_leaves):
+        print(f"pool fits the {budget_mb} MB tier budget ({m} slots x "
+              f"{n_leaves} leaves); untiered")
         return params, None, None
     block = BLOCK_DEFAULT
     while m % block:
         block //= 2
-    store = TieredStore(mem, budget_slots(budget_mb, itemsize, block),
-                        block=block)
     offs = np.asarray(e.table_offsets()[:-1], np.int32)
 
     def plan_fn(batch):
@@ -100,14 +113,33 @@ def _maybe_tier(cfg, params, bufs, batch_fn, budget_mb):
                  + jnp.asarray(offs)[None, :]).reshape(-1)
         return scheme.locations(e, bufs, g.astype(jnp.int32))
 
+    # staging bound: a step touches at most one block per location ELEMENT
+    # (a set scheme reads max_set slots per lookup, so rows alone undercount)
+    # — the location shape is static across steps, so one planned batch
+    # bounds them all, for any registered scheme
+    cap = min(int(plan_fn(batch_fn(0)).size), m // block)
+    hot_slots, cold_slots = tier_split(m, budget_mb, itemsize, block,
+                                       n_leaves=n_leaves, stage_blocks=cap)
+    cap = min(cap, cold_slots // block)
+    if hot_slots <= 0:
+        raise SystemExit(
+            f"--tier-budget-mb {budget_mb}: the {n_leaves} compact pool "
+            f"leaves' stage regions alone ({cap} blocks x {block} slots "
+            f"each) exhaust the budget — raise the budget or shrink the "
+            f"batch")
+    store = TieredStore(mem, hot_slots, block=block, stage_blocks=cap)
+
     def tiered_loss(p, b):
         clean, tier = split_batch(b)
         return recsys.loss_fn(p, cfg, clean, {**bufs, **tier})
 
     params = dict(params, embedding=dict(
         params["embedding"], memory=store.initial_compact()))
+    dev_mb = n_leaves * store.compact_slots * itemsize / 2**20
     print(f"tiered memory pool: {m} slots -> {store.hot_slots} hot + "
-          f"{m - store.hot_slots} cold (block {block}, budget {budget_mb} MB)")
+          f"{m - store.hot_slots} cold, stage {store.stage_blocks} blocks "
+          f"(block {block}; {n_leaves} leaves x {store.compact_slots} slots "
+          f"= {dev_mb:.0f} MB on device, budget {budget_mb} MB)")
     return params, tiered_loss, TierController(store, batch_fn, plan_fn)
 
 
@@ -197,7 +229,7 @@ def main(argv=None):
         budget_mb = (args.tier_budget_mb if args.tier_budget_mb is not None
                      else tier_budget_mb())
         params, tiered_loss, tier_ctrl = _maybe_tier(
-            cfg, params, bufs, batch_fn, budget_mb)
+            cfg, arch, params, bufs, batch_fn, budget_mb)
         if tier_ctrl is not None:
             loss_fn = tiered_loss
     elif arch.family == "lm":

@@ -59,30 +59,45 @@ def tier_budget_mb() -> float | None:
 def budget_slots(budget_mb: float, itemsize: int = 4,
                  block: int = BLOCK_DEFAULT) -> int:
     """How many pool slots a per-device budget admits, floored to whole
-    blocks (the tier granularity)."""
+    blocks (the tier granularity).  This is the raw capacity of the budget
+    — :func:`tier_split` divides it across the compact leaves (value pool
+    + optimizer moments) and their stage regions."""
     slots = int(budget_mb * 2**20 / itemsize)
     return (slots // block) * block
 
 
 def tier_split(m: int, budget_mb: float | None, itemsize: int = 4,
-               block: int = BLOCK_DEFAULT) -> tuple[int, int]:
+               block: int = BLOCK_DEFAULT, n_leaves: int = 1,
+               stage_blocks: int = 0) -> tuple[int, int]:
     """(hot_slots, cold_slots) for an [m]-slot pool under ``budget_mb``.
 
-    ``None`` (or a budget the pool fits) keeps everything hot — the
-    untiered fast path.  This is the one split rule the launcher, the
-    dryrun meta, and the bench all share.
+    ``budget_mb`` bounds the pool's WHOLE device footprint: every compact
+    leaf — the value pool plus ``n_leaves - 1`` optimizer-moment mirrors,
+    all the same compact size — including each leaf's ``stage_blocks``-block
+    stage region.  So each leaf gets ``budget / n_leaves`` slots, staging is
+    carved out first, and the hot slab keeps the rest.  ``None`` (or a
+    budget the whole ``n_leaves * m``-slot footprint fits) keeps everything
+    hot — the untiered fast path, which needs no stage region.  This is the
+    one split rule the launcher and the dryrun meta share; callers that
+    know the optimizer pass ``n_leaves`` and a batch-derived
+    ``stage_blocks`` bound, defaults keep the value-pool-only legacy rule.
     """
     if budget_mb is None:
         return m, 0
-    hot = min(m, budget_slots(budget_mb, itemsize, block))
+    per_leaf = budget_slots(budget_mb, itemsize, block) // max(int(n_leaves),
+                                                               1)
+    if per_leaf >= m:
+        return m, 0
+    hot = (max(per_leaf - int(stage_blocks) * block, 0) // block) * block
     return hot, m - hot
 
 
 def needs_tiering(m: int, itemsize: int = 4,
-                  budget_mb: float | None = None) -> bool:
-    """Does an [m]-slot pool exceed the per-device budget?"""
+                  budget_mb: float | None = None, n_leaves: int = 1) -> bool:
+    """Does an [m]-slot pool (times ``n_leaves`` same-sized compact leaves)
+    exceed the per-device budget?"""
     budget_mb = tier_budget_mb() if budget_mb is None else budget_mb
-    return tier_split(m, budget_mb, itemsize)[1] > 0
+    return tier_split(m, budget_mb, itemsize, n_leaves=n_leaves)[1] > 0
 
 
 # ------------------------------------------------------- location remapping
@@ -158,8 +173,11 @@ class TieredStore:
         """``memory``: the full [m] initial pool (host or device).
         ``budget_slots_or_hot``: hot-tier size in slots (floored to blocks).
         ``stage_blocks``: staging capacity; a batch may touch at most this
-        many cold blocks per step (default: every cold block — callers with
-        a real budget pass the batch-derived bound).  ``counts``: optional
+        many cold blocks per step.  Defaulting it keeps every cold block
+        stageable — a small-pool/testing convenience that makes the compact
+        pool as big as the full pool (zero HBM savings), so it warns;
+        callers with a real budget MUST pass the batch-derived bound (the
+        launcher derives one block per looked-up row).  ``counts``: optional
         [n_blocks] observed touch counts seeding the hot set (the freq
         scheme's id-count signal, aggregated per block); default: the pool
         head, matching freq's dedicated-rows-first layout."""
@@ -175,6 +193,13 @@ class TieredStore:
                          max(int(budget_slots_or_hot) // self.block, 0))
         self.hot_blocks = hot_blocks
         cold = self.n_blocks - hot_blocks
+        if stage_blocks is None and cold:
+            import warnings
+            warnings.warn(
+                f"TieredStore: stage_blocks defaulted to every cold block "
+                f"({cold}); the compact pool then spans the full {self.m}"
+                f"-slot pool and tiering saves no HBM — pass a batch-derived "
+                f"staging bound", stacklevel=2)
         self.stage_blocks = cold if stage_blocks is None \
             else max(min(int(stage_blocks), cold), 1 if cold else 0)
         # EMA of observed touches; seeds the initial hot set when given
@@ -350,9 +375,11 @@ class TieredStore:
         n = self._staged_ids.size
         nbytes = 0
         for name, leaf in tree.items():
-            rows = np.asarray(jax.device_get(leaf[self.hot_slots:])).reshape(
-                -1, self.block)
-            self._host[name][self._staged_ids] = rows[:n]
+            # slice BEFORE the transfer: only the n live staged blocks cross
+            # device->host, not the whole (padded) stage region
+            rows = np.asarray(jax.device_get(
+                leaf[self.hot_slots: self.hot_slots + n * self.block]))
+            self._host[name][self._staged_ids] = rows.reshape(n, self.block)
             nbytes += n * self.block * self._host[name].dtype.itemsize
         self.stats["writeback_bytes"] += nbytes
 

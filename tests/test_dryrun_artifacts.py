@@ -152,15 +152,22 @@ def test_recsys_train_artifacts_record_tier_split():
     """Every memory-family recsys train cell's meta carries the tiering
     posture it would launch with (repro.launch.steps._tier_meta): hot/cold
     split from the same ``tier_split`` rule the launcher applies, plus the
-    modeled host-fetch bytes/step.  The committed cells lower with no
-    per-device budget, so the recorded posture is all-hot with zero host
-    traffic — and the split must still account for every pool slot.  The
-    non-trivial branch (a budget smaller than the pool) is pinned here
-    directly against the same helper the artifacts were lowered through."""
+    modeled host-fetch bytes/step — except xdeepfm, whose dual memory pools
+    the launcher refuses to tier, which must record the explicit skipped
+    marker instead of a split it would never apply.  The committed cells
+    lower with no per-device budget, so the recorded posture is all-hot
+    with zero host traffic — and the split must still account for every
+    pool slot.  The non-trivial branch (a budget smaller than the pool) is
+    pinned here directly against the same helper the artifacts were
+    lowered through."""
     from repro.embed import get_scheme
     from repro.launch.steps import _tier_meta
 
-    for arch in ("dlrm-rm2", "dcn-v2", "xdeepfm", "din"):
+    for mesh in ("16x16", "2x16x16"):
+        tier = _load("xdeepfm", "train_batch", mesh)["meta"]["tier"]
+        assert tier == {"skipped": "dual memory pools stay resident"}, mesh
+
+    for arch in ("dlrm-rm2", "dcn-v2", "din"):
         rcfg = get_config(arch).make_model("train_batch")
         e = rcfg.embedding
         m = get_scheme(e.kind).memory_slots(e)
@@ -174,16 +181,21 @@ def test_recsys_train_artifacts_record_tier_split():
             assert tier["host_fetch_bytes_per_step"] == 0
 
     # the over-budget branch of the same helper: a 256 MB budget on the
-    # 135M-slot pool splits hot/cold and models real host traffic
+    # 135M-slot (515 MB x 2 leaves) pool splits hot/cold and models real
+    # host traffic; the budget covers both compact leaves AND their stage
+    # regions (one block per location element, set width included), so the
+    # hot slab gets strictly less than half of it.  B=64 with no mesh is
+    # the launcher-scale posture (a pod-scale B divides over the mesh's
+    # data axes first, like _exchange_meta's n_flat).
     rcfg = get_config("dlrm-rm2").make_model("train_batch")
     os.environ["REPRO_TIER_BUDGET_MB"] = "256"
     try:
-        tier = _tier_meta(rcfg, 4096)["tier"]
+        tier = _tier_meta(rcfg, 64)["tier"]
     finally:
         del os.environ["REPRO_TIER_BUDGET_MB"]
     m = get_scheme(rcfg.embedding.kind).memory_slots(rcfg.embedding)
     assert tier["tier_budget_mb"] == 256.0
-    assert 0 < tier["hot_rows"] <= 256 * 2**20 // 4
+    assert 0 < tier["hot_rows"] < 256 * 2**20 // 4 // 2
     assert tier["hot_rows"] + tier["cold_rows"] == m
     assert tier["host_fetch_bytes_per_step"] > 0
 

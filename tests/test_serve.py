@@ -139,7 +139,8 @@ def test_batching_scorer_serves_tiered_export():
     table = EmbeddingTable(cfg)
     bufs = table.make_buffers()
     params = table.init(jax.random.key(1))
-    st = TieredStore(np.asarray(params["memory"]), 1024, block=128)
+    st = TieredStore(np.asarray(params["memory"]), 1024, block=128,
+                     stage_blocks=24)
     st.stage(np.arange(8, 32))
     tree = st.install({"memory": st.initial_compact()})
     served = {"memory": jnp.asarray(st.full_pool(tree["memory"]))}

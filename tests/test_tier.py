@@ -44,10 +44,31 @@ def test_tier_split_rules():
     assert hot % BLOCK_DEFAULT == 0
 
 
+def test_tier_split_budget_covers_leaves_and_staging():
+    """The budget bounds the WHOLE device footprint: each of the n_leaves
+    compact leaves gets budget/n_leaves slots, and the stage region is
+    carved out of that before the hot slab."""
+    # 1 MB / 4 B = 262144 slots; two leaves -> 131072 each; 16 stage blocks
+    # (8192 slots) leave 122880 hot
+    hot, cold = tier_split(1 << 20, 1.0, itemsize=4, n_leaves=2,
+                           stage_blocks=16)
+    assert hot == 131072 - 16 * BLOCK_DEFAULT
+    assert hot + cold == 1 << 20 and hot % BLOCK_DEFAULT == 0
+    # a pool whose full n_leaves footprint fits stays all-hot, no staging
+    assert tier_split(4096, 1.0, n_leaves=2, stage_blocks=16) == (4096, 0)
+    # staging can exhaust the per-leaf budget: hot collapses to 0, loudly
+    # checkable by the caller (the launcher refuses to run that config)
+    assert tier_split(1 << 20, 1.0, itemsize=4, n_leaves=2,
+                      stage_blocks=10_000)[0] == 0
+
+
 def test_needs_tiering():
     assert not needs_tiering(4096, budget_mb=1000.0)
     assert needs_tiering(1 << 20, budget_mb=1.0)
     assert not needs_tiering(1 << 20, budget_mb=None)     # env unset: untiered
+    # with the moment mirrors counted, half the budget per leaf
+    assert needs_tiering(200_000, budget_mb=1.0, n_leaves=2)
+    assert not needs_tiering(200_000, budget_mb=1.0, n_leaves=1)
 
 
 # ---------------------------------------------------------- remap identity
@@ -90,7 +111,23 @@ def test_remap_locations_empty_tiers():
 def _store(m=2048, block=128, hot_slots=512, seed=0, **kw):
     rng = np.random.default_rng(seed)
     mem = rng.normal(size=m).astype(np.float32)
+    # full-cold staging, passed EXPLICITLY: the small-pool testing posture
+    # (a defaulted stage capacity warns — it erases the HBM savings)
+    kw.setdefault("stage_blocks", (m - hot_slots) // block)
     return mem, TieredStore(mem, hot_slots, block=block, **kw)
+
+
+def test_defaulted_stage_capacity_warns():
+    rng = np.random.default_rng(0)
+    mem = rng.normal(size=2048).astype(np.float32)
+    with pytest.warns(UserWarning, match="saves no HBM"):
+        TieredStore(mem, 512, block=128)
+    # explicit capacity (or an all-hot store) stays quiet
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        TieredStore(mem, 512, block=128, stage_blocks=4)
+        TieredStore(mem, 2048, block=128)
 
 
 def test_stage_install_writeback_round_trip():
@@ -177,7 +214,7 @@ def test_counts_seed_hot_set():
     mem = rng.normal(size=2048).astype(np.float32)
     counts = np.zeros(16)
     counts[[3, 8, 11, 14]] = [50, 40, 30, 20]
-    st = TieredStore(mem, 512, block=128, counts=counts)
+    st = TieredStore(mem, 512, block=128, stage_blocks=12, counts=counts)
     np.testing.assert_array_equal(st.hot_ids, [3, 8, 11, 14])
 
 
@@ -201,7 +238,8 @@ def test_tiered_embed_fields_bit_exact():
                                 rng.integers(0, 500, 64)], 1).astype(np.int32))
     want = table.embed_fields(params, bufs, ids)
 
-    st = TieredStore(np.asarray(params["memory"]), 1024, block=128)
+    st = TieredStore(np.asarray(params["memory"]), 1024, block=128,
+                     stage_blocks=24)
     offs = np.asarray(cfg.table_offsets()[:-1], np.int32)
     gids = (np.asarray(ids) + offs[None, :]).reshape(-1)
     loc = scheme.locations(cfg, bufs, jnp.asarray(gids))
@@ -263,7 +301,7 @@ def test_tiered_training_parity_vs_resident_oracle():
     oracle, _ = fit(None)
 
     st = TieredStore(np.asarray(params0["embedding"]["memory"]), 1024,
-                     block=128)
+                     block=128, stage_blocks=24)
 
     def plan_fn(batch):
         gids = (np.asarray(batch["ids"]) + offs[None, :]).reshape(-1)
@@ -297,11 +335,53 @@ def test_tiered_training_parity_vs_resident_oracle():
     assert out["tier_host_fetch_bytes_per_step"] > 0
 
 
+def test_launcher_maybe_tier_is_genuinely_budget_bounded():
+    """The launcher path must hand the store a batch-derived staging bound:
+    the compact device pool (every leaf, stage region included) fits the
+    --tier-budget-mb budget, so an over-budget pool actually saves HBM —
+    and a budget that staging alone exhausts is refused, never silently
+    over-allocated."""
+    from repro.configs.base import get_config
+    from repro.launch.train import MOMENT_LEAVES, _maybe_tier, _recsys_setup
+    from repro.models import recsys
+
+    arch = get_config("din")
+    cfg = arch.make_model(None)
+    gen, bufs, batch_fn, _ = _recsys_setup(arch, cfg, 300, 2)
+    params = recsys.init(jax.random.key(0), cfg)
+    m = int(params["embedding"]["memory"].shape[0])
+    budget_mb = 32.0
+    n_leaves = 1 + MOMENT_LEAVES[arch.optimizer]
+    assert m * n_leaves * 4 > budget_mb * 2**20, "pool must be over budget"
+    tiered, loss, ctrl = _maybe_tier(cfg, arch, params, bufs, batch_fn,
+                                     budget_mb)
+    assert ctrl is not None and loss is not None
+    st = ctrl.store
+    assert st.compact_slots < m, "compact pool must be smaller than the pool"
+    assert st.stage_blocks < st.cold_blocks, "staging must be bounded"
+    dev_bytes = n_leaves * st.compact_slots * 4
+    assert dev_bytes <= budget_mb * 2**20, (dev_bytes, budget_mb * 2**20)
+    assert tiered["embedding"]["memory"].shape == (st.compact_slots,)
+    # one controller step stays within the staging bound it derived
+    p, o, info = ctrl.pre_step(0, tiered, {})
+    assert 0 < info["staged"] <= st.stage_blocks
+
+    # a budget the stage regions alone exhaust is refused loudly: the
+    # criteo pool (208 blocks) is smaller than one step's planned working
+    # set, so no budget below its resident size can tier it
+    arch_c = get_config("lma-dlrm-criteo")
+    cfg_c = arch_c.make_model(None)
+    gen, bufs_c, batch_fn_c, _ = _recsys_setup(arch_c, cfg_c, 300, 4)
+    params_c = recsys.init(jax.random.key(0), cfg_c)
+    with pytest.raises(SystemExit, match="stage regions alone"):
+        _maybe_tier(cfg_c, arch_c, params_c, bufs_c, batch_fn_c, 0.5)
+
+
 def test_controller_on_restore_drops_staged_rows():
     cfg = _embed_cfg()
     table = EmbeddingTable(cfg)
     st = TieredStore(np.asarray(table.init(jax.random.key(1))["memory"]),
-                     1024, block=128)
+                     1024, block=128, stage_blocks=24)
     st.stage(np.array([9, 10]))
     tree = st.install({"memory": st.initial_compact()})
     ctrl = TierController(st, lambda s: {}, lambda b: None)
