@@ -540,6 +540,132 @@ def bench_tiered(rows: list, out: list) -> dict:
     return doc
 
 
+def bench_ckpt(rows: list, out: list) -> dict:
+    """Durability tax of the checkpoint layer (``repro.checkpoint``) at the
+    paper pool shape: an m=2^21 f32 memory-pool leaf plus its Adagrad moment
+    (16 MiB of integrity-chunked pool state) and a small dense head.
+
+    ``ckpt_full``
+        a blocking full/base save — every leaf serialized, whole-tree
+        sha256 + per-chunk bit-sums computed, tmp + ``os.replace`` commit.
+    ``ckpt_delta``
+        an incremental save after head-heavy CTR traffic touched the pool:
+        only the integrity chunks dirtied since the base are persisted
+        (cumulative-since-base, so any step replays as one base + one
+        delta regardless of chain position).
+    ``ckpt_restore_chain``
+        restore of a delta step — replays (base, delta) with full
+        verification — against the doc's ``restore_full_us`` single-file
+        path.
+
+    check_regression gates the fresh ledger absolutely
+    (``ckpt_delta_failures``): delta payload <= 25% of the full payload
+    and the chain restore <= 2x the full restore.
+    """
+    import shutil
+    import tempfile
+    import time
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.resilience import integrity as integ_lib
+
+    m = 1 << 21
+    chunk = integ_lib.CHUNK
+    n_chunks = m // chunk                      # 256 integrity chunks
+    shape = "m=2^21x2pool"
+    rng = np.random.default_rng(0)
+    state = {
+        "params": {"memory": rng.normal(0, 0.1, m).astype(np.float32),
+                   "w": rng.normal(0, 1, (256, 64)).astype(np.float32)},
+        "opt": {"memory": np.zeros(m, np.float32)},
+        "step": np.asarray(0, np.int32),
+    }
+
+    def touch(seed):
+        # head-heavy CTR traffic: the hot head of the pool takes the step's
+        # updates, so a delta carries ~32 of the 256 chunks
+        r = np.random.default_rng(seed)
+        slots = r.integers(0, 32 * chunk, (4096,))
+        state["params"]["memory"][slots] += 1e-3
+        state["opt"]["memory"][slots] += 1e-3
+        return slots
+
+    def med_us(samples):
+        return float(np.median(samples) * 1e6)
+
+    tmp = tempfile.mkdtemp(prefix="bench_ckpt_")
+    try:
+        # full saves: a non-delta manager, one fresh step per sample
+        mgr_full = CheckpointManager(os.path.join(tmp, "full"), keep=2)
+        full_t = []
+        for s in (1, 2, 3):
+            state["step"] = np.asarray(s, np.int32)
+            t0 = time.perf_counter()
+            mgr_full.save(s, state)
+            full_t.append(time.perf_counter() - t0)
+        full_bytes = mgr_full.last_save_bytes
+        restore_full_t = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            mgr_full.restore()
+            restore_full_t.append(time.perf_counter() - t0)
+
+        # delta chain: base at 0, then incremental saves under CTR traffic
+        mgr = CheckpointManager(os.path.join(tmp, "delta"), keep=8,
+                                delta=True, compact_every=16)
+        state["step"] = np.asarray(0, np.int32)
+        mgr.save(0, state)
+        delta_t = []
+        last = 0
+        for s in (10, 20, 30):
+            mgr.mark_dirty_slots(touch(s))
+            state["step"] = np.asarray(s, np.int32)
+            t0 = time.perf_counter()
+            mgr.save(s, state)
+            delta_t.append(time.perf_counter() - t0)
+            last = s
+        delta_bytes = mgr.last_save_bytes
+        with open(os.path.join(tmp, "delta", f"step_{last:010d}",
+                               "manifest.json")) as f:
+            man = json.load(f)
+        dirty = {int(i) for info in man["delta"].values()
+                 for i in info["chunks"]}
+        restore_chain_t = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            got, _tree = mgr.restore()
+            restore_chain_t.append(time.perf_counter() - t0)
+        assert got == last and mgr.last_restore_report["chain_len"] == 1
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    us_full, us_delta = med_us(full_t), med_us(delta_t)
+    us_rfull, us_rchain = med_us(restore_full_t), med_us(restore_chain_t)
+    ratio = delta_bytes / max(full_bytes, 1)
+    rows.append(("ckpt_full", shape, round(us_full, 1)))
+    rows.append(("ckpt_delta", shape, round(us_delta, 1)))
+    rows.append(("ckpt_restore_chain", shape, round(us_rchain, 1)))
+    doc = {"full_save_us": round(us_full, 1),
+           "delta_save_us": round(us_delta, 1),
+           "restore_full_us": round(us_rfull, 1),
+           "restore_chain_us": round(us_rchain, 1),
+           "full_bytes": int(full_bytes),
+           "delta_bytes": int(delta_bytes),
+           "delta_ratio": round(ratio, 4),
+           "chain_len": 1,
+           "dirty_chunks": len(dirty),
+           "total_chunks": n_chunks,
+           "touch_rate": round(len(dirty) / n_chunks, 4)}
+    out.append(
+        f"kernels ckpt {shape}: delta save {us_delta:.0f} us / "
+        f"{delta_bytes / 2**20:.1f} MiB vs full {us_full:.0f} us / "
+        f"{full_bytes / 2**20:.1f} MiB ({ratio:.1%} of full payload, "
+        f"{len(dirty)}/{n_chunks} chunks dirty); restore chain "
+        f"{us_rchain:.0f} us vs full {us_rfull:.0f} us "
+        f"({us_rchain / max(us_rfull, 1e-9):.2f}x)")
+    return doc
+
+
 def bench_dedup_sort(rows: list, out: list) -> None:
     """The SparseGrad construction tax, swept over K = B*d in 2^13..2^17,
     three ways on the SAME striped locations:
@@ -693,6 +819,7 @@ def run() -> list[str]:
     upd_bytes = bench_sparse_update(rows, out)
     guard_doc = bench_guarded_step(rows, out)
     tier_doc = bench_tiered(rows, out)
+    ckpt_doc = bench_ckpt(rows, out)
     bench_dedup_sort(rows, out)
     bench_scheme_sweep(rows, out)
 
@@ -736,6 +863,7 @@ def run() -> list[str]:
                    "modeled_update_bytes_per_step": upd_bytes,
                    "guarded_step_overhead": guard_doc,
                    "tiered": tier_doc,
+                   "ckpt": ckpt_doc,
                    "sharded_lookup": sharded}, f, indent=1)
     out.append(f"kernels -> {jpath}")
     return out

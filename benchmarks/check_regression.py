@@ -19,8 +19,10 @@ guard costs more than 5% over the unguarded train step
 (``guard_overhead_failures``), or when the tiered train step
 (``repro.tier``: quarter-pool HBM budget, controller-driven staging) falls
 more than 2x behind the fully-resident step
-(``tiered_slowdown_failures``).  New rows are allowed (they become baseline
-once committed).
+(``tiered_slowdown_failures``), or when the incremental checkpoint loses
+its efficiency edge (``ckpt_delta_failures``: delta payload <= 25% of the
+full save AND the (base, delta) chain restore <= 2x a plain full
+restore).  New rows are allowed (they become baseline once committed).
 
 Usage:
   python benchmarks/check_regression.py                 # re-run bench, diff
@@ -87,6 +89,15 @@ GUARD_GATE_SHAPE = "4096x32@m=2^21"
 # staging that degrades to synchronous whole-pool copies
 TIERED_SLOWDOWN_MAX = 2.0
 TIER_GATE_SHAPE = "4096x32@m=2^21"
+# the incremental checkpoint (repro.checkpoint: cumulative-since-base deltas
+# over integrity chunks — bench_kernels.bench_ckpt) must keep earning its
+# place: under head-heavy CTR traffic at the paper pool shape the delta
+# payload must stay <= 25% of the full save, and restoring a delta step
+# (base + one delta, fully verified) must stay within 2x of a plain full
+# restore.  Measured: ~13% of the payload, ~1.2x the restore (the chain
+# restore reads the base AND the delta, so some overhead is structural)
+CKPT_DELTA_MAX = 0.25
+CKPT_CHAIN_RESTORE_MAX = 2.0
 
 
 def load_rows(path_or_doc) -> dict[tuple[str, str], float]:
@@ -307,6 +318,47 @@ def tiered_slowdown_failures(fresh: dict, fresh_doc: dict | None = None,
     return failures
 
 
+def ckpt_delta_failures(fresh: dict, fresh_doc: dict | None = None,
+                        max_ratio: float = None,
+                        max_restore: float = None) -> list[str]:
+    """The incremental checkpoint's efficiency claims, enforced on the fresh
+    ledger's ``ckpt`` block (``bench_kernels.bench_ckpt``):
+
+      * the delta payload under head-heavy CTR traffic must stay <=
+        ``CKPT_DELTA_MAX`` of the full-save payload — if deltas stop being
+        small there is no reason to run them;
+      * restoring a delta step (replay of base + one cumulative delta with
+        full verification) must stay within ``CKPT_CHAIN_RESTORE_MAX`` of a
+        plain full restore — recovery time is what a preempted job pays.
+    """
+    if max_ratio is None:
+        max_ratio = CKPT_DELTA_MAX
+    if max_restore is None:
+        max_restore = CKPT_CHAIN_RESTORE_MAX
+    if fresh_doc is None:
+        return []
+    doc = fresh_doc.get("ckpt")
+    if not doc:
+        return ["ckpt block missing from the fresh ledger "
+                "(the delta-checkpoint gate cannot run)"]
+    failures = []
+    ratio = doc["delta_bytes"] / max(doc["full_bytes"], 1)
+    if ratio > max_ratio:
+        failures.append(
+            f"ckpt delta payload {ratio:.1%} of full > {max_ratio:.0%} "
+            f"({doc['delta_bytes']} vs {doc['full_bytes']} bytes; "
+            f"{doc['dirty_chunks']}/{doc['total_chunks']} chunks dirty) — "
+            f"incremental checkpoints stopped being incremental")
+    r = doc["restore_chain_us"] / max(doc["restore_full_us"], 1e-9)
+    if r > max_restore:
+        failures.append(
+            f"ckpt chain restore {r:.2f}x of full restore > "
+            f"{max_restore:.1f}x ({doc['restore_chain_us']:.1f} us vs "
+            f"{doc['restore_full_us']:.1f} us) — (base, delta) replay got "
+            f"too expensive")
+    return failures
+
+
 def compare(baseline: dict, fresh: dict,
             max_ratio: float = MAX_RATIO) -> list[str]:
     """Return human-readable failures (empty == no regression)."""
@@ -369,6 +421,7 @@ def main(argv=None) -> int:
     failures += sharded_gap_failures(fresh, fresh_doc)
     failures += guard_overhead_failures(fresh, fresh_doc)
     failures += tiered_slowdown_failures(fresh, fresh_doc)
+    failures += ckpt_delta_failures(fresh, fresh_doc)
     if failures:
         print(f"REGRESSION ({len(failures)} row(s)):")
         for f in failures:

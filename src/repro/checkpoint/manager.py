@@ -1,32 +1,55 @@
-"""Fault-tolerant checkpointing: atomic, versioned, async, elastic, healing.
+"""Fault-tolerant checkpointing: atomic, versioned, async, elastic, healing,
+and — for memory-pool states — *incremental*.
 
 Layout:  <dir>/step_<N>/{manifest.json, arrays.npz}   (+ LATEST marker file)
 
 Guarantees:
-  * atomicity — writes land in ``.tmp-*`` and are renamed only after fsync, so
-    a preemption mid-save never corrupts the latest valid checkpoint;
+  * atomicity — every emitted file is written to a ``.part`` twin, fsynced
+    and ``os.replace``d into place, the manifest lands *last* inside a
+    ``.tmp-*`` directory that is renamed only once complete, so a preemption
+    at any byte offset never leaves a readable-but-wrong step directory;
   * integrity — the manifest carries per-leaf shape/dtype, a whole-tree
     checksum, a per-leaf sha256, and per-chunk bit sums for memory-pool
     leaves (``repro.resilience.integrity``), all verified on restore;
+  * incrementality — with ``delta=True`` a save whose base checkpoint is
+    still on disk persists, per pool leaf, only the integrity chunks
+    dirtied *since that base* (dirty set: ``mark_dirty_slots`` feeds from
+    ``SparseGrad`` indices in the resident path and the tier controller's
+    planned touch set in the tiered path, *unioned* with a checksum diff
+    against the base manifest so an unmarked mutation can never silently
+    survive a restore).  Non-pool leaves ride in full (they are small next
+    to the pool).  Deltas are cumulative-since-base, so restoring any step
+    replays exactly (base, that delta) — a torn write can only cost the one
+    step that carried it, never a whole chain.  Every ``compact_every``
+    deltas the chain is compacted back to a full base, which bounds both
+    delta growth and restore-replay cost;
   * finite refusal — ``save`` rejects a state snapshot holding non-finite
     floats: the guard upstream skips poisoned steps, and the checkpointer is
     the last line of defense against persisting poison (``check_finite=False``
     opts out for debugging snapshots);
-  * self-healing restore — a corrupt *latest* checkpoint is not fatal:
-    corruption localized to an integrity-covered pool leaf is repaired by
-    quarantining (zeroing) the mismatched chunks; anything worse falls back
-    to the previous retained step (``restore`` walks retained steps newest to
-    oldest).  ``last_restore_report`` records what healing happened so the
-    trainer can fold it into its health counters;
-  * retention — keep the newest ``keep`` checkpoints (also the fallback
-    budget: keep=3 survives two corrupt checkpoints);
-  * async — ``save(..., blocking=False)`` snapshots to host memory and writes
-    in a background thread (training continues on device);
+  * self-healing restore — a corrupt *latest* checkpoint is not fatal.
+    Full/base checkpoints with corruption localized to an integrity-covered
+    pool leaf are repaired by quarantining (zeroing) the mismatched chunks.
+    Delta candidates are all-or-nothing: the delta payload (per-leaf sha256
+    + per-chunk bit sums) and its base must verify exactly, else the
+    candidate raises and the fallback ladder restores the newest *intact*
+    (base, delta) pair — torn/partial writes are detected, counted in
+    ``last_restore_report["torn_writes"]``, and routed around rather than
+    silently merged.  ``restore`` walks retained steps newest to oldest;
+  * retention — keep the newest ``keep`` checkpoints *plus the base each
+    retained delta replays from* (keep=3 survives two corrupt checkpoints);
+  * async — ``save(..., blocking=False)`` snapshots to host memory, plans
+    the delta synchronously, and writes in a background thread (training
+    continues on device);
   * elasticity — arrays are stored unsharded (single-process container); on
-    restore, ``shardings`` re-lays leaves onto a *different* mesh, which is the
-    restart-after-losing-a-pod path.  On a real multi-host deployment each
-    host writes its addressable shards and the manifest records the global
-    layout; the interface is the same.
+    restore, ``shardings`` re-lays leaves onto a *different* mesh, which is
+    the restart-after-losing-a-pod path.  On a real multi-host deployment
+    each host writes its addressable shards and the manifest records the
+    global layout; the interface is the same.
+
+Migration: manifests written before the delta format carry no ``format`` /
+``kind`` keys and are read as full bases — an old directory restores
+unchanged, and the first save into it simply starts a new chain.
 """
 from __future__ import annotations
 
@@ -40,6 +63,8 @@ import jax
 import numpy as np
 
 from repro.resilience import integrity as integ_lib
+
+FORMAT = 2
 
 
 def _flatten(tree, prefix=""):
@@ -96,16 +121,70 @@ def _is_pool_leaf(path: str) -> bool:
     return path.split("/")[-1] == "memory"
 
 
+def _atomic_file(path: str, writer, mode: str = "wb") -> None:
+    """Write through a ``.part`` twin + fsync + ``os.replace`` — the file is
+    either absent or complete, never torn (the per-file layer of the
+    crash-consistency contract; the step-directory rename is the outer
+    layer)."""
+    tmp = path + ".part"
+    with open(tmp, mode) as f:
+        writer(f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def _delta_chunk_slices(size: int, ids, chunk: int):
+    """[(lo, hi)] element ranges of each dirty chunk in a flat [size] leaf;
+    only the final chunk may be partial."""
+    out = []
+    for i in ids:
+        lo = int(i) * chunk
+        out.append((lo, min(lo + chunk, size)))
+    return out
+
+
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(self, directory: str, keep: int = 3, delta: bool = False,
+                 compact_every: int = 8):
         self.dir = directory
         self.keep = keep
+        self.delta = bool(delta)
+        self.compact_every = max(int(compact_every), 1)
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
         # what healing the most recent restore performed:
         # {"quarantined_chunks": int, "repaired_leaves": [..],
-        #  "fell_back_from": step|None}
+        #  "fell_back_from": step|None, "torn_writes": int, "chain_len": int}
         self.last_restore_report: dict = {}
+        # --- delta-chain state (committed at the end of _write / restore) ---
+        self._base_step: int | None = None     # current chain's base on disk
+        self._base_sums: dict[str, np.ndarray] = {}   # pool chunk sums @ base
+        self._base_leafmeta: dict = {}         # full leaves dict @ base
+        self._dirty_chunks: set[int] = set()   # marked since the base
+        self._last_step: int | None = None     # newest durable step we know
+        self.chain_len = 0                     # deltas since the base
+        self.last_saved_step: int | None = None
+        self.bytes_written = 0                 # cumulative array payload bytes
+        self.last_save_bytes = 0               # payload bytes of the last save
+
+    # ------------------------------------------------------------ dirty set
+    def mark_dirty_slots(self, slots) -> None:
+        """Record pool slots touched since the current base checkpoint
+        (resident path: each step's ``SparseGrad`` indices; tiered path: the
+        planned touch set the writeback protocol commits).  Slots are global
+        pool element indices; negatives (skip sentinels) are ignored,
+        indices past a leaf's end are clipped at save time.  No-op unless
+        this manager was built with ``delta=True``."""
+        if not self.delta:
+            return
+        s = np.asarray(slots).reshape(-1)
+        if s.size == 0:
+            return
+        s = s[s >= 0]
+        if s.size:
+            self._dirty_chunks.update(
+                int(c) for c in np.unique(s // integ_lib.CHUNK))
 
     # ----------------------------------------------------------------- save
     def save(self, step: int, tree, blocking: bool = True,
@@ -113,7 +192,16 @@ class CheckpointManager:
         self.wait()  # serialize with any in-flight async write
         if os.path.exists(os.path.join(self.dir, f"step_{step:010d}",
                                        "manifest.json")):
-            return  # idempotent: this step is already durably saved
+            # idempotent: this step is already durably saved.  Re-anchor the
+            # chain on it (the resume-after-preempt double-save path).
+            if self._last_step != step:
+                try:
+                    with open(os.path.join(self.dir, f"step_{step:010d}",
+                                           "manifest.json")) as f:
+                        self._adopt(step, json.load(f))
+                except (OSError, ValueError):
+                    pass
+            return
         host = {k: np.asarray(v) for k, v in _flatten(tree).items()}
         if check_finite:
             # refuse to persist poison — synchronously, so the caller sees
@@ -124,11 +212,17 @@ class CheckpointManager:
                     raise ValueError(
                         f"refusing to persist non-finite state at {k!r} "
                         f"(step {step}); pass check_finite=False to override")
+        plan = self._plan(step, host)
+        if plan["mode"] == "base":
+            # a base captures everything: dirty marks restart from it.  A
+            # failed base write only costs re-diffing against the unchanged
+            # old base on the next save (the checksum diff re-derives dirty).
+            self._dirty_chunks = set()
         if blocking:
-            self._write(step, host)
+            self._write(step, host, plan)
         else:
             self._thread = threading.Thread(
-                target=self._write, args=(step, host), daemon=True)
+                target=self._write, args=(step, host, plan), daemon=True)
             self._thread.start()
 
     def wait(self):
@@ -136,43 +230,177 @@ class CheckpointManager:
             self._thread.join()
             self._thread = None
 
-    def _write(self, step: int, host: dict):
+    def _plan(self, step: int, host: dict) -> dict:
+        """Decide base-vs-delta and precompute everything that reads the
+        manager's mutable chain state — runs synchronously in ``save`` so
+        the background writer only touches files."""
+        pool = sorted(k for k in host if _is_pool_leaf(k))
+        sums = {k: integ_lib.np_chunk_checksums(host[k]) for k in pool}
+        leaves = {k: {"shape": list(host[k].shape),
+                      "dtype": str(host[k].dtype),
+                      "sha256": _leaf_sha(host[k])}
+                  for k in sorted(host)}
+        integrity = {k: {"chunk": integ_lib.CHUNK,
+                         "checksums": [int(c) for c in sums[k]]}
+                     for k in pool}
+        plan = {"mode": "base", "sums": sums, "leaves": leaves,
+                "integrity": integrity, "chain_len": 0,
+                "base_step": None, "dirty": {}}
+        if not (self.delta and pool and self._base_step is not None
+                and self.chain_len < self.compact_every):
+            return plan
+        bm = self._base_leafmeta
+        compatible = (set(bm) == set(leaves)
+                      and all(bm[k]["shape"] == leaves[k]["shape"]
+                              and bm[k]["dtype"] == leaves[k]["dtype"]
+                              for k in bm)
+                      and all(k in self._base_sums for k in pool)
+                      and os.path.exists(os.path.join(
+                          self.dir, f"step_{self._base_step:010d}",
+                          "manifest.json")))
+        if not compatible:
+            return plan
+        dirty = {}
+        for k in pool:
+            n_chunks = int(sums[k].shape[0])
+            changed = set(np.nonzero(sums[k] != self._base_sums[k])[0]
+                          .tolist())
+            # union: marked dirty (the training-side feed) OR checksum-diff
+            # vs the base (the safety net that catches unmarked mutations —
+            # quarantine repair, dense-moment drift, rot)
+            changed.update(i for i in self._dirty_chunks if i < n_chunks)
+            dirty[k] = np.asarray(sorted(changed), np.int32)
+        plan.update(mode="delta", dirty=dirty, chain_len=self.chain_len + 1,
+                    base_step=self._base_step)
+        return plan
+
+    def _write(self, step: int, host: dict, plan: dict):
         final = os.path.join(self.dir, f"step_{step:010d}")
         tmp = os.path.join(self.dir, f".tmp-step_{step:010d}")
         shutil.rmtree(tmp, ignore_errors=True)
         os.makedirs(tmp)
-        np.savez(os.path.join(tmp, "arrays.npz"), **host)
-        # memory-pool leaves get chunk-level checksums on top of the leaf
-        # sha: corruption in a pool chunk is repairable (quarantine + zero),
-        # so the restore path needs to localize it
-        integrity = {
-            k: {"chunk": integ_lib.CHUNK,
-                "checksums": [int(c) for c in
-                              integ_lib.np_chunk_checksums(host[k])]}
-            for k in sorted(host) if _is_pool_leaf(k)}
         manifest = {
+            "format": FORMAT,
+            "kind": plan["mode"],
             "step": step,
             "checksum": _tree_digest(host),
-            "leaves": {k: {"shape": list(host[k].shape),
-                           "dtype": str(host[k].dtype),
-                           "sha256": _leaf_sha(host[k])}
-                       for k in sorted(host)},
-            "integrity": integrity,
+            "leaves": plan["leaves"],
+            "integrity": plan["integrity"],
         }
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
-            f.flush()
-            os.fsync(f.fileno())
+        if plan["mode"] == "base":
+            arrays = dict(host)
+            nbytes = int(sum(v.nbytes for v in host.values()))
+        else:
+            # delta payload: non-pool leaves in full, pool leaves as
+            # (chunk ids, concatenated dirty-chunk values) pairs —
+            # cumulative since the base, each pair independently verifiable
+            arrays = {k: v for k, v in host.items() if not _is_pool_leaf(k)}
+            delta_meta = {}
+            nbytes = int(sum(v.nbytes for v in arrays.values()))
+            for k, ids in plan["dirty"].items():
+                leaf = np.ascontiguousarray(host[k]).reshape(-1)
+                slices = _delta_chunk_slices(leaf.size, ids, integ_lib.CHUNK)
+                payload = (np.concatenate([leaf[lo:hi] for lo, hi in slices])
+                           if slices else np.zeros((0,), leaf.dtype))
+                arrays[k + "@chunks"] = ids
+                arrays[k + "@delta"] = payload
+                delta_meta[k] = {
+                    "chunk": integ_lib.CHUNK,
+                    "chunks": [int(i) for i in ids],
+                    "sha256": hashlib.sha256(
+                        ids.tobytes() + payload.tobytes()).hexdigest(),
+                    "checksums": [int(plan["sums"][k][i]) for i in ids],
+                }
+                nbytes += int(ids.nbytes + payload.nbytes)
+            manifest["base_step"] = plan["base_step"]
+            manifest["delta"] = delta_meta
+        _atomic_file(os.path.join(tmp, "arrays.npz"),
+                     lambda f: np.savez(f, **arrays))
+        # manifest last: its presence asserts every other file is complete
+        _atomic_file(os.path.join(tmp, "manifest.json"),
+                     lambda f: json.dump(manifest, f), mode="w")
         shutil.rmtree(final, ignore_errors=True)
         os.rename(tmp, final)
-        with open(os.path.join(self.dir, "LATEST"), "w") as f:
-            f.write(os.path.basename(final))
+        _atomic_file(os.path.join(self.dir, "LATEST"),
+                     lambda f: f.write(os.path.basename(final)), mode="w")
+        # injected torn write: payload loss that survives the rename (lying
+        # storage / post-crash page loss) — exercises the restore ladder
+        from repro.resilience import faults as _flt
+        frac = _flt.torn_ckpt()
+        if frac is not None:
+            p = os.path.join(final, "arrays.npz")
+            with open(p, "rb+") as f:
+                f.truncate(max(int(os.path.getsize(p) * frac), 1))
         self._gc()
+        # commit the chain bookkeeping (save() wait()s before reading these)
+        self.bytes_written += nbytes
+        self.last_save_bytes = nbytes
+        self.last_saved_step = step
+        self._last_step = step
+        if plan["mode"] == "base":
+            self._base_step = step
+            self._base_leafmeta = plan["leaves"]
+            self._base_sums = plan["sums"]
+            self.chain_len = 0
+        else:
+            self.chain_len = plan["chain_len"]
+
+    def _adopt(self, step: int, manifest: dict):
+        """Re-anchor the delta chain on a durable step found on disk (a
+        restore, or an idempotent re-save) so the next incremental save
+        diffs against exactly the state we resumed from."""
+        self._last_step = step
+
+        def read_sums(m):
+            return {k: np.asarray(v["checksums"], np.uint32)
+                    for k, v in m.get("integrity", {}).items()}
+
+        if manifest.get("kind") == "delta":
+            base_step = manifest.get("base_step")
+            try:
+                with open(os.path.join(self.dir, f"step_{base_step:010d}",
+                                       "manifest.json")) as f:
+                    bm = json.load(f)
+            except (OSError, TypeError, ValueError):
+                # base gone: the next save is forced to start a new base
+                self._base_step = None
+                self.chain_len = 0
+                self._dirty_chunks = set()
+                return
+            self._base_step = base_step
+            self._base_leafmeta = bm.get("leaves", {})
+            self._base_sums = read_sums(bm)
+            self.chain_len = max(self.chain_len, 1)
+            # known-dirty-since-base: the adopted delta's own chunk set (the
+            # checksum diff re-derives the rest on every save)
+            self._dirty_chunks = {
+                int(i) for info in manifest.get("delta", {}).values()
+                for i in info.get("chunks", [])}
+        else:
+            self._base_step = step
+            self._base_leafmeta = manifest.get("leaves", {})
+            self._base_sums = read_sums(manifest)
+            self.chain_len = 0
+            self._dirty_chunks = set()
 
     def _gc(self):
         steps = sorted(d for d in os.listdir(self.dir) if d.startswith("step_"))
-        for d in steps[: -self.keep] if self.keep else []:
-            shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+        if not self.keep:
+            return
+        needed = set(steps[-self.keep:])
+        # a retained delta is only restorable with its base: pin it too
+        for name in list(needed):
+            mpath = os.path.join(self.dir, name, "manifest.json")
+            try:
+                with open(mpath) as f:
+                    m = json.load(f)
+            except (OSError, ValueError):
+                continue
+            if m.get("kind") == "delta" and m.get("base_step") is not None:
+                needed.add(f"step_{m['base_step']:010d}")
+        for d in steps:
+            if d not in needed:
+                shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
 
     # -------------------------------------------------------------- restore
     def latest_step(self) -> int | None:
@@ -207,11 +435,16 @@ class CheckpointManager:
 
         With ``step=None`` (the resume path) a latest checkpoint that fails
         to read or verify is not fatal: after attempting chunk-level repair
-        (see ``_read_step``), restore walks the previously retained steps
-        newest-to-oldest and returns the first healthy one, recording the
-        skip in ``last_restore_report["fell_back_from"]``.  An explicitly
-        requested ``step`` never falls back — the caller asked for those
-        exact bytes.
+        (full/base candidates; see ``_read_step``), restore walks the
+        previously retained steps newest-to-oldest and returns the first
+        healthy one, recording the skip in
+        ``last_restore_report["fell_back_from"]`` and counting the torn /
+        corrupt candidates it routed around in ``["torn_writes"]``.  A delta
+        candidate replays its intact (base, delta) pair or raises — deltas
+        are never partially merged, so every restore is from an intact
+        chain.  An explicitly requested ``step`` never falls back — the
+        caller asked for those exact bytes.  A successful restore re-anchors
+        this manager's delta chain at the restored step.
         """
         explicit = step is not None
         if explicit:
@@ -225,9 +458,10 @@ class CheckpointManager:
                 candidates += [s for s in reversed(self.retained_steps())
                                if s < latest]
         errors = []
-        for s in candidates:
+        for i, s in enumerate(candidates):
             try:
-                got, tree, report = self._read_step(s, shardings, verify)
+                got, tree, report, manifest = self._read_step(
+                    s, shardings, verify)
             except Exception as e:  # noqa: BLE001 — any unreadable candidate
                 if explicit or not fallback:
                     raise
@@ -235,7 +469,11 @@ class CheckpointManager:
                 continue
             report["fell_back_from"] = (candidates[0]
                                         if s != candidates[0] else None)
+            # candidates skipped on the way down are detected torn/corrupt
+            # writes (the health counter the trainer surfaces)
+            report["torn_writes"] = report.get("torn_writes", 0) + i
             self.last_restore_report = report
+            self._adopt(got, manifest)
             return got, tree
         raise IOError("no restorable checkpoint in "
                       f"{self.dir}:\n  " + "\n  ".join(errors))
@@ -247,16 +485,96 @@ class CheckpointManager:
             raise IOError(f"injected host read failure for {path}")
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)
-        with np.load(os.path.join(path, "arrays.npz")) as z:
-            host = {k: z[k] for k in z.files}
-        report = {"quarantined_chunks": 0, "repaired_leaves": []}
-        if verify and _tree_digest(host) != manifest["checksum"]:
-            self._chunk_repair(host, manifest, report, path)
+        report = {"quarantined_chunks": 0, "repaired_leaves": [],
+                  "torn_writes": 0, "chain_len": 0}
+        if manifest.get("kind") == "delta":
+            host = self._read_delta(step, manifest, report)
+            if verify and _tree_digest(host) != manifest["checksum"]:
+                # a delta candidate is all-or-nothing: a digest miss after a
+                # verified replay means base-content drift — repairing it
+                # chunk-by-chunk would silently merge two timelines
+                raise IOError(f"checkpoint {path}: replayed (base, delta) "
+                              "state failed checksum verification")
+        else:
+            with np.load(os.path.join(path, "arrays.npz")) as z:
+                host = {k: z[k] for k in z.files}
+            if verify and _tree_digest(host) != manifest["checksum"]:
+                self._chunk_repair(host, manifest, report, path)
         if shardings is not None:
             put = (shardings if callable(shardings)
                    else (lambda p: shardings))
             host = {k: jax.device_put(v, put(k)) for k, v in host.items()}
-        return manifest["step"], _unflatten(host), report
+        return manifest["step"], _unflatten(host), report, manifest
+
+    def _read_delta(self, step: int, manifest: dict, report: dict) -> dict:
+        """Replay (base, this delta).  Strict: any unreadable or
+        unverifiable piece raises — the fallback ladder then lands on the
+        newest intact candidate instead of merging a torn write."""
+        base_step = manifest.get("base_step")
+        if base_step is None:
+            raise IOError(f"delta manifest at step {step} lacks base_step")
+        try:
+            with np.load(os.path.join(self.dir, f"step_{base_step:010d}",
+                                      "arrays.npz")) as z:
+                host = {k: z[k] for k in z.files}
+        except Exception as e:
+            raise IOError(f"base step {base_step} for delta step {step} is "
+                          f"unreadable: {type(e).__name__}: {e}")
+        try:
+            with np.load(os.path.join(
+                    self.dir, f"step_{step:010d}", "arrays.npz")) as z:
+                data = {k: z[k] for k in z.files}
+        except Exception as e:
+            raise IOError(f"delta payload for step {step} is torn/"
+                          f"unreadable: {type(e).__name__}: {e}")
+        for k, v in data.items():
+            if "@" not in k:               # non-pool leaf, stored in full
+                host[k] = v
+        for k, info in manifest.get("delta", {}).items():
+            self._apply_delta_leaf(host, k, info, data, step)
+        report["chain_len"] = 1
+        return host
+
+    def _apply_delta_leaf(self, host: dict, k: str, info: dict, data: dict,
+                          step: int):
+        ids_key, pay_key = k + "@chunks", k + "@delta"
+        if ids_key not in data or pay_key not in data or k not in host:
+            raise IOError(f"delta payload for step {step} lacks {k!r} "
+                          "chunk arrays")
+        ids = np.asarray(data[ids_key], np.int32)
+        payload = np.asarray(data[pay_key])
+        chunk = int(info.get("chunk", integ_lib.CHUNK))
+        leaf = np.ascontiguousarray(host[k]).reshape(-1).copy()
+        slices = _delta_chunk_slices(leaf.size, ids, chunk)
+        expect = sum(hi - lo for lo, hi in slices)
+        if (payload.size != expect
+                or [int(i) for i in ids] != info.get("chunks")
+                or (ids.size and (int(ids.min()) < 0
+                                  or int(ids.max()) * chunk >= leaf.size))):
+            raise IOError(f"delta payload for step {step}, leaf {k!r}: "
+                          "chunk layout mismatch (torn write)")
+        if hashlib.sha256(ids.tobytes() + payload.tobytes()).hexdigest() \
+                != info.get("sha256"):
+            # localize before giving up: the per-chunk bit sums name the
+            # first corrupt chunk in the error (operator-debuggable), but
+            # the candidate is still rejected as a whole
+            ref = info.get("checksums") or []
+            off = 0
+            for j, (lo, hi) in enumerate(slices):
+                piece = payload[off: off + (hi - lo)]
+                off += hi - lo
+                got = integ_lib.np_chunk_checksums(piece, chunk)
+                if j >= len(ref) or int(got[0]) != int(ref[j]):
+                    raise IOError(
+                        f"delta payload for step {step}, leaf {k!r}: chunk "
+                        f"{int(ids[j])} failed its bit-sum check")
+            raise IOError(f"delta payload for step {step}, leaf {k!r} "
+                          "failed sha256 verification")
+        off = 0
+        for lo, hi in slices:
+            leaf[lo:hi] = payload[off: off + (hi - lo)]
+            off += hi - lo
+        host[k] = leaf.reshape(host[k].shape)
 
     def _chunk_repair(self, host: dict, manifest: dict, report: dict,
                       path: str):

@@ -13,6 +13,7 @@ family runs at smoke scale with the bigram generator.
 from __future__ import annotations
 
 import argparse
+import os
 
 import numpy as np
 
@@ -208,6 +209,16 @@ def main(argv=None):
     ap.add_argument("--no-guard", action="store_true",
                     help="disable the in-jit non-finite step guard "
                          "(also REPRO_GUARD_STEP=0)")
+    ap.add_argument("--ckpt-delta", action="store_true",
+                    default=os.environ.get("REPRO_CKPT_DELTA", "").lower()
+                    in ("1", "true", "on", "yes"),
+                    help="incremental checkpoints: persist only the pool "
+                         "chunks dirtied since the last durable step "
+                         "(SparseGrad indices / tier writeback feed the "
+                         "dirty set; also REPRO_CKPT_DELTA=1)")
+    ap.add_argument("--ckpt-compact-every", type=int, default=8,
+                    help="delta-chain length before forcing a full base "
+                         "checkpoint (bounds restore replay cost)")
     args = ap.parse_args(argv)
 
     if args.exchange is not None:
@@ -262,6 +273,8 @@ def main(argv=None):
         TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
                       ckpt_every=100, log_every=max(args.steps // 10, 1),
                       lookups_per_step=lps,
+                      ckpt_delta=args.ckpt_delta,
+                      ckpt_compact_every=args.ckpt_compact_every,
                       guard_step=False if args.no_guard else None),
         # a tiered pool updates densely: the compact pool is already only
         # the budgeted hot+stage slots, and the sparse pipeline's explicit

@@ -14,6 +14,9 @@ deterministic, seeded :class:`~repro.resilience.faults.FaultInjector`.
     health          the Health counter record ``Trainer.fit`` reports
     exchange_guard  probe-validate chunked strategies, retry once, demote
                     ``all_to_all -> ring -> psum`` on repeated failure
+    chaos           seeded chaos soak harness: N-hundred-step runs under a
+                    randomized fault schedule, asserting completion, bounded
+                    lost work and bit-identity to the clean run
 """
 from repro.resilience.health import Health                      # noqa: F401
 from repro.resilience.faults import (                           # noqa: F401
@@ -21,3 +24,5 @@ from repro.resilience.faults import (                           # noqa: F401
 from repro.resilience.guard import (                            # noqa: F401
     make_step, all_finite, guard_enabled)
 from repro.resilience.exchange_guard import ExchangeGuard       # noqa: F401
+from repro.resilience.chaos import (                            # noqa: F401
+    make_schedule, run_chaos, durable_state, states_bit_identical)

@@ -1,0 +1,120 @@
+"""Chaos soak harness: long runs under a seeded randomized fault schedule.
+
+The unit tests pin each self-healing path in isolation; the soak composes
+them the way production does — a few hundred steps with preemptions, torn
+checkpoint writes, host bit-rot, staging failures and NaN gradients landing
+at seeded-random steps — and asserts the *system-level* durability contract:
+
+  * the run completes (restart-on-preempt until done, bounded);
+  * every restore comes from an intact (base, deltas...) chain — a torn
+    write costs at most the fallback to the previous durable step, so no
+    incarnation loses more than ``ckpt_every`` steps of work;
+  * when every fault in the schedule is transient (fires once, then the
+    replay is clean), the final params and every optimizer moment are
+    **bit-identical** to a never-faulted run — self-healing means healed,
+    not merely "didn't crash".
+
+Usage (see ``tests/test_durability.py``)::
+
+    spec = chaos.make_schedule(total_steps=200, seed=7)
+    res = chaos.run_chaos(make_trainer, spec, seed=7)
+    assert res["step"] == 200 and not res["preempted"]
+
+``make_trainer(injector)`` must build a *fresh* Trainer wired to the given
+injector and a checkpoint directory shared across incarnations — each call
+is one process incarnation; the injector is shared so a fault consumed
+before a crash stays consumed after the restart (like a real transient).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.resilience import faults as faults_lib
+
+# the soak's default fault mix — every kind is transient (fires once), so a
+# schedule drawn from these must heal to bit-identity
+SOAK_KINDS = ("preempt", "torn_ckpt", "rot_row", "stage_fail", "nan_grad")
+
+
+def make_schedule(total_steps: int, seed: int = 0,
+                  kinds=SOAK_KINDS, n_faults: int | None = None,
+                  min_step: int = 1) -> str:
+    """Draw a seeded ``REPRO_FAULTS``-grammar schedule: ``n_faults``
+    (default ~1 per 40 steps) distinct steps in ``[min_step, total_steps)``,
+    each assigned a random kind.  Deterministic in ``seed``."""
+    rng = np.random.default_rng(seed)
+    if n_faults is None:
+        n_faults = max(total_steps // 40, 1)
+    lo = max(int(min_step), 0)
+    hi = max(int(total_steps), lo + 2)
+    steps = rng.choice(np.arange(lo, hi), size=min(int(n_faults), hi - lo),
+                       replace=False)
+    picks = rng.choice(np.asarray(kinds, object), size=steps.size)
+    toks = [f"{k}@{int(s)}"
+            for s, k in sorted(zip(steps.tolist(), picks.tolist()))]
+    return ",".join(toks)
+
+
+def run_chaos(trainer_factory, spec: str, seed: int = 0,
+              max_restarts: int = 16, log=lambda s: None) -> dict:
+    """Drive ``trainer_factory(injector)`` to completion under ``spec``.
+
+    Each factory call is one process incarnation (fresh Trainer, shared
+    checkpoint directory); a preempted exit triggers a restart, up to
+    ``max_restarts``.  The injector is built once and shared across
+    incarnations, so transient faults stay consumed across restarts.
+
+    Returns the final incarnation's ``fit`` result dict, augmented with
+    ``chaos_restarts`` (restart count) and ``chaos_max_lost_steps`` (the
+    largest step regression any restart or rollback observed — the "at
+    most ``ckpt_every`` steps of work lost" bound the soak asserts)."""
+    inj = faults_lib.FaultInjector(spec, seed)
+    restarts = 0
+    max_lost = 0
+    prev_exit_step: int | None = None
+    while True:
+        tr = trainer_factory(inj)
+        faults_lib.install(inj)
+        try:
+            res = tr.fit(log=log)
+        finally:
+            faults_lib.install(None)
+        resumed = res.get("resumed_step")
+        if prev_exit_step is not None:
+            max_lost = max(max_lost,
+                           prev_exit_step - (resumed if resumed is not None
+                                             else 0))
+        if not res.get("preempted"):
+            break
+        prev_exit_step = res["step"]
+        restarts += 1
+        if restarts > max_restarts:
+            raise RuntimeError(
+                f"chaos soak did not complete within {max_restarts} restarts "
+                f"(stuck at step {res['step']})")
+        log(f"[chaos] preempted at step {res['step']}; restarting "
+            f"({restarts}/{max_restarts})")
+    res["chaos_restarts"] = restarts
+    res["chaos_max_lost_steps"] = int(max_lost)
+    return res
+
+
+def durable_state(trainer) -> dict:
+    """Flat ``{path: np.ndarray}`` of the trainer's durable state — params
+    and every optimizer moment, as the checkpoint would persist them (full
+    pools for tiered runs) — excluding the step counter and tier meta.
+    This is the bit-identity comparison surface for the soak."""
+    # deferred: checkpoint.manager imports repro.resilience at module load
+    from repro.checkpoint.manager import _flatten
+    flat = _flatten(trainer._state())
+    return {k: np.asarray(v) for k, v in flat.items()
+            if k != "step" and not k.startswith("tier")}
+
+
+def states_bit_identical(a: dict, b: dict) -> bool:
+    if set(a) != set(b):
+        return False
+    return all(a[k].shape == b[k].shape and a[k].dtype == b[k].dtype
+               and np.ascontiguousarray(a[k]).tobytes()
+               == np.ascontiguousarray(b[k]).tobytes()
+               for k in a)

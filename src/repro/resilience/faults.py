@@ -33,10 +33,21 @@ Fault kinds
     assembles, persistently from ``step`` on — a bad link stays bad until
     the strategy is demoted (``resilience.exchange_guard``).  The psum
     oracle is exempt by construction.
+``torn_ckpt``
+    Truncate the next checkpoint's array payload after it lands (consumed
+    once) — the torn/partial write a crash (or lying storage firmware)
+    leaves behind.  ``:arg`` fixes the surviving fraction; default is a
+    seeded draw in [0.2, 0.8].  Restore must detect the torn step and fall
+    back to the newest intact (base, deltas...) chain.
+``stage_fail``
+    Fail the next tiered-store staging transfer (the async ``device_put``
+    prefetch of cold blocks, consumed once) — the tier controller retries
+    the stage, so a transient staging fault never perturbs training.
 
-Gradient, rot, slow and preempt faults fire once (transient faults — the
-realistic case, and what lets rollback-replay actually heal); chunk faults
-persist.  ``reset()`` re-arms everything for tests.
+Gradient, rot, slow, preempt, torn_ckpt and stage_fail faults fire once
+(transient faults — the realistic case, and what lets rollback-replay
+actually heal); chunk faults persist.  ``reset()`` re-arms everything for
+tests.
 """
 from __future__ import annotations
 
@@ -56,7 +67,8 @@ GRAD_KINDS = {
     "huge_grad": 1e30,
 }
 KINDS = tuple(GRAD_KINDS) + ("rot_row", "slow_rank", "preempt", "read_fail",
-                             "drop_chunk", "corrupt_chunk")
+                             "drop_chunk", "corrupt_chunk", "torn_ckpt",
+                             "stage_fail")
 
 
 @dataclasses.dataclass
@@ -169,6 +181,29 @@ class FaultInjector:
                 return True
         return False
 
+    def torn_ckpt_fault(self) -> float | None:
+        """Surviving fraction for the next checkpoint array payload, or None
+        (consumed once).  The checkpoint manager truncates the file to this
+        fraction *after* the step directory lands — data loss that survives
+        the rename, the case fsync discipline cannot prevent."""
+        for f in self.faults:
+            if not f.fired and f.kind == "torn_ckpt" and self.now >= f.step:
+                f.fired = True
+                if f.arg is not None:
+                    return min(max(float(f.arg), 0.0), 0.99)
+                rng = np.random.default_rng((self.seed << 20) ^ (f.step + 3))
+                return float(rng.uniform(0.2, 0.8))
+        return None
+
+    def stage_fail_fault(self) -> bool:
+        """True -> the tiered store should fail this staging ``device_put``
+        (consumed once; the controller retries the stage)."""
+        for f in self.faults:
+            if not f.fired and f.kind == "stage_fail" and self.now >= f.step:
+                f.fired = True
+                return True
+        return False
+
     # -------------------------------------------------------- exchange faults
     def exchange_fault(self) -> str | None:
         """'drop' | 'corrupt' | None.  Persistent once armed — a flaky link
@@ -220,6 +255,17 @@ def from_env() -> FaultInjector | None:
 def io_fault() -> bool:
     """Module-level hook the checkpoint manager consults on every host read."""
     return ACTIVE is not None and ACTIVE.io_fault()
+
+
+def torn_ckpt() -> float | None:
+    """Module-level hook the checkpoint manager consults after each write:
+    surviving fraction of the array payload, or None (intact)."""
+    return ACTIVE.torn_ckpt_fault() if ACTIVE is not None else None
+
+
+def stage_fail() -> bool:
+    """Module-level hook the tiered store consults on each staging transfer."""
+    return ACTIVE is not None and ACTIVE.stage_fail_fault()
 
 
 # ------------------------------------------------------- exchange wrapping

@@ -70,6 +70,20 @@ def all_finite(tree, max_abs: float | None = None) -> jax.Array:
     return ok
 
 
+def touched_indices(grads) -> jax.Array:
+    """Concatenated slot indices of every ``SparseGrad`` leaf (sentinel-padded
+    entries included — callers clip negatives).  This is the dirty-set feed
+    for incremental checkpoints: exactly the slots this step's sparse update
+    can write."""
+    idx = [x.indices.reshape(-1)
+           for x in jax.tree_util.tree_leaves(grads,
+                                              is_leaf=sparse_lib.is_sparse)
+           if sparse_lib.is_sparse(x)]
+    if not idx:
+        return jnp.zeros((0,), jnp.int32)
+    return jnp.concatenate(idx)
+
+
 def _scale_grads(grads, scale):
     """Multiply every floating gradient leaf (incl. SparseGrad values) by the
     traced fault scale; 1.0 is a bitwise no-op."""
@@ -85,7 +99,8 @@ def _scale_grads(grads, scale):
 def make_step(loss_fn: Callable, optimizer: Optimizer, *,
               sparse_grads: bool = False, guard: bool = True,
               donate: bool = True,
-              max_abs_grad: float | None = MAX_ABS_GRAD):
+              max_abs_grad: float | None = MAX_ABS_GRAD,
+              report_touched: bool = False):
     """Build the jitted train step.
 
     Returns ``step(params, opt_state, batch, fault_scale) ->
@@ -95,6 +110,12 @@ def make_step(loss_fn: Callable, optimizer: Optimizer, *,
     bad-loss skips for the health counters.  With ``guard=False`` the step is
     the pre-guard fast path (no checks, no cond) and ``ok`` is constant True
     — the bench baseline for the overhead gate.
+
+    ``report_touched=True`` appends a 7th output: the step's concatenated
+    ``SparseGrad`` slot indices (``touched_indices``), which the trainer
+    feeds to ``CheckpointManager.mark_dirty_slots`` for delta checkpoints.
+    The indices are reported even for skipped steps; the trainer only marks
+    them when ``ok``.
     """
     vg = (sparse_lib.sparse_value_and_grad(loss_fn) if sparse_grads
           else jax.value_and_grad(loss_fn, has_aux=True))
@@ -103,10 +124,11 @@ def make_step(loss_fn: Callable, optimizer: Optimizer, *,
     def step(params, opt_state, batch, fault_scale):
         (loss, metrics), grads = vg(params, batch)
         grads = _scale_grads(grads, fault_scale)
+        touched = (touched_indices(grads),) if report_touched else ()
         if not guard:
             updates, opt_state = optimizer.update(grads, opt_state, params)
             params = apply_updates(params, updates)
-            return params, opt_state, loss, metrics, true, true
+            return (params, opt_state, loss, metrics, true, true) + touched
 
         grads_ok = all_finite(grads, max_abs_grad)
         ok = jnp.isfinite(loss) & grads_ok
@@ -118,7 +140,7 @@ def make_step(loss_fn: Callable, optimizer: Optimizer, *,
 
         params, opt_state = jax.lax.cond(
             ok, apply, lambda state: state, (params, opt_state))
-        return params, opt_state, loss, metrics, ok, grads_ok
+        return (params, opt_state, loss, metrics, ok, grads_ok) + touched
 
     # donation intact: the skip branch is an identity, so donated buffers are
     # either updated in place or passed through untouched

@@ -3,14 +3,24 @@
 One mutable :class:`Health` record per Trainer aggregates every resilience
 event the run survived: steps skipped by the non-finite guard, gradient
 non-finites observed, straggler steps, retries, checkpoint rollbacks, pool
-chunks quarantined by the integrity scan, and exchange-strategy demotions.
+chunks quarantined by the integrity scan, exchange-strategy demotions, and
+torn checkpoint writes the restore ladder had to route around.
 ``fit()`` surfaces the record in its periodic log lines and merges it into
 the result dict, so a run that healed itself is visibly different from a
 run that never faulted.
+
+Besides the fault counters, the record carries three durability *gauges* —
+``last_durable_step``, ``ckpt_bytes_written``, ``delta_chain_len`` — that
+describe the checkpoint state rather than a fault, so they are excluded
+from :meth:`Health.any_faults` and :meth:`Health.summary` (a run with a
+durable step is not an unhealthy run).
 """
 from __future__ import annotations
 
 import dataclasses
+
+# durability gauges: state descriptors, not fault events
+_GAUGES = ("last_durable_step", "ckpt_bytes_written", "delta_chain_len")
 
 
 @dataclasses.dataclass
@@ -23,14 +33,21 @@ class Health:
     rollbacks: int = 0            # restore-from-checkpoint after K skips
     quarantined_chunks: int = 0   # pool chunks zeroed by the integrity scan
     exchange_demotions: int = 0   # strategies demoted down the fallback chain
+    torn_writes_detected: int = 0  # torn/corrupt checkpoint payloads the
+                                   # restore path detected and routed around
+    # --- durability gauges (excluded from any_faults / summary) ---
+    last_durable_step: int = -1   # newest step with an on-disk checkpoint
+    ckpt_bytes_written: int = 0   # cumulative checkpoint array bytes written
+    delta_chain_len: int = 0      # deltas since the last full base checkpoint
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
 
     def any_faults(self) -> bool:
-        return any(v for v in self.as_dict().values())
+        return any(v for k, v in self.as_dict().items() if k not in _GAUGES)
 
     def summary(self) -> str:
         """Compact ``k=v`` string of the non-zero counters ('' when clean)."""
-        items = [(k, v) for k, v in self.as_dict().items() if v]
+        items = [(k, v) for k, v in self.as_dict().items()
+                 if v and k not in _GAUGES]
         return " ".join(f"{k}={v}" for k, v in items)

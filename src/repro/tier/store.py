@@ -47,6 +47,12 @@ BLOCK_DEFAULT = 512          # slots per tier block (= store_rows granularity)
 EMA_DECAY = 0.8              # per-observation decay of the touch-count EMA
 
 
+class StageTransferError(RuntimeError):
+    """A host->device staging transfer failed (injected or real).  Staging
+    is side-effect-free until :meth:`TieredStore.install` consumes it, so
+    the controller simply retries the stage."""
+
+
 # ----------------------------------------------------------- budget helpers
 
 def tier_budget_mb() -> float | None:
@@ -229,7 +235,7 @@ class TieredStore:
         self.stats = {"host_fetch_bytes": 0, "writeback_bytes": 0,
                       "staged_blocks": 0, "stage_steps": 0,
                       "promoted": 0, "demoted": 0,
-                      "quarantined_cold_chunks": 0}
+                      "quarantined_cold_chunks": 0, "stage_retries": 0}
 
     # ------------------------------------------------------------ geometry
     @property
@@ -293,6 +299,50 @@ class TieredStore:
             out[self._staged_ids] = rows[: self._staged_ids.size]
         return out.reshape(-1)
 
+    # --------------------------------------------------------- durability
+    def set_host_full(self, name: str, full) -> None:
+        """Overwrite a leaf's host mirror from a full [m] pool (the restore
+        path: a checkpointed full pool becomes the authoritative mirror).
+        Registers the leaf if unseen — unlike :meth:`register_leaf` the
+        value need not be uniform, because it IS the durable state."""
+        arr = np.asarray(jax.device_get(full)).reshape(-1)
+        assert arr.shape[0] == self.m, (arr.shape, self.m)
+        self._host[name] = arr.reshape(self.n_blocks, self.block).copy()
+
+    def tier_meta(self) -> dict:
+        """The non-pool tier state a checkpoint must carry for bit-exact
+        resumption: the hot set and the touch-count EMA (staging is
+        per-step transient and deliberately excluded — a restore replans
+        it from the resumed batch stream)."""
+        return {"hot_ids": self.hot_ids.astype(np.int32).copy(),
+                "ema": self.ema.copy()}
+
+    def restore_meta(self, hot_ids=None, ema=None) -> None:
+        """Adopt checkpointed tier meta.  When the checkpoint's geometry no
+        longer matches (elastic restart with a different budget), the hot
+        set is re-derived from the EMA — same rule as the ctor seed."""
+        if ema is not None:
+            e = np.asarray(ema, np.float64).reshape(-1)
+            if e.shape[0] == self.n_blocks:
+                self.ema = e.copy()
+        h = None if hot_ids is None else np.asarray(hot_ids).reshape(-1)
+        if (h is not None and h.shape[0] == self.hot_blocks
+                and (h >= 0).all() and (h < self.n_blocks).all()):
+            self.hot_ids = np.sort(h).astype(np.int32)
+            return
+        order = np.lexsort((np.arange(self.n_blocks), -self.ema))
+        self.hot_ids = np.sort(order[: self.hot_blocks]).astype(np.int32)
+
+    def drop_stage(self) -> None:
+        """Discard staged and in-flight rows without touching the mirror —
+        the rollback path: the restored state is authoritative, and
+        whatever was staged belongs to the abandoned timeline."""
+        self._pending = None
+        self._pending_ids = None
+        self._staged_ids = None
+        self._stage_ids_dev = jnp.full((max(self.stage_blocks, 1),),
+                                       self.n_blocks, jnp.int32)
+
     # ------------------------------------------------------- device buffers
     def batch_tier_buffers(self) -> dict:
         """The three remap buffers for *this* step, to ride in the batch
@@ -327,6 +377,10 @@ class TieredStore:
                 f"batch touches {cold.size} cold blocks but stage capacity "
                 f"is {self.stage_blocks}; raise stage_blocks (or the "
                 f"tier budget)")
+        from repro.resilience import faults as faults_lib
+        if faults_lib.stage_fail():
+            raise StageTransferError(
+                "injected staging transfer failure (stage_fail fault)")
         S = max(self.stage_blocks, 1)
         ids = np.full(S, self.n_blocks, np.int32)      # sentinel pad
         ids[: cold.size] = np.sort(cold).astype(np.int32)

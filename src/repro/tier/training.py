@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.tier.store import StageTransferError
+
 TIER_KEYS = ("tier_hot_ids", "tier_stage_ids", "tier_block")
 RETIER_EVERY_DEFAULT = 8
 
@@ -156,22 +158,83 @@ class TierController:
         loc = np.asarray(jax.device_get(self.plan_fn(batch)))
         blocks, counts = st.touched_blocks(loc)
         st.observe(blocks, counts)
-        info.update(st.stage(blocks))
+        try:
+            info.update(st.stage(blocks))
+        except StageTransferError:
+            # staging has no side effects until install() consumes it, so a
+            # failed transfer is retried from scratch; a transient fault
+            # never perturbs training
+            st.stats["stage_retries"] += 1
+            info.update(st.stage(blocks))
         tree = st.install(tree)
         params, opt_state = put(tree)
+        # the global pool locations this step will touch — the dirty-set
+        # feed for incremental checkpoints (writeback commits these rows)
+        info["touched_slots"] = loc.reshape(-1)
         return params, opt_state, info
 
-    def on_restore(self):
-        """Checkpoint restore replaced the compact device pool: the
-        previously staged rows no longer correspond to it, so drop them
-        (the next :meth:`pre_step`'s writeback becomes a no-op; the host
-        mirror keeps its last written-back values — the cold tier is not
-        checkpointed, a documented limitation)."""
-        self.store._staged_ids = None
+    def on_restore(self, params=None, opt_state=None, meta=None):
+        """Checkpoint restore replaced the device pool.
+
+        Zero-arg (legacy compact checkpoints): drop the staged rows — they
+        belong to the abandoned timeline — and keep the host mirror's last
+        written-back values.
+
+        Full form (durable cold tier): ``params`` / ``opt_state`` carry
+        *full* [m] pool leaves straight from the checkpoint and ``meta`` the
+        checkpointed ``{hot_ids, ema}``.  The mirror adopts the checkpointed
+        bytes wholesale, the hot set and EMA are restored (re-derived from
+        the EMA when the geometry changed — elastic restart), the hot slab
+        is rebuilt from the mirror, staging replans on the next
+        :meth:`pre_step`.  Returns the compact ``(params, opt_state)`` —
+        bit-exactly the state a never-preempted run would hold."""
+        st = self.store
+        st.drop_stage()
         self._cache_step = None
         self._cache_batch = None
+        if params is None:
+            return None
+        if meta:
+            st.restore_meta(meta.get("hot_ids"), meta.get("ema"))
+        p_hits = pool_leaf_paths(params, st.m)
+        assert len(p_hits) == 1, (
+            f"expected exactly one full pool leaf in restored params, got "
+            f"{[k for k, _ in p_hits]}")
+        o_hits = pool_leaf_paths(opt_state, st.m)
+        st.set_host_full("memory", p_hits[0][1])
+        for k, leaf in o_hits:
+            st.set_host_full(f"opt:{k}", leaf)
+        new_params = _replace(params,
+                              {p_hits[0][0]: st.initial_compact("memory")})
+        new_opt = _replace(opt_state,
+                           {k: st.initial_compact(f"opt:{k}")
+                            for k, _ in o_hits})
+        return new_params, new_opt
 
     # ------------------------------------------------------------- export
+    def export_full(self, params, opt_state):
+        """``(params, opt_state)`` with every compact pool leaf replaced by
+        its reconstructed full [m] pool — the durable image a checkpoint
+        persists (bit-exact row copies through the host mirror).  Unseen
+        moment leaves are registered first, so a fresh run's very first
+        save already covers the whole cold tier."""
+        st = self.store
+        p_hits = pool_leaf_paths(params, st.compact_slots)
+        assert len(p_hits) == 1, [k for k, _ in p_hits]
+        o_hits = pool_leaf_paths(opt_state, st.compact_slots)
+        st._register_tree({"memory": p_hits[0][1],
+                           **{f"opt:{k}": leaf for k, leaf in o_hits}})
+        new_params = _replace(
+            params, {p_hits[0][0]:
+                     jnp.asarray(st.full_pool(p_hits[0][1], "memory"))})
+        new_opt = _replace(
+            opt_state, {k: jnp.asarray(st.full_pool(leaf, f"opt:{k}"))
+                        for k, leaf in o_hits})
+        return new_params, new_opt
+
+    def tier_meta(self) -> dict:
+        return self.store.tier_meta()
+
     def export_params(self, params):
         """Params with the compact pool replaced by the reconstructed full
         [m] pool — what eval / checkpoint-export code should see.  Bit-exact

@@ -7,6 +7,11 @@ Fault-tolerance posture (1000+-node design, exercised at container scale):
   * periodic + on-preemption checkpointing through CheckpointManager (atomic,
     async) — SIGTERM/SIGINT triggers a final save before exit; a *second*
     signal restores the default handler so a hung save can still be killed;
+    ``ckpt_delta=True`` switches to incremental checkpoints: only the pool
+    chunks dirtied since the last durable step are persisted (the dirty set
+    is fed by the step's SparseGrad indices, or by the tier controller's
+    planned touch set), compacted back to a full base every
+    ``ckpt_compact_every`` deltas;
   * resume: ``fit`` restores the latest checkpoint (params, opt state, step,
     data cursor) if one exists, so a killed run continues exactly where it
     was; a corrupt latest falls back to the previous retained step
@@ -108,6 +113,9 @@ class TrainerConfig:
     # embedding-row lookups one step performs (B * F for field models);
     # feeds the lookups_per_sec throughput stat when set
     lookups_per_step: int = 0
+    # --- durability ---
+    ckpt_delta: bool = False            # incremental (delta) checkpoints
+    ckpt_compact_every: int = 8         # deltas before forcing a full base
     # --- resilience ---
     guard_step: Optional[bool] = None   # None -> REPRO_GUARD_STEP (default on)
     max_abs_grad: float = guard_lib.MAX_ABS_GRAD
@@ -116,6 +124,10 @@ class TrainerConfig:
     rollback_backoff_max: float = 5.0   # backoff ceiling
     max_rollbacks: int = 8              # then give up (RuntimeError)
     verify_pool: bool = True            # integrity scan at ckpt boundaries
+    # roll back (instead of training on zeroed rows) when the boundary scan
+    # quarantines fresh corruption and a checkpoint exists — the bit-rot
+    # twin of the skip-streak rollback, restores true bytes instead of zeros
+    rollback_on_quarantine: bool = False
 
 
 class Trainer:
@@ -131,8 +143,12 @@ class Trainer:
         the controller's between-steps hook (writeback -> re-tier -> stage
         -> install) before fetching each batch, and draws batches through
         the controller so the per-step tier remap buffers ride along.
-        The checkpointed state is the *compact* device pool; the host-cold
-        tier is not checkpointed (a rollback drops any staged rows).
+        The checkpointed state is the reconstructed *full* pool (values and
+        moments, via ``TierController.export_full``) plus the tier meta
+        (hot set + touch-count EMA), so a restore rebuilds the host mirror,
+        hot slab and EMA bit-exactly and a rollback composes with tiering
+        (staged rows of the abandoned timeline are dropped, the mirror
+        adopts the checkpointed bytes).
 
         ``sparse_grads=None`` auto-enables the sparse-gradient pipeline
         (``repro.optim.sparse``) when the gate is on and the params hold a
@@ -153,8 +169,11 @@ class Trainer:
         self.tier = tier
         self.batch_fn = tier.batch_fn if tier is not None else batch_fn
         self.step = 0
-        self.mgr = (CheckpointManager(cfg.ckpt_dir, cfg.keep)
+        self.mgr = (CheckpointManager(cfg.ckpt_dir, cfg.keep,
+                                      delta=cfg.ckpt_delta,
+                                      compact_every=cfg.ckpt_compact_every)
                     if cfg.ckpt_dir else None)
+        self._resumed_step: int | None = None
         self._preempted = False
         self._step_times: collections.deque[float] = collections.deque(
             maxlen=256)
@@ -170,9 +189,15 @@ class Trainer:
         self._has_pool = sparse_lib.has_memory(params)
         self.guard = (cfg.guard_step if cfg.guard_step is not None
                       else guard_lib.guard_enabled())
+        # delta checkpoints over a resident sparse pool: the step reports
+        # its SparseGrad slot indices so the manager can mark dirty chunks
+        # (tiered runs feed the dirty set from pre_step's planned touches)
+        self._touched_out = bool(self.mgr is not None and self.mgr.delta
+                                 and sparse_grads and tier is None)
         self._jit_step = guard_lib.make_step(
             loss_fn, optimizer, sparse_grads=sparse_grads, guard=self.guard,
-            donate=donate, max_abs_grad=cfg.max_abs_grad)
+            donate=donate, max_abs_grad=cfg.max_abs_grad,
+            report_touched=self._touched_out)
 
     # back-compat: straggler count predates the Health record
     @property
@@ -202,8 +227,16 @@ class Trainer:
 
     # ----------------------------------------------------------- checkpoints
     def _state(self):
-        return {"params": self.params, "opt_state": self.opt_state,
-                "step": jnp.asarray(self.step, jnp.int32)}
+        state = {"params": self.params, "opt_state": self.opt_state,
+                 "step": jnp.asarray(self.step, jnp.int32)}
+        if self.tier is not None:
+            # durable cold tier: persist the reconstructed FULL pool (values
+            # + moments) and the tier meta, not the transient compact view —
+            # numpy leaves keep the EMA's float64 bits through np.savez
+            state["params"], state["opt_state"] = self.tier.export_full(
+                self.params, self.opt_state)
+            state["tier"] = self.tier.tier_meta()
+        return state
 
     def save(self, blocking: bool = True):
         if self.mgr:
@@ -220,14 +253,26 @@ class Trainer:
             return False
         _, state = self.mgr.restore()
         # serialization flattens NamedTuples (AdamState etc.) to plain tuples;
-        # rebuild into the live templates' tree structure
+        # rebuild into the live templates' tree structure (leaf shapes may
+        # legitimately differ: tiered checkpoints hold full pools)
         self.params = _restore_like(self.params, state["params"])
         self.opt_state = _restore_like(self.opt_state, state["opt_state"])
         self.step = int(np.asarray(state["step"]))
+        self._resumed_step = self.step
         if self.tier is not None:
-            self.tier.on_restore()
+            meta = state.get("tier") if isinstance(state, dict) else None
+            if meta is not None:
+                # durable cold tier: mirror + hot set + EMA adopt the
+                # checkpointed bytes, staged rows of the abandoned timeline
+                # are dropped, and we get the compact device view back
+                self.params, self.opt_state = self.tier.on_restore(
+                    self.params, self.opt_state, meta)
+            else:
+                # legacy compact checkpoint: pre-durability behavior
+                self.tier.on_restore()
         report = self.mgr.last_restore_report
         self.health.quarantined_chunks += report.get("quarantined_chunks", 0)
+        self.health.torn_writes_detected += report.get("torn_writes", 0)
         if self.cfg.verify_pool and self._has_pool:
             self._verify_pool()
         return True
@@ -252,23 +297,32 @@ class Trainer:
                 # stage this step's cold blocks (async device_put) ->
                 # install the new compact pool.  Runs before batch_fn so
                 # the remap buffers in the batch match the installed pool.
-                self.params, self.opt_state, _ = self.tier.pre_step(
+                self.params, self.opt_state, tinfo = self.tier.pre_step(
                     self.step, self.params, self.opt_state)
+                if self.mgr is not None and self.mgr.delta:
+                    # the planned touch set is exactly what writeback will
+                    # commit — the tiered feed of the delta dirty set
+                    self.mgr.mark_dirty_slots(tinfo.get("touched_slots", ()))
             batch = self.batch_fn(self.step)
             fault = self.faults.grad_fault(self.step) if self.faults else 1.0
             delay = self.faults.step_delay(self.step) if self.faults else 0.0
             t0 = time.perf_counter()
             if delay:
                 time.sleep(delay)  # inside the timed region: a straggler
-            self.params, self.opt_state, loss, metrics, ok, grads_ok = \
-                self._jit_step(self.params, self.opt_state, batch,
-                               np.float32(fault))
+            out = self._jit_step(self.params, self.opt_state, batch,
+                                 np.float32(fault))
+            (self.params, self.opt_state, loss, metrics, ok, grads_ok) = \
+                out[:6]
             loss.block_until_ready()
             dt = time.perf_counter() - t0
             self._track_straggler(dt)
             if bool(ok):
                 self._consecutive_skips = 0
                 last_loss = float(loss)
+                if self._touched_out:
+                    # resident sparse feed: this step's SparseGrad indices
+                    # (skipped steps touch nothing, so only marked on ok)
+                    self.mgr.mark_dirty_slots(np.asarray(out[6]))
             else:
                 self.health.skipped_steps += 1
                 if not bool(grads_ok):
@@ -290,7 +344,19 @@ class Trainer:
                 continue
             if (self.cfg.ckpt_every and self.step % self.cfg.ckpt_every == 0):
                 if self.cfg.verify_pool and self._has_pool:
+                    before = self.health.quarantined_chunks
                     self._verify_pool(log)
+                    if (self.cfg.rollback_on_quarantine
+                            and self.health.quarantined_chunks > before
+                            and self.mgr
+                            and self.mgr.latest_step() is not None):
+                        # fresh corruption at the boundary: restoring the
+                        # true bytes beats persisting zeroed rows — replay
+                        # from the last durable step instead of saving
+                        log(f"[trainer] step {self.step}: boundary scan "
+                            f"quarantined fresh corruption; rolling back")
+                        self._rollback(log)
+                        continue
                 if self.mgr:
                     self.save(blocking=False)
         if self.mgr:
@@ -305,11 +371,26 @@ class Trainer:
         # the resolved exchange make bench rows / logs self-describing —
         # health counters without the mode that produced them were ambiguous
         from repro.dist import exchange as exchange_lib
+        self._sync_durability()
         return {"step": self.step, "loss": last_loss, "preempted": preempted,
                 "guard_enabled": bool(self.guard),
+                "resumed_step": self._resumed_step,
                 "exchange": exchange_lib.effective(exchange_lib.FORCED)
                 if exchange_lib.FORCED else "auto",
                 **self.health.as_dict(), **self.throughput()}
+
+    def _sync_durability(self):
+        """Copy the checkpoint manager's durability gauges into the health
+        record (surfaced by ``fit``'s result dict and the periodic logs)."""
+        if self.mgr is None:
+            return
+        last = self.mgr.last_saved_step
+        if last is None:
+            last = self.mgr._last_step     # restored-but-not-yet-saved
+        if last is not None:
+            self.health.last_durable_step = int(last)
+        self.health.ckpt_bytes_written = int(self.mgr.bytes_written)
+        self.health.delta_chain_len = int(self.mgr.chain_len)
 
     # ------------------------------------------------------------ resilience
     def _verify_pool(self, log: Callable[[str], None] = print):

@@ -215,6 +215,46 @@ def test_committed_baseline_passes_tiered_gate():
     assert doc["tiered"]["host_fetch_bytes_per_step"] > 0
 
 
+def test_ckpt_delta_gate_logic():
+    """The delta-checkpoint gate: delta payload <= 25% of the full save and
+    the (base, delta) chain restore <= 2x a full restore; a ledger without
+    the ckpt block is flagged."""
+    from benchmarks.check_regression import ckpt_delta_failures
+    ok = {"ckpt": {"full_bytes": 16_000_000, "delta_bytes": 2_000_000,
+                   "restore_full_us": 40_000.0, "restore_chain_us": 46_000.0,
+                   "dirty_chunks": 32, "total_chunks": 256}}
+    assert ckpt_delta_failures({}, ok) == []
+    assert ckpt_delta_failures({}, None) == []           # ledger-diff mode
+    fat = {"ckpt": dict(ok["ckpt"], delta_bytes=5_000_000)}   # 31% > 25%
+    assert any("incremental" in f for f in ckpt_delta_failures({}, fat))
+    slow = {"ckpt": dict(ok["ckpt"], restore_chain_us=90_000.0)}  # 2.25x
+    assert any("chain restore" in f for f in ckpt_delta_failures({}, slow))
+    assert any("cannot run" in f
+               for f in ckpt_delta_failures({}, {"rows": []}))
+
+
+def test_committed_baseline_passes_ckpt_gate():
+    """This PR's acceptance artifact: the committed ledger carries the
+    ckpt_full / ckpt_delta / ckpt_restore_chain rows and the incremental
+    checkpoint is within both gates (delta <= 25% of full payload, chain
+    restore <= 2x full restore)."""
+    from benchmarks.check_regression import (CKPT_CHAIN_RESTORE_MAX,
+                                             CKPT_DELTA_MAX,
+                                             ckpt_delta_failures)
+    with open(BASELINE) as f:
+        doc = json.load(f)
+    rows = load_rows(doc)
+    shape = "m=2^21x2pool"
+    for k in ("ckpt_full", "ckpt_delta", "ckpt_restore_chain"):
+        assert (k, shape) in rows, k
+    assert ckpt_delta_failures(rows, doc) == []
+    c = doc["ckpt"]
+    assert c["delta_bytes"] <= CKPT_DELTA_MAX * c["full_bytes"]
+    assert c["restore_chain_us"] <= \
+        CKPT_CHAIN_RESTORE_MAX * c["restore_full_us"]
+    assert c["chain_len"] == 1         # cumulative-since-base: always 1 hop
+
+
 def test_committed_baseline_passes_guard_gate():
     """This PR's acceptance artifact: both step rows are in the committed
     ledger and the guarded step is within 5% of the unguarded one."""

@@ -222,7 +222,7 @@ def test_chunk_repair_quarantines_pool_corruption(tmp_path):
     np.testing.assert_array_equal(mem[2 * 8192:], want[2 * 8192:])  # chunk 2
     assert mgr.last_restore_report == {
         "quarantined_chunks": 1, "repaired_leaves": ["params/memory"],
-        "fell_back_from": None}
+        "fell_back_from": None, "torn_writes": 0, "chain_len": 0}
 
 
 def test_non_pool_corruption_falls_back(tmp_path):

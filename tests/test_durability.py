@@ -1,0 +1,467 @@
+"""Durable memory pool: incremental checkpoints, cold-tier durability and
+the chaos soak.
+
+Three layers of the durability contract:
+
+  * manager-level — delta checkpoints persist only the chunks dirtied since
+    the base, verify chunk-by-chunk, compact back to a base on cadence, and
+    a torn delta falls back to the newest *intact* (base, delta) pair;
+  * trainer-level — resident sparse runs feed the dirty set from SparseGrad
+    indices, tiered runs persist the reconstructed full pools + tier meta,
+    and preempt/rollback compose with both (bit-exact resume parity);
+  * system-level — the chaos soak (``repro.resilience.chaos``): 200-step
+    CTR runs under a seeded randomized fault schedule must complete, lose
+    at most ``ckpt_every`` steps per restart, and — every fault being
+    transient — end bit-identical to a run that never faulted.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager, _flatten
+from repro.embed import EmbeddingTable, get_scheme
+from repro.embed.config import EmbeddingConfig
+from repro.optim import optimizers as opt_lib
+from repro.resilience import chaos
+from repro.resilience import faults as faults_lib
+from repro.tier import TieredStore, TierController, split_batch
+from repro.train.trainer import Trainer, TrainerConfig
+
+CHUNK = 8192
+
+
+# ------------------------------------------------------------ manager level
+
+def _pool_state(seed=0, m=8 * CHUNK, step=0):
+    """A trainer-shaped state: pool leaf + its moment twin + a dense leaf."""
+    rng = np.random.default_rng(seed)
+    return {"params": {"memory": rng.normal(0, .1, m).astype(np.float32),
+                       "w": rng.normal(0, 1, (4, 3)).astype(np.float32)},
+            "opt": {"memory": np.zeros(m, np.float32)},
+            "step": np.asarray(step, np.int32)}
+
+
+def _assert_state_equal(got, want):
+    g, w = _flatten(got), _flatten(want)
+    assert set(g) == set(w)
+    for k in w:
+        np.testing.assert_array_equal(np.asarray(g[k]), np.asarray(w[k]),
+                                      err_msg=k)
+
+
+def _manifest(tmp_path, step):
+    with open(os.path.join(tmp_path, f"step_{step:010d}",
+                           "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_fault_grammar_new_kinds():
+    faults = faults_lib.parse_faults("torn_ckpt@3:0.5,stage_fail@2")
+    assert [(f.kind, f.step, f.arg) for f in faults] == [
+        ("stage_fail", 2, None), ("torn_ckpt", 3, 0.5)]
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        faults_lib.parse_faults("shredded_ckpt@3")
+    # both are consumed-once transients
+    inj = faults_lib.FaultInjector("torn_ckpt@3:0.5,stage_fail@2", seed=1)
+    inj.now = 5
+    assert inj.stage_fail_fault() and not inj.stage_fail_fault()
+    assert inj.torn_ckpt_fault() == 0.5 and inj.torn_ckpt_fault() is None
+    # unpinned torn fraction is a seeded draw in [0.2, 0.8]
+    inj2 = faults_lib.FaultInjector("torn_ckpt@3", seed=1)
+    inj2.now = 5
+    frac = inj2.torn_ckpt_fault()
+    assert 0.2 <= frac <= 0.8
+    inj3 = faults_lib.FaultInjector("torn_ckpt@3", seed=1)
+    inj3.now = 5
+    assert inj3.torn_ckpt_fault() == frac     # deterministic in seed
+
+
+def test_delta_roundtrip_and_byte_savings(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, delta=True)
+    state = _pool_state(0)
+    mgr.save(0, state)
+    base_bytes = mgr.last_save_bytes
+    assert _manifest(tmp_path, 0)["kind"] == "base"
+
+    # dirty one chunk of the pool, mark it the way the trainer does
+    state["params"]["memory"][CHUNK + 3: CHUNK + 13] += 1.0
+    state["step"] = np.asarray(5, np.int32)
+    mgr.mark_dirty_slots(np.arange(CHUNK + 3, CHUNK + 13))
+    mgr.save(5, state)
+    man = _manifest(tmp_path, 5)
+    assert man["kind"] == "delta" and man["base_step"] == 0
+    assert man["delta"]["params/memory"]["chunks"] == [1]
+    assert mgr.last_save_bytes < base_bytes / 4   # the bench-gate ratio
+    assert mgr.chain_len == 1
+
+    step, restored = mgr.restore()
+    assert step == 5
+    _assert_state_equal(restored, state)
+    # restoring re-anchors the chain: the next save is still a delta
+    state["params"]["memory"][0] += 2.0
+    state["step"] = np.asarray(10, np.int32)
+    mgr.mark_dirty_slots([0])
+    mgr.save(10, state)
+    assert _manifest(tmp_path, 10)["kind"] == "delta"
+    _assert_state_equal(mgr.restore()[1], state)
+
+
+def test_delta_catches_unmarked_mutation(tmp_path):
+    """The checksum diff vs the base is the safety net: a pool mutation
+    nobody marked (dense-moment drift, quarantine repair, rot) must still
+    land in the delta — an incremental save may never lose bytes."""
+    mgr = CheckpointManager(str(tmp_path), keep=3, delta=True)
+    state = _pool_state(1)
+    mgr.save(0, state)
+    state["opt"]["memory"][5 * CHUNK + 7] = 9.0   # mutate WITHOUT marking
+    state["step"] = np.asarray(5, np.int32)
+    mgr.save(5, state)
+    man = _manifest(tmp_path, 5)
+    assert man["kind"] == "delta"
+    assert man["delta"]["opt/memory"]["chunks"] == [5]
+    _assert_state_equal(mgr.restore()[1], state)
+
+
+def test_delta_compaction_and_gc_keep_chain_restorable(tmp_path):
+    """Every ``compact_every`` deltas the chain resets to a full base, and
+    GC pins the base each retained delta replays from."""
+    mgr = CheckpointManager(str(tmp_path), keep=2, delta=True,
+                            compact_every=3)
+    state = _pool_state(2)
+    kinds = {}
+    for i, s in enumerate(range(0, 30, 5)):
+        state["params"]["memory"][i * 7] += 1.0
+        state["step"] = np.asarray(s, np.int32)
+        mgr.mark_dirty_slots([i * 7])
+        mgr.save(s, state)
+        kinds[s] = _manifest(tmp_path, s)["kind"]
+    # base at 0, deltas 5/10/15, compacted base at 20, delta 25
+    assert [kinds[s] for s in (0, 5, 10, 15, 20, 25)] == [
+        "base", "delta", "delta", "delta", "base", "delta"]
+    # keep=2 retains {20, 25}; 25 is a delta on base 20 (already retained)
+    assert mgr.retained_steps() == [20, 25]
+    _assert_state_equal(mgr.restore()[1], state)
+    # the older retained step restores through its pinned base too
+    step, _ = mgr.restore(step=20)
+    assert step == 20
+
+
+def test_torn_delta_falls_back_to_intact_pair(tmp_path):
+    """An injected torn write on a delta save is detected on restore and the
+    ladder lands on the newest *intact* (base, delta) pair — a torn delta is
+    never partially merged."""
+    mgr = CheckpointManager(str(tmp_path), keep=3, delta=True)
+    state = _pool_state(3)
+    mgr.save(0, state)
+    state["params"]["memory"][10] += 1.0
+    state["step"] = np.asarray(5, np.int32)
+    mgr.save(5, state)                  # intact delta
+    want5 = {k: np.copy(v) for k, v in _flatten(state).items()}
+
+    inj = faults_lib.FaultInjector("torn_ckpt@5:0.4", seed=0)
+    inj.now = 10
+    faults_lib.install(inj)
+    try:
+        state["params"]["memory"][CHUNK + 11] += 2.0
+        state["step"] = np.asarray(10, np.int32)
+        mgr.save(10, state)             # torn after the rename
+    finally:
+        faults_lib.install(None)
+    step, restored = mgr.restore()
+    assert step == 5
+    _assert_state_equal(restored, want5)
+    rep = mgr.last_restore_report
+    assert rep["fell_back_from"] == 10 and rep["torn_writes"] == 1
+    # the manager re-anchored on step 5: saving onward still works
+    mgr.save(15, restored)
+    assert mgr.restore()[0] == 15
+
+
+def test_legacy_manifest_migrates_as_base(tmp_path):
+    """A pre-delta-format checkpoint (no ``format``/``kind`` keys) restores
+    unchanged and serves as the base of a new incremental chain."""
+    mgr0 = CheckpointManager(str(tmp_path), keep=3)
+    state = _pool_state(4)
+    mgr0.save(0, state)
+    mpath = os.path.join(tmp_path, "step_0000000000", "manifest.json")
+    with open(mpath) as f:
+        man = json.load(f)
+    del man["format"], man["kind"]
+    with open(mpath, "w") as f:
+        json.dump(man, f)
+
+    mgr = CheckpointManager(str(tmp_path), keep=3, delta=True)
+    step, restored = mgr.restore()
+    assert step == 0
+    _assert_state_equal(restored, state)
+    state["params"]["memory"][3] += 1.0
+    state["step"] = np.asarray(5, np.int32)
+    mgr.save(5, state)
+    man5 = _manifest(tmp_path, 5)
+    assert man5["kind"] == "delta" and man5["base_step"] == 0
+    _assert_state_equal(mgr.restore()[1], state)
+
+
+# ---------------------------------------------------- resident CTR trainer
+
+def _ctr_problem():
+    """The CTR smoke model: hashed_row embedding over a 4096-slot pool,
+    sparse adagrad — the resident counterpart of the tiered harness."""
+    vocab, d, m = 512, 16, 4096
+    scheme = get_scheme("hashed_row")
+    table = EmbeddingTable(scheme.build_config((vocab,), d, m, seed=3))
+    bufs = table.make_buffers(None)
+    rng = np.random.default_rng(1)
+    Y = rng.normal(size=(vocab, d)).astype(np.float32)
+
+    def batch_fn(step):
+        r = np.random.default_rng(step)
+        ids = r.integers(0, vocab, (64,), np.int32)
+        return {"ids": jnp.asarray(ids), "y": jnp.asarray(Y[ids])}
+
+    def loss_fn(params, batch):
+        e = table.embed(params["embedding"], bufs, 0, batch["ids"])
+        return jnp.mean((e - batch["y"]) ** 2), {}
+
+    return loss_fn, batch_fn, lambda: {"embedding": table.init(
+        jax.random.key(0))}
+
+
+def _resident_factory(ckpt_dir, total_steps, ckpt_every=20, **kw):
+    loss_fn, batch_fn, fresh = _ctr_problem()
+
+    def make(inj=None):
+        cfg = TrainerConfig(total_steps=total_steps, ckpt_dir=str(ckpt_dir),
+                            ckpt_every=ckpt_every, keep=3, log_every=0,
+                            ckpt_delta=True, max_consecutive_skips=1,
+                            rollback_on_quarantine=True, **kw)
+        return Trainer(cfg, loss_fn, fresh(), opt_lib.adagrad(0.1),
+                       batch_fn, faults=inj)
+
+    return make
+
+
+def test_resident_delta_resume_parity(tmp_path):
+    """Preempt + resume over incremental checkpoints: bit-identical to the
+    uninterrupted run, with delta manifests actually on disk."""
+    make = _resident_factory(tmp_path / "ckpt", total_steps=24, ckpt_every=4)
+    t1 = make()
+    t1.faults = faults_lib.FaultInjector("preempt@13")
+    out1 = t1.fit(log=lambda s: None)
+    assert out1["preempted"] and out1["step"] == 13
+
+    t2 = make()
+    out2 = t2.fit(log=lambda s: None)
+    assert out2["step"] == 24 and not out2["preempted"]
+    assert out2["resumed_step"] == 13          # preempt saved at its own step
+
+    clean = _resident_factory(tmp_path / "clean", 24, ckpt_every=4)()
+    clean.fit(log=lambda s: None)
+    assert chaos.states_bit_identical(chaos.durable_state(t2),
+                                      chaos.durable_state(clean))
+    kinds = [_manifest(tmp_path / "ckpt", s)["kind"]
+             for s in t2.mgr.retained_steps()]
+    assert "delta" in kinds
+
+
+def test_durability_health_fields(tmp_path):
+    make = _resident_factory(tmp_path, total_steps=12, ckpt_every=4)
+    out = make().fit(log=lambda s: None)
+    assert out["last_durable_step"] == 12
+    assert out["ckpt_bytes_written"] > 0
+    assert out["delta_chain_len"] >= 1         # 12 is a delta on base 4|8
+    assert out["torn_writes_detected"] == 0
+    assert out["resumed_step"] is None         # fresh run, nothing resumed
+    # gauges are state, not faults: a durable healthy run reports clean
+    assert out["skipped_steps"] == 0 and out["rollbacks"] == 0
+
+
+# ------------------------------------------------------------ tiered trainer
+
+def _embed_cfg():
+    return EmbeddingConfig(kind="hashed_elem", vocab_sizes=(1000, 500),
+                           dim=16, budget=4096)
+
+
+def _tiered_factory(ckpt_dir, total_steps, ckpt_every=20, **kw):
+    """Fresh (store, controller, trainer) per call — one process
+    incarnation, like the chaos harness demands.  The 4096-slot pool runs
+    4x over budget: 1024 hot slots, 24 staged blocks, re-tier every 4."""
+    cfg_e = _embed_cfg()
+    table = EmbeddingTable(cfg_e)
+    scheme = get_scheme(cfg_e.kind)
+    bufs = table.make_buffers()
+    params0 = {"embedding": table.init(jax.random.key(1))}
+    offs = np.asarray(cfg_e.table_offsets()[:-1], np.int32)
+
+    def raw_batch(step):
+        r = np.random.default_rng(step)
+        return {"ids": jnp.asarray(np.stack(
+                    [r.integers(0, 1000, 64), r.integers(0, 500, 64)],
+                    1).astype(np.int32)),
+                "y": jnp.asarray(r.normal(size=(64, 2, 16))
+                                 .astype(np.float32))}
+
+    def loss(p, b):
+        batch, tier_b = split_batch(b)
+        e = table.embed_fields(p["embedding"], {**bufs, **tier_b},
+                               batch["ids"])
+        l = jnp.mean((e - batch["y"]) ** 2)
+        return l, {"l": l}
+
+    def make(inj=None):
+        params = jax.tree_util.tree_map(lambda x: jnp.array(x, copy=True),
+                                        params0)
+        st = TieredStore(np.asarray(params0["embedding"]["memory"]), 1024,
+                         block=128, stage_blocks=24)
+
+        def plan_fn(batch):
+            gids = (np.asarray(batch["ids"]) + offs[None, :]).reshape(-1)
+            return scheme.locations(cfg_e, bufs, jnp.asarray(gids))
+
+        ctrl = TierController(st, raw_batch, plan_fn, retier_every=4)
+        params = {"embedding": dict(params["embedding"],
+                                    memory=st.initial_compact())}
+        cfg = TrainerConfig(total_steps=total_steps,
+                            ckpt_dir=str(ckpt_dir) if ckpt_dir else None,
+                            ckpt_every=ckpt_every, keep=3, log_every=0,
+                            ckpt_delta=True, max_consecutive_skips=1,
+                            rollback_on_quarantine=True, **kw)
+        return Trainer(cfg, loss, params, opt_lib.adagrad(0.1), raw_batch,
+                       sparse_grads=False, tier=ctrl, faults=inj)
+
+    return make
+
+
+def test_tiered_durable_resume_parity(tmp_path):
+    """The cold tier is durable: preempt an over-budget tiered run, resume
+    in a fresh incarnation (fresh store, fresh mirror), and the final full
+    pools, moments AND tier meta are bit-identical to the uninterrupted
+    tiered run — the limitation the compact-only checkpoints had."""
+    make = _tiered_factory(tmp_path / "ckpt", total_steps=24, ckpt_every=4)
+    try:
+        t1 = make(faults_lib.FaultInjector("preempt@14"))
+        out1 = t1.fit(log=lambda s: None)
+        assert out1["preempted"] and out1["step"] == 14
+
+        t2 = make()
+        out2 = t2.fit(log=lambda s: None)
+        assert out2["step"] == 24 and not out2["preempted"]
+        assert out2["resumed_step"] == 14      # preempt saved at its own step
+
+        clean = _tiered_factory(tmp_path / "clean", 24, ckpt_every=4)()
+        clean.fit(log=lambda s: None)
+    finally:
+        faults_lib.install(None)
+    assert chaos.states_bit_identical(chaos.durable_state(t2),
+                                      chaos.durable_state(clean))
+    # tier meta rode along: hot set and EMA match the clean trajectory
+    got, want = t2.tier.tier_meta(), clean.tier.tier_meta()
+    np.testing.assert_array_equal(got["hot_ids"], want["hot_ids"])
+    np.testing.assert_array_equal(got["ema"], want["ema"])
+    # the checkpoint carries FULL pools + tier meta (durable format)
+    man = _manifest(tmp_path / "ckpt", t2.mgr.latest_step())
+    pool_leaves = [k for k in man["leaves"]
+                   if k.split("/")[-1] == "memory" and k.startswith("params")]
+    m = int(np.asarray(clean.tier.store.m))
+    assert man["leaves"][pool_leaves[0]]["shape"] == [m]
+    assert any(k.startswith("tier") for k in man["leaves"])
+
+
+def test_rollback_while_tiered_drops_staged_rows(tmp_path):
+    """Satellite regression: a guard-triggered rollback mid-tiered-run must
+    route through the full ``on_restore`` path — staged rows of the
+    abandoned timeline dropped, host mirror re-adopted from the checkpoint,
+    training continuing bit-exactly (no mirror corruption)."""
+    make = _tiered_factory(tmp_path / "ckpt", total_steps=16, ckpt_every=4)
+    try:
+        t = make(faults_lib.FaultInjector("nan_grad@9"))
+        out = t.fit(log=lambda s: None)
+        assert out["step"] == 16 and not out["preempted"]
+        assert out["skipped_steps"] == 1 and out["rollbacks"] == 1
+        assert out["resumed_step"] == 8        # rolled back to the last ckpt
+
+        clean = _tiered_factory(tmp_path / "clean", 16, ckpt_every=4)()
+        clean.fit(log=lambda s: None)
+    finally:
+        faults_lib.install(None)
+    assert chaos.states_bit_identical(chaos.durable_state(t),
+                                      chaos.durable_state(clean))
+
+
+def test_stage_fail_retries_and_stays_invisible(tmp_path):
+    """A transient staging-transfer failure is retried by the controller —
+    counted in the store stats, invisible to training."""
+    make = _tiered_factory(None, total_steps=12)
+    try:
+        t = make(faults_lib.FaultInjector("stage_fail@3"))
+        out = t.fit(log=lambda s: None)
+        assert out["step"] == 12
+        assert t.tier.store.stats["stage_retries"] == 1
+
+        clean = _tiered_factory(None, 12)()
+        clean.fit(log=lambda s: None)
+    finally:
+        faults_lib.install(None)
+    assert chaos.states_bit_identical(chaos.durable_state(t),
+                                      chaos.durable_state(clean))
+    assert out["skipped_steps"] == 0 and out["rollbacks"] == 0
+
+
+# ------------------------------------------------------------- chaos soaks
+
+def _soak(tmp_path, factory_fn, kinds, seed):
+    """200-step soak under a seeded random transient-fault schedule: must
+    complete, lose at most ``ckpt_every`` steps per restart, and finish
+    bit-identical to the never-faulted run."""
+    total, every = 200, 20
+    # faults land after the first durable step so every healing path has a
+    # checkpoint to replay from (the no-checkpoint cases are unit-tested)
+    spec = chaos.make_schedule(total, seed=seed, kinds=kinds,
+                               min_step=every + 1)
+    assert spec.count("@") == 5
+    made = []
+
+    def factory(inj):
+        tr = factory_fn(tmp_path / "ckpt", total, ckpt_every=every)(inj)
+        made.append(tr)
+        return tr
+
+    res = chaos.run_chaos(factory, spec, seed=seed)
+    assert res["step"] == total and not res["preempted"]
+    assert res["chaos_max_lost_steps"] <= every
+    assert res["chaos_restarts"] == spec.count("preempt@")
+
+    clean = factory_fn(tmp_path / "clean", total, ckpt_every=every)()
+    clean.fit(log=lambda s: None)
+    assert chaos.states_bit_identical(chaos.durable_state(made[-1]),
+                                      chaos.durable_state(clean))
+    return res, made[-1], spec
+
+
+def test_chaos_soak_resident(tmp_path):
+    res, tr, spec = _soak(
+        tmp_path, _resident_factory,
+        kinds=("preempt", "torn_ckpt", "rot_row", "nan_grad"), seed=8)
+    # seed 8 draws all four kinds: every resident healing path fires
+    assert {tok.split("@")[0] for tok in spec.split(",")} == {
+        "preempt", "torn_ckpt", "rot_row", "nan_grad"}
+    assert res["last_durable_step"] == 200
+
+
+def test_chaos_soak_tiered(tmp_path):
+    res, tr, spec = _soak(tmp_path, _tiered_factory,
+                          kinds=chaos.SOAK_KINDS, seed=16)
+    # seed 16 draws all five kinds: every healing path fires over the
+    # over-budget pool, staging failure and cold-tier rot included
+    assert {tok.split("@")[0] for tok in spec.split(",")} == set(
+        chaos.SOAK_KINDS)
+    assert res["last_durable_step"] == 200
+    assert res["tier_hot_rows"] == 1024

@@ -309,9 +309,9 @@ def test_try_resume_waits_for_inflight_async_save(tmp_path):
     t.step = 7
     real_write = t.mgr._write
 
-    def slow_write(step, host):
+    def slow_write(step, host, *a):
         time.sleep(0.3)
-        real_write(step, host)
+        real_write(step, host, *a)
 
     t.mgr._write = slow_write
     t.save(blocking=False)               # in flight for >= 0.3 s
