@@ -31,10 +31,13 @@ from benchmarks.common import ART_DIR, save_csv, time_fn
 # (this process must keep its single real device).  Times the sharded LMA
 # lookup on a (2, 4) ('data','model') mesh against the replicated-memory
 # baseline — once per exchange strategy (psum fused/split, ring, all_to_all;
-# repro/dist/exchange.py) — and reports the paper-critical traffic numbers:
-# per-device gathered bytes are O(B*d) and per-device resident memory
-# m/n_model, independent of the total budget.  check_regression.py gates the
-# best-strategy sharded/replicated gap (sharded_gap_failures).
+# repro/dist/exchange.py), with the chunked strategies timed in BOTH engine
+# forms (fused-chunked Pallas engine vs split), interleaved rep-for-rep so
+# the fused-vs-split comparison is drift-free — and reports the
+# paper-critical traffic numbers: per-device gathered bytes are O(B*d) and
+# per-device resident memory m/n_model, independent of the total budget.
+# check_regression.py gates the best-strategy sharded/replicated gap and the
+# fused-chunked win (sharded_gap_failures).
 _SHARDED_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
@@ -55,39 +58,55 @@ store = synthetic_dense_store(N, 64, max_set=32, seed=1)
 mem = init_memory(jax.random.key(0), M, "normal", 0.1)
 gids = jnp.asarray(np.random.default_rng(0).integers(0, N, (B,), np.int32))
 
-def timeit(f, *a):
-    for _ in range(2):
-        jax.block_until_ready(f(*a))
-    ts = []
-    for _ in range(10):
-        t0 = time.perf_counter()
-        jax.block_until_ready(f(*a))
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts) * 1e6)
-
-base = jax.jit(lambda m_, g: lookup(m_, alloc_lma(lma, store, g)))
-t_base = timeit(base, mem, gids)
 # pin the engine state per measurement so an inherited REPRO_FUSED_EMBED=0
 # cannot make both rows time the split path
 import repro.kernels.fused_embed.ops as feops
 
-def time_exchange(name):
+base = jax.jit(lambda m_, g: lookup(m_, alloc_lma(lma, store, g)))
+
+def jit_exchange(name, enabled):
+    feops.ENABLED = enabled
     with use_mesh(mesh):
         sh = jax.jit(lambda m_, s, l, g: sharded_lma_lookup(
             m_, s, l, g, lma, mesh, ("data",), exchange=name))
-        return timeit(sh, mem, store.sets, store.lengths, gids)
+        jax.block_until_ready(sh(mem, store.sets, store.lengths, gids))
+    return sh
 
+# Every variant — replicated baseline included — is timed in ONE
+# round-robin: one rep of each per round, min across rounds.  Every number
+# this script reports feeds a RATIO gate (fused vs split, best strategy vs
+# replicated; check_regression.sharded_gap_failures), so the two sides of
+# each ratio must sample identical machine state — timing the baseline
+# minutes before the strategies lets thermal/scheduler drift manufacture or
+# hide a regression, and min (not median) strips the jitter that survives
+# interleaving.
+args4 = lambda: (mem, store.sets, store.lengths, gids)
+variants = {
+    "replicated": (base, (mem, gids)),
+    "psum_fused": (jit_exchange("psum", True), args4()),
+    "psum_split": (jit_exchange("psum", False), args4()),
+    "ring_split": (jit_exchange("ring", False), args4()),
+    "ring_fused": (jit_exchange("ring", True), args4()),
+    "a2a_split": (jit_exchange("all_to_all", False), args4()),
+    "a2a_fused": (jit_exchange("all_to_all", True), args4()),
+}
 feops.ENABLED = True
-t_fused = time_exchange("psum")
-feops.ENABLED = False
-t_split = time_exchange("psum")
-t_ring = time_exchange("ring")
-t_a2a = time_exchange("all_to_all")
-feops.ENABLED = True
+samples = {name: [] for name in variants}
+for rnd in range(64):
+    for name, (f, a) in variants.items():
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(*a))
+        if rnd >= 4:  # first rounds re-warm every executable
+            samples[name].append(time.perf_counter() - t0)
+us = {name: float(np.min(s) * 1e6) for name, s in samples.items()}
+t_base, t_fused, t_split = us["replicated"], us["psum_fused"], us["psum_split"]
+t_ring, t_ring_fused = us["ring_split"], us["ring_fused"]
+t_a2a, t_a2a_fused = us["a2a_split"], us["a2a_fused"]
 
 n_dp, n_model = 2, 4
-strategies = {"psum": min(t_fused, t_split), "ring": t_ring,
-              "all_to_all": t_a2a}
+strategies = {"psum": min(t_fused, t_split),
+              "ring": min(t_ring, t_ring_fused),
+              "all_to_all": min(t_a2a, t_a2a_fused)}
 best = min(strategies, key=strategies.get)
 print(json.dumps({
     "mesh": "2x4", "B": B, "d": D, "m": M,
@@ -95,7 +114,9 @@ print(json.dumps({
     "sharded_fused_us": round(t_fused, 1),
     "sharded_split_us": round(t_split, 1),
     "sharded_ring_us": round(t_ring, 1),
+    "sharded_ring_fused_us": round(t_ring_fused, 1),
     "sharded_all_to_all_us": round(t_a2a, 1),
+    "sharded_all_to_all_fused_us": round(t_a2a_fused, 1),
     "best_strategy": best,
     "best_strategy_us": round(strategies[best], 1),
     "sharded_over_replicated": round(strategies[best] / t_base, 3),
@@ -522,6 +543,10 @@ def bench_tiered(rows: list, out: list) -> dict:
     doc = {"tiered_us": round(us["train_step_tiered"], 1),
            "resident_us": round(us["train_step_resident"], 1),
            "slowdown": round(slowdown, 4),
+           # the slowdown gate's 2x bound assumes the async stage overlaps
+           # the step — impossible on a single-core host, where
+           # check_regression applies the serialized bound instead
+           "host_cpus": os.cpu_count(),
            "hot_rows": st2.hot_slots, "cold_rows": m - st2.hot_slots,
            "stage_capacity_blocks": int(cap),
            "staged_blocks_per_step": round(staged, 1),
@@ -760,6 +785,14 @@ def run() -> list[str]:
     rows = []
     rng = np.random.default_rng(0)
 
+    # measure the 8-device sharded lookup FIRST: it runs in its own
+    # subprocess (separate jax runtime), so ordering is free for every
+    # other row, but its collective-heavy variants are the rows most
+    # sensitive to a machine the parent bench has already saturated —
+    # sampling them before the in-process benches keeps the
+    # fused/split/replicated ratios comparable to a standalone run
+    sharded = bench_sharded_lookup()
+
     # lma_locations reference at DLRM-batch scale
     p = LMAParams(d=32, m=1 << 21, n_h=4, max_set=32)
     sets = jnp.asarray(rng.integers(0, 2**31, (4096, 32), dtype=np.uint32))
@@ -823,7 +856,6 @@ def run() -> list[str]:
     bench_dedup_sort(rows, out)
     bench_scheme_sweep(rows, out)
 
-    sharded = bench_sharded_lookup()
     if "error" not in sharded:
         shape8 = "4096xd32@m=2^21/8dev"
         rows.append(("sharded_lma_lookup_fused", shape8,
@@ -834,14 +866,20 @@ def run() -> list[str]:
                      sharded["sharded_ring_us"]))
         rows.append(("sharded_lma_lookup_all_to_all", shape8,
                      sharded["sharded_all_to_all_us"]))
+        rows.append(("sharded_lookup_ring_fused", shape8,
+                     sharded["sharded_ring_fused_us"]))
+        rows.append(("sharded_lookup_all_to_all_fused", shape8,
+                     sharded["sharded_all_to_all_fused_us"]))
         rows.append(("replicated_lma_lookup", "4096xd32@m=2^21/1dev",
                      sharded["replicated_us"]))
         out.append(
             f"kernels sharded_lma_lookup 8dev: psum fused "
             f"{sharded['sharded_fused_us']:.0f} us / split "
             f"{sharded['sharded_split_us']:.0f} us vs ring "
-            f"{sharded['sharded_ring_us']:.0f} us vs all_to_all "
-            f"{sharded['sharded_all_to_all_us']:.0f} us — best "
+            f"{sharded['sharded_ring_us']:.0f} us (fused-chunked "
+            f"{sharded['sharded_ring_fused_us']:.0f} us) vs all_to_all "
+            f"{sharded['sharded_all_to_all_us']:.0f} us (fused-chunked "
+            f"{sharded['sharded_all_to_all_fused_us']:.0f} us) — best "
             f"{sharded['best_strategy']} at "
             f"{sharded['sharded_over_replicated']:.2f}x replicated "
             f"({sharded['replicated_us']:.0f} us; "

@@ -13,8 +13,9 @@ SparseGrad construction loses its measured edge over the flat dedup sort or
 a flipped 16x16 lma train cell stops recording ``sparse_grads: true``
 (``dedup_speedup_failures``), when the sharded lookup
 loses the exchange layer's win (``sharded_gap_failures``: best-strategy
-sharded/replicated wall-clock <= 2.5x at 8 devices AND ring or all_to_all
-strictly beating psum), when the resilience layer's non-finite step
+sharded/replicated wall-clock <= 1.25x at 8 devices, ring or all_to_all
+strictly beating psum, AND each chunked strategy's fused-chunked row
+strictly beating its split row), when the resilience layer's non-finite step
 guard costs more than 5% over the unguarded train step
 (``guard_overhead_failures``), or when the tiered train step
 (``repro.tier``: quarter-pool HBM budget, controller-driven staging) falls
@@ -70,12 +71,15 @@ SPARSE_WALL_MIN = 1.15
 DEDUP_SPEEDUP_MIN = 3.0
 DEDUP_GATE_SHAPE = "4096x32@m=2^21"
 # the 8-device sharded lookup must stay within this factor of the
-# single-device replicated lookup, taking the best exchange strategy
-# (psum | ring | all_to_all — repro/dist/exchange.py).  The pre-exchange
-# psum-only path sat at ~3.2x; the strategy layer's acceptance bar is 2.5x
-# (measured: all_to_all ~1.15x), and a chunked strategy must actually beat
-# psum — if it stops doing so the exchange layer has regressed to dead code.
-SHARDED_GAP_MAX = 2.5
+# single-device replicated lookup, taking the best exchange strategy and
+# engine form (psum fused/split | ring | all_to_all, each chunked strategy
+# also in its fused-chunked Pallas form — repro/dist/exchange.py).  The
+# pre-exchange psum-only path sat at ~3.2x, the split-only strategy layer
+# at ~1.27x; the fused-chunked engine's acceptance bar is 1.25x (measured:
+# ring fused-chunked ~1.10x).  A chunked strategy must beat psum AND each
+# fused-chunked row must beat its split twin — regressions to dead code
+# fail loudly.
+SHARDED_GAP_MAX = 1.25
 # the guarded train step (resilience layer's in-jit non-finite check +
 # lax.cond update skip) must stay within 5% of the unguarded step at the
 # paper shape — always-on protection has to be affordable or nobody runs it
@@ -88,6 +92,14 @@ GUARD_GATE_SHAPE = "4096x32@m=2^21"
 # bound catches the real regressions — a remap that stops vectorizing, or
 # staging that degrades to synchronous whole-pool copies
 TIERED_SLOWDOWN_MAX = 2.0
+# the 2x bound prices the controller's host work (writeback, re-tier,
+# device_put staging) as OVERLAPPED with the device step — which needs a
+# spare core to run the stage thread on.  On a single-core host (some CI
+# containers: os.cpu_count() == 1) the overlap serializes into the step
+# and the honest bound for the same code is higher; the bench records the
+# recording host's cpu count in the ledger's tiered block so the gate can
+# apply the serialized bound instead of failing on machine shape
+TIERED_SLOWDOWN_MAX_SERIAL = 3.0
 TIER_GATE_SHAPE = "4096x32@m=2^21"
 # the incremental checkpoint (repro.checkpoint: cumulative-since-base deltas
 # over integrity chunks — bench_kernels.bench_ckpt) must keep earning its
@@ -226,9 +238,15 @@ def sharded_gap_failures(fresh: dict, fresh_doc: dict | None = None,
     ledger's ``sharded_lookup`` block:
 
       * best-strategy sharded wall-clock / replicated wall-clock <= max_gap
-        at 8 host devices (the pre-exchange psum path sat at ~3.2x);
+        at 8 host devices (the pre-exchange psum path sat at ~3.2x, the
+        split-only strategy layer at ~1.27x; the fused-chunked engine's
+        acceptance bar is 1.25x);
       * ring or all_to_all strictly beats the best psum form (fused/split) —
-        the chunked strategies must keep earning their place.
+        the chunked strategies must keep earning their place;
+      * each chunked strategy's fused-chunked row strictly beats its split
+        row (the rows are timed interleaved, so drift cannot fake this) —
+        if the Pallas chunk engine stops winning it has regressed to
+        overhead.
     """
     if fresh_doc is None:
         return []
@@ -239,14 +257,17 @@ def sharded_gap_failures(fresh: dict, fresh_doc: dict | None = None,
     if "error" in sh:
         return [f"sharded_lookup bench failed: {sh['error'][:200]}"]
     need = ("replicated_us", "sharded_fused_us", "sharded_split_us",
-            "sharded_ring_us", "sharded_all_to_all_us")
+            "sharded_ring_us", "sharded_all_to_all_us",
+            "sharded_ring_fused_us", "sharded_all_to_all_fused_us")
     missing = [k for k in need if k not in sh]
     if missing:
         return [f"sharded_lookup block lacks {missing} "
                 f"(per-strategy rows required)"]
     failures = []
     psum = min(sh["sharded_fused_us"], sh["sharded_split_us"])
-    chunked = min(sh["sharded_ring_us"], sh["sharded_all_to_all_us"])
+    chunked = min(sh["sharded_ring_us"], sh["sharded_ring_fused_us"],
+                  sh["sharded_all_to_all_us"],
+                  sh["sharded_all_to_all_fused_us"])
     ratio = min(psum, chunked) / max(sh["replicated_us"], 1e-9)
     if ratio > max_gap:
         failures.append(
@@ -258,6 +279,12 @@ def sharded_gap_failures(fresh: dict, fresh_doc: dict | None = None,
             f"no chunked exchange beats psum: ring {sh['sharded_ring_us']:.1f}"
             f" / all_to_all {sh['sharded_all_to_all_us']:.1f} vs psum "
             f"{psum:.1f} us — the exchange layer has regressed")
+    for name in ("ring", "all_to_all"):
+        f_us, s_us = sh[f"sharded_{name}_fused_us"], sh[f"sharded_{name}_us"]
+        if f_us >= s_us:
+            failures.append(
+                f"fused-chunked {name} no longer beats split: {f_us:.1f} us "
+                f"vs {s_us:.1f} us — the chunk engine has regressed")
     return failures
 
 
@@ -295,9 +322,17 @@ def tiered_slowdown_failures(fresh: dict, fresh_doc: dict | None = None,
     ``TIERED_SLOWDOWN_MAX`` of the fully-resident step at the paper shape.
     A pool that exceeds the HBM budget has no resident option at all, but
     tiering that costs more than this would push users back to sharding
-    even when one device's host memory could hold the pool."""
+    even when one device's host memory could hold the pool.
+
+    The bound assumes the async stage overlaps the device step; when the
+    ledger's tiered block records ``host_cpus == 1`` the recording host had
+    no spare core to overlap on, so the serialized
+    ``TIERED_SLOWDOWN_MAX_SERIAL`` bound applies instead."""
     if max_slowdown is None:
         max_slowdown = TIERED_SLOWDOWN_MAX
+        tiered_doc = (fresh_doc or {}).get("tiered") or {}
+        if tiered_doc.get("host_cpus") == 1:
+            max_slowdown = TIERED_SLOWDOWN_MAX_SERIAL
     key_t = ("train_step_tiered", TIER_GATE_SHAPE)
     key_r = ("train_step_resident", TIER_GATE_SHAPE)
     missing = [k for k, s in (key_t, key_r) if (k, s) not in fresh]

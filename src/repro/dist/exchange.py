@@ -8,8 +8,9 @@ one of three interchangeable :class:`Exchange` strategies:
     The original mask-local-gather + ``psum`` over 'model' (the bit-exact
     oracle).  Every rank computes locations for the FULL local batch, gathers
     the slots in its own slab, and one all-reduce assembles the result.  The
-    only strategy compatible with the fused slab kernel (which computes
-    locations in-VMEM), and the cheapest when location math is free.
+    strategy the WHOLE-SLAB fused kernel serves (locations hashed in-VMEM
+    against the entire per-device slab), and the cheapest when location math
+    is free.
 
 ``ring``
     Batch shards ``ppermute`` around the 'model' ring.  Each rank computes
@@ -29,6 +30,14 @@ one of three interchangeable :class:`Exchange` strategies:
     rank's owned (index, value) slices local instead of replicating the full
     K vectors via psum — the per-step update exchange shrinks by ~n_model.
 
+Ring and all_to_all additionally accept a :class:`FusedChunkEngine` — the
+CHUNKED fused form: one Pallas call per exchange chunk runs the location
+math in-VMEM and gathers against the per-device slab in slab-sized tiles,
+so pools whose whole slab exceeds the fused VMEM gate (the 135M-slot
+production shape) still fuse.  The drivers in ``repro/dist/sharded_memory``
+assemble the engine per scheme and pass it down; the split per-chunk path
+stays as the bit-exact oracle for it.
+
 All three produce *bit-identical* lookups: exactly one rank owns each slot,
 so every cross-rank sum adds exact zeros in some order, and x + 0.0 is
 bitwise x.  ``tests/test_exchange.py`` pins ring/all_to_all against the psum
@@ -44,9 +53,10 @@ drivers in ``repro/dist/sharded_memory.py``.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 import os
-from typing import ClassVar
+from typing import Callable, ClassVar, Optional
 
 import jax
 import jax.numpy as jnp
@@ -95,17 +105,51 @@ def chunk_for_rank(x: jax.Array, rank, n_model: int) -> jax.Array:
     return jax.lax.dynamic_slice_in_dim(x, rank * c, c, axis=0)
 
 
+# ----------------------------------------------------- fused chunked engine
+
+@dataclasses.dataclass(frozen=True)
+class FusedChunkEngine:
+    """The chunked strategies' Pallas engine, assembled by the drivers
+    (``repro/dist/sharded_memory.py``) when the per-rank slab passes the
+    chunk-level VMEM gate (``fused_chunk_eligible``).
+
+    ``chunk_lookup(mem_l, g_chunk) -> (partial [c, d], loc [c, d])``
+        The ring's step 0: ONE Pallas call does the chunk's location math
+        in VMEM plus the slab-tiled masked gather against this rank's slab,
+        emitting the locations for the ring to circulate.  May run uniform
+        collectives first (LMA's set reconstruction).
+    ``locations(g_chunk) -> loc [c, d]``
+        The all_to_all form of the chunk's location math (Pallas in-VMEM
+        hashing; the locations all-gather replaces the ring circulation).
+    ``gather(mem_l, loc) -> partial``
+        A visiting chunk's slab-tiled Pallas gather by pre-computed
+        locations — bit-identical to :func:`local_gather` — used for ring
+        steps 1..P-1 and the all_to_all full-batch partial.
+
+    All three produce bit-identical results to the split callables they
+    replace, so a strategy given an engine still matches the psum oracle —
+    ``tests/test_exchange.py`` pins it.
+    """
+
+    chunk_lookup: Callable
+    locations: Callable
+    gather: Callable
+
+
 # -------------------------------------------------------------- strategies
 
 class Exchange:
     """One cross-device exchange policy; all methods run inside shard_map.
 
-    ``lookup(mem_l, gids, loc_fn, d, n_model)``
+    ``lookup(mem_l, gids, loc_fn, d, n_model, fused=None)``
         Full sharded lookup: flat [n] global ids (identical on every model
         rank) -> [n, d] values, replicated over 'model'.  ``loc_fn`` maps a
         flat id chunk to [k, d] int32 locations; chunked strategies call it
         with per-rank chunks, so any collective inside it must be uniform in
-        chunk length (``set_lookup``/``set_lookup_many`` are).
+        chunk length (``set_lookup``/``set_lookup_many`` are).  ``fused``
+        (a :class:`FusedChunkEngine`, chunked strategies only) swaps the
+        split per-chunk callables for the slab-tiled Pallas engine —
+        bit-identical output, one Pallas call per exchange step.
     ``set_lookup(shard, idx, n_model)`` / ``set_lookup_many(shards, ...)``
         Row-sharded table(s) + per-rank indices -> complete rows for THOSE
         indices (exact for integers).  Unlike ``local_gather_psum`` the
@@ -128,7 +172,8 @@ class Exchange:
         return True
 
     def lookup(self, mem_l, gids, loc_fn, d: int, n_model: int,
-               axis: str = "model") -> jax.Array:
+               axis: str = "model",
+               fused: Optional[FusedChunkEngine] = None) -> jax.Array:
         raise NotImplementedError
 
     def set_lookup(self, shard, idx, n_model: int,
@@ -169,7 +214,10 @@ class PsumExchange(Exchange):
 
     name = "psum"
 
-    def lookup(self, mem_l, gids, loc_fn, d, n_model, axis="model"):
+    def lookup(self, mem_l, gids, loc_fn, d, n_model, axis="model",
+               fused=None):
+        # psum has its own whole-slab fused form (the drivers dispatch it);
+        # the chunk engine is a chunked-strategy construct and is ignored
         return local_gather_psum(mem_l, loc_fn(gids), axis)
 
     def set_lookup_many(self, shards, idx, n_model, axis="model"):
@@ -208,11 +256,47 @@ class RingExchange(Exchange):
         # after the last gather the chunk sits one hop short of home
         return tuple(jax.lax.ppermute(a, axis, perm) for a in accs)
 
-    def lookup(self, mem_l, gids, loc_fn, d, n_model, axis="model"):
+    def lookup(self, mem_l, gids, loc_fn, d, n_model, axis="model",
+               fused=None):
         rank = jax.lax.axis_index(axis)
-        loc = loc_fn(chunk_for_rank(gids, rank, n_model))    # [c, d] ONCE
-        acc = jnp.zeros(loc.shape[:1] + (d,), mem_l.dtype)
-        acc, = self._ring((mem_l,), loc, (acc,), n_model, axis)
+        chunk = chunk_for_rank(gids, rank, n_model)
+        if fused is None:
+            loc = loc_fn(chunk)                              # [c, d] ONCE
+            acc = jnp.zeros(loc.shape[:1] + (d,), mem_l.dtype)
+            acc, = self._ring((mem_l,), loc, (acc,), n_model, axis)
+        else:
+            # fused chunked: step 0 is ONE Pallas call (location math +
+            # own-slab gather, locations emitted), steps 1..P-1 gather each
+            # visiting chunk by its circulated locations — the same
+            # accumulation order as _ring, so the result stays bitwise
+            # identical (partial-first vs zeros+partial only differs on
+            # -0.0, which the other ranks' exact +0.0 contributions erase)
+            acc, loc = fused.chunk_lookup(mem_l, chunk)
+            perm = [(i, (i + 1) % n_model) for i in range(n_model)]
+            # the (acc, loc) pair rides each hop as ONE packed buffer —
+            # int32 locations bitcast into the accumulator's 4-byte lanes —
+            # halving the per-step collective count; ppermute is pure data
+            # movement, so the bitcast round-trip is exact
+            pack = acc.dtype.itemsize == 4 and acc.ndim == loc.ndim
+            d_acc = acc.shape[-1]
+            for _ in range(n_model - 1):
+                if pack:
+                    buf = jnp.concatenate(
+                        [acc, jax.lax.bitcast_convert_type(loc, acc.dtype)],
+                        axis=-1)
+                    buf = jax.lax.ppermute(buf, axis, perm)
+                    acc = buf[..., :d_acc]
+                    loc = jax.lax.bitcast_convert_type(buf[..., d_acc:],
+                                                       loc.dtype)
+                else:
+                    loc = jax.lax.ppermute(loc, axis, perm)
+                    acc = jax.lax.ppermute(acc, axis, perm)
+                acc = acc + fused.gather(mem_l, loc)
+            # no homing hop: rank r finishes chunk r+1, so the all-gather
+            # comes out rotated by one — a local roll (pure permutation,
+            # bitwise exact) re-homes it without the extra collective
+            out = jax.lax.all_gather(acc, axis)
+            return jnp.roll(out, 1, axis=0).reshape(-1, d)
         return jax.lax.all_gather(acc, axis).reshape(-1, d)
 
     def set_lookup_many(self, shards, idx, n_model, axis="model"):
@@ -253,9 +337,23 @@ class AllToAllExchange(Exchange):
     def eligible(self, n_flat, n_model):
         return n_model > 1 and n_flat % n_model == 0
 
-    def lookup(self, mem_l, gids, loc_fn, d, n_model, axis="model"):
+    def lookup(self, mem_l, gids, loc_fn, d, n_model, axis="model",
+               fused=None):
         rank = jax.lax.axis_index(axis)
-        loc = loc_fn(chunk_for_rank(gids, rank, n_model))            # [c, d]
+        chunk = chunk_for_rank(gids, rank, n_model)
+        if fused is not None:
+            # fused chunked: Pallas in-VMEM location math for the chunk,
+            # one slab-tiled gather for the full batch's partial, and ONE
+            # psum assembles it — the reduce-scatter + chunk all-gather
+            # tail collapses into a single all-reduce of the same bytes
+            # (an all-reduce IS reduce-scatter + all-gather) because the
+            # chunked location math already happened before the exchange.
+            # Exactly one rank owns each slot, so the psum only ever adds
+            # exact zeros — bit-identical to the split tail below.
+            loc = fused.locations(chunk)                     # [c, d]
+            full = jax.lax.all_gather(loc, axis).reshape(-1, d)
+            return jax.lax.psum(fused.gather(mem_l, full), axis)
+        loc = loc_fn(chunk)                                  # [c, d]
         c = loc.shape[0]
         full = jax.lax.all_gather(loc, axis).reshape(-1, d)  # [n, d] in order
         part = local_gather(mem_l, full, axis).reshape(n_model, c, d)
@@ -364,12 +462,27 @@ def fused_slab_eligible(m: int, n_model: int, itemsize: int = 4) -> bool:
                                                      itemsize)
 
 
+def fused_chunk_eligible(m: int, n_model: int, itemsize: int = 4) -> bool:
+    """The chunk-level sibling of :func:`fused_slab_eligible`: can the
+    chunked strategies (ring / all_to_all) run their slab-TILED Pallas
+    engine against the per-device [m / n_model] slab?  True whenever SOME
+    power-of-two slab block fits the VMEM budget — strictly weaker than the
+    whole-slab gate, so slabs too big to psum-fuse (the 135M-slot
+    production shape) still chunk-fuse.  Shared by ``resolve_exchange``,
+    the sharded_memory drivers, and the dryrun meta, exactly like the slab
+    gate — modeled and runtime dispatch cannot diverge."""
+    from repro.kernels.fused_embed import ops as fe
+    return (n_model > 1 and m % n_model == 0 and fe.fused_enabled()
+            and fe.fused_chunk_supported(m // n_model, itemsize))
+
+
 def alloc_bytes_per_row(d: int, set_width: int = 0):
     """Location-math bytes for ONE batch row on the split path: the [d]
     int32 location row's HBM round-trip plus the signature-set row exchange
-    for set-based allocators (LMA).  The fused-slab discount is NOT applied
-    here — it belongs to the psum strategy alone (``lookup_cost(fused=)``),
-    since only psum can run the fused kernel."""
+    for set-based allocators (LMA).  The fused discounts are NOT applied
+    here — they belong to ``lookup_cost``: ``fused=`` prices the psum
+    whole-slab kernel and ``fused_chunk=`` the ring/all_to_all chunked
+    engine, each behind its own eligibility gate."""
     return 8 * d + 8 * set_width
 
 
@@ -390,7 +503,8 @@ def tier_fetch_bytes(n_cold_blocks: int, block: int, n_leaves: int = 1,
 
 def lookup_cost(n_model: int, n: int, d: int,
                 alloc_row: float | None = None,
-                fused: bool = False) -> dict[str, float]:
+                fused: bool = False,
+                fused_chunk: bool = False) -> dict[str, float]:
     """Per-device modeled bytes of one sharded lookup of ``n`` flat rows.
 
     psum: every rank runs location math for all n rows, one [n, d]
@@ -401,14 +515,18 @@ def lookup_cost(n_model: int, n: int, d: int,
     all-gather of locations + all_to_all of partials + all-gather of
     outputs (a barrier at every stage: nothing overlaps).
 
-    ``fused`` removes the [d] location-row round-trip from the PSUM entry
-    only: the fused slab kernel hashes in-VMEM, and only the psum strategy
-    can run it — the chunked strategies always pay the split path's
-    location bytes.
+    The fused discounts remove the [d] location-row round-trip (the hash
+    runs in-VMEM) from the strategies whose engine form passes its VMEM
+    gate: ``fused`` (the whole-slab gate, ``fused_slab_eligible``)
+    discounts the PSUM entry, ``fused_chunk`` (the chunk-level gate,
+    ``fused_chunk_eligible``) discounts ring and all_to_all — the chunked
+    engine tiles the slab, so it admits slabs psum's cannot.  The per-row
+    set-reconstruction exchange (LMA's ``alloc_row`` excess over 8d) is a
+    collective and survives every discount.
     """
     P = max(n_model, 1)
     base = 8 * d if alloc_row is None else alloc_row
-    a = base * n
+    a = (max(base - 8 * d, 0) if fused_chunk else base) * n
     a_psum = (max(base - 8 * d, 0) if fused else base) * n
     row = 4 * d * n                    # one [n, d] f32 / int32 pass
     frac = (P - 1) / P
@@ -422,18 +540,23 @@ def lookup_cost(n_model: int, n: int, d: int,
 def resolve_exchange(mesh, B: int | None = None, d: int | None = None,
                      m: int | None = None, K: int | None = None,
                      alloc_row: float | None = None,
-                     fused: bool | None = None) -> Exchange:
+                     fused: bool | None = None,
+                     fused_chunk: bool | None = None) -> Exchange:
     """Pick the exchange strategy for a lookup of ``B`` per-device flat rows.
 
     ``REPRO_DIST_EXCHANGE`` (or ``FORCED``) short-circuits the model.  With
     unknown shapes, or a batch the 'model' axis does not divide, the psum
-    oracle is the safe answer.  ``fused`` (derived from ``m`` via the
-    shared ``fused_slab_eligible`` gate when not given) feeds the psum-only
-    discount: a slab that fits the fused engine's VMEM budget hashes
-    in-VMEM, so the psum strategy's location bytes are ~0 while the chunked
-    strategies still pay the split path's; over-budget slabs pay everywhere
-    and the chunked strategies take over.  ``K`` (touched slots) is
-    accepted for signature parity with the sparse gate; lookups ignore it.
+    oracle is the safe answer.  The fused flags feed the per-strategy
+    location discounts of :func:`lookup_cost`, each clamped through ITS OWN
+    eligibility gate — slab-level (``fused_slab_eligible``) for the psum
+    discount, chunk-level (``fused_chunk_eligible``) for the ring /
+    all_to_all discount — and derived from ``m`` through the same gates
+    when not given.  A caller-asserted flag cannot outrun its gate: an
+    explicit over-budget pool config pays full location bytes like everyone
+    else (previously the psum flag could leak through and mis-pick psum;
+    the chunk flag routes through the identical clamp so modeled and
+    runtime dispatch cannot diverge).  ``K`` (touched slots) is accepted
+    for signature parity with the sparse gate; lookups ignore it.
     """
     n_model = model_size(mesh) if mesh is not None else 1
     if n_model <= 1:
@@ -445,12 +568,13 @@ def resolve_exchange(mesh, B: int | None = None, d: int | None = None,
     if fused is None:
         fused = m is not None and fused_slab_eligible(m, n_model)
     elif fused and m is not None:
-        # a caller-asserted fused flag cannot outrun the VMEM gate: an
-        # explicit over-budget pool config (m too big for the per-device
-        # slab) pays full location bytes like everyone else — previously
-        # the discount leaked through and could mis-pick psum
         fused = fused_slab_eligible(m, n_model)
-    costs = lookup_cost(n_model, B, d, alloc_row, fused=fused)
+    if fused_chunk is None:
+        fused_chunk = m is not None and fused_chunk_eligible(m, n_model)
+    elif fused_chunk and m is not None:
+        fused_chunk = fused_chunk_eligible(m, n_model)
+    costs = lookup_cost(n_model, B, d, alloc_row, fused=fused,
+                        fused_chunk=fused_chunk)
     live = {n: c for n, c in costs.items() if n not in DEMOTED}
     name = min(live, key=live.get)
     ex = _STRATEGIES[name]

@@ -8,7 +8,7 @@ cross-device traffic is delegated to a pluggable :class:`~repro.dist.
 exchange.Exchange` strategy (``repro/dist/exchange.py``):
 
 ``psum``         mask-local-gather + one global psum — the bit-exact oracle,
-                 and the only strategy the fused Pallas slab kernel
+                 and the strategy the WHOLE-SLAB fused Pallas kernel
                  (``repro/kernels/fused_embed``) composes with: locations are
                  computed and mask-gathered per batch tile in VMEM, then one
                  psum assembles complete embeddings.
@@ -20,6 +20,16 @@ exchange.Exchange` strategy (``repro/dist/exchange.py``):
                  reduce-scatter via all_to_all, finished chunks all-gather;
                  the sparse-update psum disappears entirely (owner-partial
                  update values feed the masked local scatter directly).
+
+Ring and all_to_all get their own CHUNKED fused form via ``_chunk_engine``:
+a :class:`~repro.dist.exchange.FusedChunkEngine` whose per-chunk lookup is
+one Pallas call fusing the scheme's location math with a slab-masked
+gather, tiled over the [m / n_model] slab so the working set fits the
+``REPRO_FUSED_MAX_MEM_MB`` gate even when the whole slab would not (the
+135M-slot shape).  Under the whole-slab gate the engine's gather falls back
+to the XLA masked take — already one in-VMEM gather — so the Pallas tiling
+only pays its per-call overhead where it is the only in-budget form.  The
+split per-chunk path is kept verbatim as the bit-exact oracle.
 
 All three are bit-identical on the forward pass (exactly one rank owns each
 slot, so cross-rank sums only ever add exact zeros) and 1e-6 on gradients —
@@ -76,6 +86,55 @@ def _fused_eligible(memory, n_model: int) -> bool:
                                    memory.dtype.itemsize)
 
 
+def _fused_chunk_eligible(memory, n_model: int) -> bool:
+    """Driver-side form of the chunk-level gate: can ring / all_to_all run
+    their slab-tiled Pallas engine on this pool's per-device slab?"""
+    return exl.fused_chunk_eligible(int(memory.shape[0]), n_model,
+                                    memory.dtype.itemsize)
+
+
+def _chunk_engine(spec, inputs_fn=None, loc_fn=None):
+    """Assemble the chunked strategies' :class:`~repro.dist.exchange.
+    FusedChunkEngine`.
+
+    ``spec`` is the scheme's FusedSpec — its location math runs in-VMEM
+    (``fused_chunk_lookup`` / ``fused_locations``), with ``inputs_fn(g) ->
+    (sets, support)`` supplying the (possibly collective, uniform-length)
+    location inputs.  ``spec=None`` is the generic form: ``loc_fn``
+    computes locations on the split path and only the slab-tiled Pallas
+    gather fuses — what registry schemes without a FusedSpec get."""
+    from repro.kernels.fused_embed import ops as fe
+
+    def gather(mem_l, loc):
+        # The slab-tiled Pallas gather is what makes over-gate slabs
+        # fusable at all — each (batch, slab-block) tile stays inside the
+        # VMEM budget.  Under the whole-slab gate XLA's masked take is
+        # already a single in-VMEM gather with no per-call grid overhead,
+        # so dispatch on the same gate the psum strategy uses; both forms
+        # are bitwise identical (one owner per location, zeros elsewhere).
+        if fe.fused_supported(int(mem_l.shape[0]), mem_l.dtype.itemsize):
+            return exl.local_gather(mem_l, loc)
+        return fe.fused_chunk_gather(mem_l, loc, base=_slab_base(mem_l))
+
+    if spec is None:
+        def chunk_lookup(mem_l, g):
+            loc = loc_fn(g)
+            return gather(mem_l, loc), loc
+
+        return exl.FusedChunkEngine(chunk_lookup, loc_fn, gather)
+
+    def chunk_lookup(mem_l, g):
+        sets, support = inputs_fn(g) if inputs_fn is not None else (None, None)
+        return fe.fused_chunk_lookup(spec, mem_l, g, sets, support,
+                                     base=_slab_base(mem_l))
+
+    def locations(g):
+        sets, support = inputs_fn(g) if inputs_fn is not None else (None, None)
+        return fe.fused_locations(spec, g, sets, support)
+
+    return exl.FusedChunkEngine(chunk_lookup, locations, gather)
+
+
 def _slab_base(mem_l, axis_name="model") -> jax.Array:
     """Global offset of this rank's slab (for the in-kernel ownership mask)."""
     rank = jax.lax.axis_index(axis_name)
@@ -99,11 +158,14 @@ def _bspec(batch_axes) -> tuple | None:
 
 def _resolve(exchange, mesh, n_flat: int, d: int, m: int | None,
              alloc_row: float | None = None,
-             fused: bool = False) -> exl.Exchange:
+             fused: bool = False,
+             fused_chunk: bool = False) -> exl.Exchange:
     """Driver-side strategy resolution: explicit arg > env > cost model,
     with an eligibility fallback to psum (odd chunking, tiny batches).
-    ``fused`` prices the psum-only fused-slab discount.  When a fault
-    injector with an armed exchange fault is installed
+    ``fused`` prices the psum-only fused-slab discount; ``fused_chunk``
+    prices the chunked strategies' slab-tiled engine discount (each clamped
+    through its own gate in ``resolve_exchange``).  When a fault injector
+    with an armed exchange fault is installed
     (``repro.resilience.faults``), the resolved chunked strategy is wrapped
     so the injected chunk drop/corruption reaches the assembled lookup —
     the harness behind the demotion ladder's validation tests."""
@@ -111,7 +173,8 @@ def _resolve(exchange, mesh, n_flat: int, d: int, m: int | None,
         exchange = exl.get_exchange(exchange)
     if exchange is None:
         exchange = exl.resolve_exchange(mesh, B=n_flat, d=d, m=m,
-                                        alloc_row=alloc_row, fused=fused)
+                                        alloc_row=alloc_row, fused=fused,
+                                        fused_chunk=fused_chunk)
     n_model = _model_size(mesh)
     if not exchange.eligible(n_flat, n_model):
         exchange = exl.PSUM
@@ -137,7 +200,10 @@ def sharded_location_lookup(memory: jax.Array, gids: jax.Array, loc_fn,
     shard_map.  This is the path registry schemes get for free
     (``repro.embed.backends.ShardedBackend``) when they don't provide a
     bespoke one.  Bit-identical to ``lookup(memory, loc_fn(gids))`` under
-    every strategy.
+    every strategy.  Under a chunked strategy with a chunk-eligible slab
+    the gathers run through the slab-tiled Pallas engine (generic form: the
+    location math stays on the split path, so no pricing discount is
+    claimed — only schemes whose hashes fuse get one).
     """
     m = int(memory.shape[0])
     n_model = _model_size(mesh)
@@ -146,11 +212,15 @@ def sharded_location_lookup(memory: jax.Array, gids: jax.Array, loc_fn,
     batch, n_flat = _local_flat(mesh, dp_axes, gids)
     ex = _resolve(exchange, mesh, n_flat, d, m,
                   alloc_row=exl.alloc_bytes_per_row(d))
+    chunk_ok = _fused_chunk_eligible(memory, n_model)
     bspec = _bspec(batch)
     gspec = P(bspec, *([None] * (gids.ndim - 1)))
 
     def body(mem_l, gids_l):
-        out = ex.lookup(mem_l, gids_l.reshape(-1), loc_fn, d, n_model)
+        fce = (_chunk_engine(None, loc_fn=loc_fn)
+               if chunk_ok and ex.name in ("ring", "all_to_all") else None)
+        out = ex.lookup(mem_l, gids_l.reshape(-1), loc_fn, d, n_model,
+                        fused=fce)
         return out.reshape(*gids_l.shape, d)
 
     fn = shard_map(body, mesh=mesh, in_specs=(P("model"), gspec),
@@ -215,7 +285,9 @@ def sharded_hashed_lookup(memory: jax.Array, gids: jax.Array, d: int, m: int,
             *gids.shape, d)
     batch, n_flat = _local_flat(mesh, dp_axes, gids)
     ex = _resolve(exchange, mesh, n_flat, d, m,
-                  fused=_fused_eligible(memory, n_model))
+                  fused=_fused_eligible(memory, n_model),
+                  fused_chunk=_fused_chunk_eligible(memory, n_model))
+    chunk_ok = _fused_chunk_eligible(memory, n_model)
     bspec = _bspec(batch)
     gspec = P(bspec, *([None] * (gids.ndim - 1)))
 
@@ -227,8 +299,12 @@ def sharded_hashed_lookup(memory: jax.Array, gids: jax.Array, d: int, m: int,
                                    flat, base=_slab_base(mem_l))
             out = jax.lax.psum(part, "model")
         else:
+            fce = None
+            if chunk_ok and ex.name in ("ring", "all_to_all"):
+                from repro.kernels.fused_embed import ops as fe
+                fce = _chunk_engine(fe.hashed_spec(kind, d, m, seed))
             out = ex.lookup(mem_l, flat, lambda g: alloc(g, d, m, seed), d,
-                            n_model)
+                            n_model, fused=fce)
         return out.reshape(*gids_l.shape, d)
 
     fn = shard_map(body, mesh=mesh, in_specs=(P("model"), gspec),
@@ -521,7 +597,9 @@ def sharded_lma_lookup_csr(memory: jax.Array, flat_sh, offs_sh,
     batch, n_flat = _local_flat(mesh, dp_axes, gids)
     ex = _resolve(exchange, mesh, n_flat, params.d, params.m,
                   alloc_row=exl.alloc_bytes_per_row(
-                      params.d, set_width=params.max_set))
+                      params.d, set_width=params.max_set),
+                  fused_chunk=_fused_chunk_eligible(memory, n_model))
+    chunk_ok = _fused_chunk_eligible(memory, n_model)
     bspec = _bspec(batch)
     gspec = P(bspec, *([None] * (gids.ndim - 1)))
     PAD = jnp.uint32(DenseSignatureStore.PAD)
@@ -529,20 +607,34 @@ def sharded_lma_lookup_csr(memory: jax.Array, flat_sh, offs_sh,
     def body(mem_l, flat_l, offs_l, len_l, gids_l):
         flat_v = gids_l.reshape(-1)
 
-        def loc_fn(g):
+        def _inputs(set_ex, g):
             def local_fn(q):
                 elems, ln = _csr_local_sets(flat_l[0], offs_l[0], q,
                                             params.max_set)
                 sup = exl.local_gather(len_l, q)
                 return elems, ln, sup
 
-            elems, ln, sup = ex.partial_sum_lookup(local_fn, g, n_model)
+            elems, ln, sup = set_ex.partial_sum_lookup(local_fn, g, n_model)
             pos = jnp.arange(params.max_set, dtype=jnp.int32)[None, :]
             mask = pos < jnp.minimum(ln, params.max_set)[:, None]
-            rows = jnp.where(mask, elems, PAD)
+            return jnp.where(mask, elems, PAD), sup
+
+        def loc_fn(g):
+            rows, sup = _inputs(ex, g)
             return alc.alloc_lma_from_rows(params, rows, sup, g)
 
-        out = ex.lookup(mem_l, flat_v, loc_fn, params.d, n_model)
+        def inputs_fn(g):
+            # fused engine: owner-partial all_to_all set reconstruction
+            # regardless of the memory-exchange strategy (fewest collective
+            # hops; integer sums exact under every strategy, so bit-identity
+            # against the split oracle is unaffected)
+            return _inputs(exl.ALL_TO_ALL, g)
+
+        fce = None
+        if chunk_ok and ex.name in ("ring", "all_to_all"):
+            from repro.kernels.fused_embed import ops as fe
+            fce = _chunk_engine(fe.lma_spec(params), inputs_fn)
+        out = ex.lookup(mem_l, flat_v, loc_fn, params.d, n_model, fused=fce)
         return out.reshape(*gids_l.shape, params.d)
 
     fn = shard_map(
@@ -578,7 +670,9 @@ def sharded_lma_lookup(memory: jax.Array, store_sets: jax.Array,
     ex = _resolve(exchange, mesh, n_flat, params.d, params.m,
                   alloc_row=exl.alloc_bytes_per_row(
                       params.d, set_width=params.max_set),
-                  fused=_fused_eligible(memory, n_model))
+                  fused=_fused_eligible(memory, n_model),
+                  fused_chunk=_fused_chunk_eligible(memory, n_model))
+    chunk_ok = _fused_chunk_eligible(memory, n_model)
     bspec = _bspec(batch)
     gspec = P(bspec, *([None] * (gids.ndim - 1)))
 
@@ -601,7 +695,29 @@ def sharded_lma_lookup(memory: jax.Array, store_sets: jax.Array,
                                                    n_model)
                 return alc.alloc_lma_from_rows(params, rows, support, g)
 
-            out = ex.lookup(mem_l, flat, loc_fn, params.d, n_model)
+            def inputs_fn(g):
+                # the fused engine always reconstructs sets through the
+                # owner-partial all_to_all form — one shared index
+                # all-gather + one all_to_all — whatever strategy carries
+                # the memory exchange, with lengths riding as one extra
+                # column of the set table so the pair costs a single
+                # gather + collective; integer sums are exact under every
+                # strategy, so bit-identity against the split oracle is
+                # unaffected
+                packed = jnp.concatenate(
+                    [sets_l[:, : params.max_set],
+                     len_l[:, None].astype(sets_l.dtype)], axis=1)
+                rows, = exl.ALL_TO_ALL.set_lookup_many((packed,), g,
+                                                       n_model)
+                return (rows[:, : params.max_set],
+                        rows[:, params.max_set].astype(len_l.dtype))
+
+            fce = None
+            if chunk_ok and ex.name in ("ring", "all_to_all"):
+                from repro.kernels.fused_embed import ops as fe
+                fce = _chunk_engine(fe.lma_spec(params), inputs_fn)
+            out = ex.lookup(mem_l, flat, loc_fn, params.d, n_model,
+                            fused=fce)
         return out.reshape(*gids_l.shape, params.d)
 
     fn = shard_map(

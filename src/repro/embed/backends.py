@@ -98,6 +98,14 @@ class FusedBackend:
 
 
 class ShardedBackend:
+    """Model-parallel pools: [m / n_model] slab per device, lookups routed
+    through a :mod:`repro.dist.exchange` strategy.  Each scheme's
+    ``sharded_lookup`` driver picks the strategy (explicit ``exchange=`` >
+    env > cost model) and, for ring / all_to_all on eligible slabs, runs the
+    fused-chunked Pallas engine — one call per exchange chunk fusing the
+    scheme's location math with a slab-tiled masked gather — with the split
+    per-chunk path as the bit-exact oracle."""
+
     name = "sharded"
 
     def __init__(self, mesh, dp_axes, exchange=None):

@@ -1,9 +1,25 @@
 """Fused LMA embed engine: one Pallas pass from signature sets to (pooled)
-embeddings, with a scatter-add custom VJP.  See kernel.py for the design."""
-from repro.kernels.fused_embed.ops import (FusedSpec, fused_embed_bag,
-                                           fused_enabled, fused_lookup,
+embeddings, with a scatter-add custom VJP.  See kernel.py for the design.
+
+Two entry-point families share the in-kernel hash core:
+
+* whole-slab (``fused_lookup`` / ``fused_embed_bag``) — locations hashed and
+  gathered against the full memory in one call; gated by ``fused_supported``.
+* chunked (``fused_chunk_lookup`` / ``fused_chunk_gather``) — one call per
+  exchange chunk against the per-device [m / n_model] slab, tiled over the
+  slab so each block fits the VMEM budget; gated by the strictly weaker
+  ``fused_chunk_supported``.  These power the ring / all_to_all
+  :class:`~repro.dist.exchange.FusedChunkEngine`.
+"""
+from repro.kernels.fused_embed.ops import (FusedSpec, fused_chunk_gather,
+                                           fused_chunk_lookup,
+                                           fused_chunk_supported,
+                                           fused_embed_bag, fused_enabled,
+                                           fused_locations, fused_lookup,
                                            fused_supported, hashed_spec,
                                            lma_spec)
 
-__all__ = ["FusedSpec", "fused_embed_bag", "fused_enabled", "fused_lookup",
-           "fused_supported", "hashed_spec", "lma_spec"]
+__all__ = ["FusedSpec", "fused_chunk_gather", "fused_chunk_lookup",
+           "fused_chunk_supported", "fused_embed_bag", "fused_enabled",
+           "fused_locations", "fused_lookup", "fused_supported",
+           "hashed_spec", "lma_spec"]

@@ -205,6 +205,76 @@ def _scatter_kernel(*refs, scheme, d, n_h, m, min_support, independent,
         jnp.clip(rel, 0, n_local - 1).reshape(-1)].add(upd.reshape(-1))
 
 
+def _chunk_fwd_kernel(*refs, scheme, d, n_h, m, min_support, independent,
+                      stripe):
+    """One engine call per exchange chunk: location math + slab-tiled gather.
+
+    Grid is (batch tiles, slab blocks) with the slab axis fastest, so the
+    [bb, d] output and location blocks are revisited across slab blocks:
+    locations are hashed ONCE (at slab block 0, emitted for the ring to
+    circulate), and each slab block accumulates its masked partial into the
+    revisited output.  Out-of-slab locations contribute exact zeros, so the
+    sum over blocks equals the whole-slab mask-local-gather bit for bit —
+    every location lands in exactly one block.  This is what lets a slab
+    over the VMEM gate still fuse: only [m_local / n_blocks] lives in VMEM
+    per step."""
+    n_loc = N_LOC_INPUTS[scheme]
+    base_ref, mem_ref, out_ref, loc_ref = refs[n_loc:]
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _hash():
+        loc, _ = _tile_locations(scheme, refs[:n_loc], d=d, n_h=n_h, m=m,
+                                 min_support=min_support,
+                                 independent=independent, stripe=stripe)
+        loc_ref[...] = loc
+
+    part = _slab_gather(mem_ref[...], loc_ref[...],
+                        base_ref[0] + j * mem_ref.shape[0])
+
+    @pl.when(j == 0)
+    def _first():
+        out_ref[...] = part
+
+    @pl.when(j > 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + part
+
+
+def _gather_loc_kernel(loc_ref, base_ref, mem_ref, out_ref):
+    """Slab-tiled gather by PRE-COMPUTED locations (a visiting ring chunk /
+    the all_to_all full-batch partial): the j-th slab block's masked gather
+    accumulated into the revisited [bb, d] output block."""
+    j = pl.program_id(1)
+    part = _slab_gather(mem_ref[...], loc_ref[...],
+                        base_ref[0] + j * mem_ref.shape[0])
+
+    @pl.when(j == 0)
+    def _first():
+        out_ref[...] = part
+
+    @pl.when(j > 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + part
+
+
+def _scatter_loc_kernel(loc_ref, g_ref, base_ref, dmem_ref):
+    """dM[loc] += g by pre-computed locations, slab-tiled: grid is (slab
+    blocks, batch tiles) with the batch axis fastest, so each [sb] slab
+    block of the gradient is revisited across batch tiles (init at tile 0)
+    and only one block lives in VMEM at a time."""
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        dmem_ref[...] = jnp.zeros_like(dmem_ref)
+
+    n_local = dmem_ref.shape[0]
+    rel = loc_ref[...] - (base_ref[0] + pl.program_id(0) * n_local)
+    inb = (rel >= 0) & (rel < n_local)
+    upd = jnp.where(inb, g_ref[...].astype(dmem_ref.dtype), 0)
+    dmem_ref[...] = dmem_ref[...].at[
+        jnp.clip(rel, 0, n_local - 1).reshape(-1)].add(upd.reshape(-1))
+
+
 def _locations_kernel(*refs, scheme, d, n_h, m, min_support, independent,
                       stripe):
     """Emit the [bb, d] int32 location block — the same in-tile hash math the
@@ -337,6 +407,95 @@ def fused_scatter_add_pallas(scheme, g, loc_inputs, base, m_local, dtype,
         out_shape=jax.ShapeDtypeStruct((m_local,), dtype),
         interpret=interpret,
     )(*args)
+
+
+def _chunk_loc_specs(scheme, loc_inputs, bb):
+    """2-D-grid BlockSpecs for the flat location inputs (batch axis tiled by
+    ``i``, slab axis ``j`` ignored — inputs are revisited per slab block)."""
+    if scheme == "lma":
+        sets = loc_inputs[0]
+        data = [pl.BlockSpec((bb, sets.shape[1]), lambda i, j: (i, 0)),
+                pl.BlockSpec((bb,), lambda i, j: (i,)),
+                pl.BlockSpec((bb,), lambda i, j: (i,))]
+        seeds = [pl.BlockSpec((a.shape[0],), lambda i, j: (0,))
+                 for a in loc_inputs[3:]]
+        return data + seeds
+    gids, seeds = loc_inputs
+    return [pl.BlockSpec((bb,), lambda i, j: (i,)),
+            pl.BlockSpec((seeds.shape[0],), lambda i, j: (0,))]
+
+
+def _slab_blocks(m_local: int, block_m) -> int:
+    sb = m_local if block_m is None else block_m
+    assert m_local % sb == 0, (m_local, sb)
+    return sb
+
+
+def fused_chunk_fwd_pallas(scheme, memory, loc_inputs, base, *, d, n_h=4, m,
+                           min_support=2, independent=True, stripe=0,
+                           block_b=256, block_m=None, interpret=False):
+    """-> ([B, d] slab-masked partial, [B, d] int32 locations), ONE call.
+
+    The chunked exchange engine's per-chunk step: in-VMEM location math plus
+    the masked gather against this rank's [m_local] slab, tiled into
+    ``m_local / block_m`` VMEM blocks so slabs over the whole-slab VMEM gate
+    still fuse when one block fits (``ops.fused_chunk_supported``)."""
+    B = loc_inputs[1].shape[0] if scheme == "lma" else loc_inputs[0].shape[0]
+    bb = min(block_b, B)
+    assert B % bb == 0, (B, bb)
+    m_local = memory.shape[0]
+    sb = _slab_blocks(m_local, block_m)
+    kern = functools.partial(_chunk_fwd_kernel,
+                             **_static(scheme, d, n_h, m, min_support,
+                                       independent, stripe))
+    in_specs = _chunk_loc_specs(scheme, loc_inputs, bb) + [
+        pl.BlockSpec((1,), lambda i, j: (0,)),
+        pl.BlockSpec((sb,), lambda i, j: (j,))]
+    return pl.pallas_call(
+        kern, grid=(B // bb, m_local // sb), in_specs=in_specs,
+        out_specs=(pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+                   pl.BlockSpec((bb, d), lambda i, j: (i, 0))),
+        out_shape=(jax.ShapeDtypeStruct((B, d), memory.dtype),
+                   jax.ShapeDtypeStruct((B, d), jnp.int32)),
+        interpret=interpret,
+    )(*loc_inputs, base, memory)
+
+
+def fused_chunk_gather_pallas(memory, loc, base, *, block_b=256, block_m=None,
+                              interpret=False):
+    """[B, d] locations -> [B, d] slab-masked partial, slab-tiled."""
+    B, d = loc.shape
+    bb = min(block_b, B)
+    assert B % bb == 0, (B, bb)
+    m_local = memory.shape[0]
+    sb = _slab_blocks(m_local, block_m)
+    return pl.pallas_call(
+        _gather_loc_kernel, grid=(B // bb, m_local // sb),
+        in_specs=[pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+                  pl.BlockSpec((1,), lambda i, j: (0,)),
+                  pl.BlockSpec((sb,), lambda i, j: (j,))],
+        out_specs=pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, d), memory.dtype),
+        interpret=interpret,
+    )(loc, base, memory)
+
+
+def fused_chunk_scatter_pallas(loc, g, base, m_local, dtype, *, block_b=256,
+                               block_m=None, interpret=False):
+    """Cotangent g [B, d] + locations -> dM [m_local], slab-tiled."""
+    B, d = loc.shape
+    bb = min(block_b, B)
+    assert B % bb == 0, (B, bb)
+    sb = _slab_blocks(m_local, block_m)
+    return pl.pallas_call(
+        _scatter_loc_kernel, grid=(m_local // sb, B // bb),
+        in_specs=[pl.BlockSpec((bb, d), lambda j, i: (i, 0)),
+                  pl.BlockSpec((bb, d), lambda j, i: (i, 0)),
+                  pl.BlockSpec((1,), lambda j, i: (0,))],
+        out_specs=pl.BlockSpec((sb,), lambda j, i: (j,)),
+        out_shape=jax.ShapeDtypeStruct((m_local,), dtype),
+        interpret=interpret,
+    )(loc, g, base)
 
 
 def fused_weight_grad_pallas(scheme, memory, g, loc_inputs, base, L, *,

@@ -43,7 +43,10 @@ import jax.numpy as jnp
 from repro.core.allocation import LMAParams
 from repro.core.hashing import seed_stream
 from repro.core.signatures import DenseSignatureStore
-from repro.kernels.fused_embed.kernel import (fused_locations_pallas,
+from repro.kernels.fused_embed.kernel import (fused_chunk_fwd_pallas,
+                                              fused_chunk_gather_pallas,
+                                              fused_chunk_scatter_pallas,
+                                              fused_locations_pallas,
                                               fused_lookup_fwd_pallas,
                                               fused_scatter_add_pallas,
                                               fused_weight_grad_pallas)
@@ -106,6 +109,35 @@ def fused_supported(m_local: int, itemsize: int = 4) -> bool:
     """Does an [m_local] slab fit the fused engine's VMEM budget, with the
     batch-tile working set (sets/locations/output blocks) reserved on top?"""
     return m_local * itemsize + _TILE_RESERVE <= _MAX_MEM_MB * 2**20
+
+
+def _chunk_blocks(m_local: int, itemsize: int = 4) -> int | None:
+    """Smallest power-of-two slab-block count whose [m_local / n] block fits
+    the VMEM budget (None when no power-of-two factor of m_local does).
+    n == 1 means the whole slab fits and the chunked engine degenerates to
+    one block — the same working set as the whole-slab kernel."""
+    budget = _MAX_MEM_MB * 2**20 - _TILE_RESERVE
+    n = 1
+    while m_local % n == 0:
+        if (m_local // n) * itemsize <= budget:
+            return n
+        n *= 2
+    return None
+
+
+def fused_chunk_supported(m_local: int, itemsize: int = 4) -> bool:
+    """Can the chunked engine run against an [m_local] slab — i.e. does SOME
+    power-of-two slab block fit the VMEM budget?  Strictly weaker than
+    ``fused_supported``: a slab over the whole-slab gate still chunk-fuses
+    as long as one block fits (the 135M-slot production shape)."""
+    return _chunk_blocks(m_local, itemsize) is not None
+
+
+def _chunk_block_m(m_local: int, itemsize: int) -> int:
+    """The slab-block length the chunked kernels tile with (whole slab when
+    over-gate AND unchunkable — interpret mode still runs it; a real TPU
+    caller must gate on ``fused_chunk_supported`` first)."""
+    return m_local // (_chunk_blocks(m_local, itemsize) or 1)
 
 
 def _default_interpret(interpret):
@@ -240,6 +272,70 @@ def _bag_block(B: int, L: int) -> int:
     return min(max(B, 1), _pow2_floor(max(_BLOCK_ELEMS // max(L, 1), 1)))
 
 
+# --------------------------------------------------- chunked-exchange VJPs
+#
+# The chunked engine (ring / all_to_all strategies): per-chunk location math
+# + slab-TILED masked gather, so the working set is one slab block, not the
+# whole slab.  The combined step (``_chunk_lookup``) emits its locations —
+# the ring circulates them, and the backward scatter consumes them directly
+# instead of recomputing (they were a free primal output).  Visiting chunks
+# ride the location-only gather (``_chunk_gather``), whose VJP is the same
+# slab-tiled scatter.
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _chunk_lookup(spec, interpret, memory, sets, gids, support, base):
+    bb = min(_BLOCK_B, max(gids.shape[0], 1))
+    return fused_chunk_fwd_pallas(
+        spec.scheme, memory, _loc_inputs(spec, sets, gids, support), base,
+        block_m=_chunk_block_m(memory.shape[0], memory.dtype.itemsize),
+        **_kern_kwargs(spec, interpret, bb))
+
+
+def _chunk_lookup_fwd(spec, interpret, memory, sets, gids, support, base):
+    vals, loc = _chunk_lookup(spec, interpret, memory, sets, gids, support,
+                              base)
+    return (vals, loc), (sets, gids, support, loc, base, memory)
+
+
+def _chunk_lookup_bwd(spec, interpret, res, cts):
+    g = cts[0]                      # the int32 location output has no grad
+    sets, gids, support, loc, base, memory = res
+    dmem = fused_chunk_scatter_pallas(
+        loc, g.astype(memory.dtype), base, memory.shape[0], memory.dtype,
+        block_b=min(_BLOCK_B, max(loc.shape[0], 1)),
+        block_m=_chunk_block_m(memory.shape[0], memory.dtype.itemsize),
+        interpret=interpret)
+    return dmem, _f0(sets), _f0(gids), _f0(support), _f0(base)
+
+
+_chunk_lookup.defvjp(_chunk_lookup_fwd, _chunk_lookup_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _chunk_gather(interpret, memory, loc, base):
+    return fused_chunk_gather_pallas(
+        memory, loc, base, block_b=min(_BLOCK_B, max(loc.shape[0], 1)),
+        block_m=_chunk_block_m(memory.shape[0], memory.dtype.itemsize),
+        interpret=interpret)
+
+
+def _chunk_gather_fwd(interpret, memory, loc, base):
+    return _chunk_gather(interpret, memory, loc, base), (loc, base, memory)
+
+
+def _chunk_gather_bwd(interpret, res, g):
+    loc, base, memory = res
+    dmem = fused_chunk_scatter_pallas(
+        loc, g.astype(memory.dtype), base, memory.shape[0], memory.dtype,
+        block_b=min(_BLOCK_B, max(loc.shape[0], 1)),
+        block_m=_chunk_block_m(memory.shape[0], memory.dtype.itemsize),
+        interpret=interpret)
+    return dmem, _f0(loc), _f0(base)
+
+
+_chunk_gather.defvjp(_chunk_gather_fwd, _chunk_gather_bwd)
+
+
 # ------------------------------------------------------------- public entry
 
 @partial(jax.jit, static_argnums=(0, 6))
@@ -250,6 +346,16 @@ def _lookup_jit(spec, memory, sets, gids, support, base, interpret):
 @partial(jax.jit, static_argnums=(0, 7))
 def _bag_jit(spec, memory, sets, gids, support, weights, base, interpret):
     return _bag(spec, interpret, memory, sets, gids, support, weights, base)
+
+
+@partial(jax.jit, static_argnums=(0, 6))
+def _chunk_lookup_jit(spec, memory, sets, gids, support, base, interpret):
+    return _chunk_lookup(spec, interpret, memory, sets, gids, support, base)
+
+
+@partial(jax.jit, static_argnums=(3,))
+def _chunk_gather_jit(memory, loc, base, interpret):
+    return _chunk_gather(interpret, memory, loc, base)
 
 
 @partial(jax.jit, static_argnums=(0, 4))
@@ -333,3 +439,55 @@ def fused_locations(spec: FusedSpec, gids: jax.Array,
                                      sets.astype(jnp.uint32), gids,
                                      support.astype(jnp.int32))
     return _locations_jit(spec, sets, gids, support, interpret)[:B]
+
+
+def fused_chunk_lookup(spec: FusedSpec, memory: jax.Array, gids: jax.Array,
+                       sets: jax.Array | None = None,
+                       support: jax.Array | None = None,
+                       base: jax.Array | None = None,
+                       interpret: bool | None = None):
+    """One engine call per exchange chunk: gids [N] (+ sets/support for lma)
+    -> ([N, d] slab-masked partial, [N, d] int32 locations).
+
+    The chunked strategies' step-0 form (``repro.dist.exchange``): location
+    math runs once in VMEM and the emitted locations then circulate the ring
+    / all-gather for the other ranks' slab gathers.  Unlike ``fused_lookup``
+    the slab is TILED (``fused_chunk_supported``), so per-device slabs over
+    the whole-slab VMEM gate still fuse; the partial is bit-identical to
+    ``local_gather(memory, locations)``.  Backward scatters the cotangent by
+    the emitted locations (slab-tiled as well); location inputs get float0.
+    """
+    interpret = _default_interpret(interpret)
+    gids = gids.astype(jnp.int32)
+    if base is None:
+        base = jnp.zeros((1,), jnp.int32)
+    if sets is None:
+        sets, support = _dummy_loc_state(spec, gids)
+    B = gids.shape[0]
+    sets, gids, support = _pad_batch(_pow2_ceil(max(B, 1)),
+                                     sets.astype(jnp.uint32), gids,
+                                     support.astype(jnp.int32))
+    vals, loc = _chunk_lookup_jit(spec, memory, sets, gids, support, base,
+                                  interpret)
+    return vals[:B], loc[:B]
+
+
+def fused_chunk_gather(memory: jax.Array, loc: jax.Array,
+                       base: jax.Array | None = None,
+                       interpret: bool | None = None) -> jax.Array:
+    """loc [N, d] int32 global locations -> [N, d] slab-masked partial.
+
+    The chunked engine's visiting-chunk step: a slab-tiled Pallas gather by
+    pre-computed locations (any scheme's — no FusedSpec needed), bit-
+    identical to ``local_gather``; the VJP is the slab-tiled scatter-add.
+    Padded rows carry location -1 (out of every slab) so they read and
+    scatter exact zeros."""
+    interpret = _default_interpret(interpret)
+    loc = loc.astype(jnp.int32)
+    if base is None:
+        base = jnp.zeros((1,), jnp.int32)
+    B = loc.shape[0]
+    b_pad = _pow2_ceil(max(B, 1))
+    if b_pad != B:
+        loc = jnp.pad(loc, ((0, b_pad - B), (0, 0)), constant_values=-1)
+    return _chunk_gather_jit(memory, loc, base, interpret)[:B]

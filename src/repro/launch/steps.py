@@ -236,8 +236,9 @@ def _exchange_meta(rcfg, n_rows: int, mesh) -> dict:
     """Resolved lookup-exchange strategy + modeled per-device bytes for the
     dryrun artifact: ``n_rows`` is the per-step global row-lookup count; the
     resolver sees the per-device flat rows and the SAME ``alloc_row`` term
-    the runtime driver passes (scheme set width + fused-slab eligibility),
-    so the recorded strategy and cost table match what actually lowers."""
+    the runtime driver passes (scheme set width + fused-slab AND
+    fused-chunk eligibility), so the recorded strategy and per-strategy
+    cost table match what actually lowers."""
     from repro.embed import get_scheme
     e = rcfg.embedding
     if e.budget is None:
@@ -252,10 +253,15 @@ def _exchange_meta(rcfg, n_rows: int, mesh) -> dict:
     alloc_row = exl.alloc_bytes_per_row(
         e.dim, set_width=get_scheme(e.kind).exchange_set_width(e))
     fused = exl.fused_slab_eligible(e.budget, n_model, e.jdtype.itemsize)
+    fused_chunk = exl.fused_chunk_eligible(e.budget, n_model,
+                                           e.jdtype.itemsize)
     ex = exl.resolve_exchange(mesh, B=n_flat, d=e.dim, m=e.budget,
-                              alloc_row=alloc_row, fused=fused)
-    costs = exl.lookup_cost(n_model, n_flat, e.dim, alloc_row, fused=fused)
+                              alloc_row=alloc_row, fused=fused,
+                              fused_chunk=fused_chunk)
+    costs = exl.lookup_cost(n_model, n_flat, e.dim, alloc_row, fused=fused,
+                            fused_chunk=fused_chunk)
     return {"exchange": ex.name,
+            "exchange_fused_chunk": bool(fused_chunk),
             "exchange_modeled_bytes": {k: int(v) for k, v in costs.items()}}
 
 

@@ -11,6 +11,10 @@ each candidate strategy and validates the assembled result:
   specified bit-identical, so any discrepancy at all is a fault — this is
   what catches a *dropped* chunk, which zeros look finite).
 
+Chunked strategies are probed once per engine variant — fused-chunked (the
+Pallas chunk engine) and split — since runtime dispatch may execute either;
+both must assemble oracle-identical bytes for the strategy to pass.
+
 A strategy that fails is retried once (transient-fault tolerance, counted in
 ``health.retries``); a second failure demotes it process-wide via
 ``repro.dist.exchange.demote`` — ``all_to_all -> ring -> psum`` — so every
@@ -53,18 +57,43 @@ class ExchangeGuard:
         self.use_oracle = use_oracle
         self.ladder = ladder
 
-    def _check(self, name: str, oracle) -> str | None:
-        """-> failure reason, or None when the strategy validates."""
+    def _probe_once(self, name: str, oracle, variant: str) -> str | None:
+        """-> failure reason (tagged with the engine variant), or None."""
+        tag = f" [{variant} probe]" if variant else ""
         try:
             out = np.asarray(self.probe_fn(name))
         except Exception as e:  # noqa: BLE001 — any probe crash is a failure
-            return f"probe raised {type(e).__name__}: {e}"
+            return f"probe raised {type(e).__name__}: {e}{tag}"
         if oracle is not None and out.shape != oracle.shape:
-            return f"shape {out.shape} != oracle {oracle.shape}"
+            return f"shape {out.shape} != oracle {oracle.shape}{tag}"
         if np.issubdtype(out.dtype, np.floating) and not np.isfinite(out).all():
-            return "non-finite values in assembled lookup"
+            return f"non-finite values in assembled lookup{tag}"
         if oracle is not None and out.tobytes() != oracle.tobytes():
-            return "not bit-identical to the psum oracle"
+            return f"not bit-identical to the psum oracle{tag}"
+        return None
+
+    def _check(self, name: str, oracle) -> str | None:
+        """-> failure reason, or None when the strategy validates.
+
+        ring / all_to_all each have two engine variants — fused-chunked
+        (the Pallas chunk engine, preferred when the pool is eligible) and
+        split — and runtime dispatch may take either depending on pool
+        shape and the fused kill-switch, so a strategy is healthy only
+        when every variant it can run assembles oracle-identical bytes.
+        The fused variant is probed first (it is what eligible pools
+        actually execute); the first failing variant fails the strategy."""
+        from repro.kernels.fused_embed import ops as fe
+        if name not in ("ring", "all_to_all") or not fe.fused_enabled():
+            return self._probe_once(name, oracle, "")
+        for variant in ("fused-chunked", "split"):
+            prev = fe.ENABLED
+            fe.ENABLED = variant == "fused-chunked"
+            try:
+                reason = self._probe_once(name, oracle, variant)
+            finally:
+                fe.ENABLED = prev
+            if reason is not None:
+                return reason
         return None
 
     def validate(self) -> str:

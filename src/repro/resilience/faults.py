@@ -296,8 +296,10 @@ class FaultyExchange(exl.Exchange):
             return out.at[:c].set(jnp.nan)
         return out.at[:c].set(jnp.iinfo(out.dtype).max)
 
-    def lookup(self, mem_l, gids, loc_fn, d, n_model, axis="model"):
-        out = self.base.lookup(mem_l, gids, loc_fn, d, n_model, axis)
+    def lookup(self, mem_l, gids, loc_fn, d, n_model, axis="model",
+               fused=None):
+        out = self.base.lookup(mem_l, gids, loc_fn, d, n_model, axis,
+                               fused=fused)
         return self._mangle(out, n_model)
 
     def set_lookup(self, shard, idx, n_model, axis="model"):

@@ -13,6 +13,24 @@ import jax
 import jax.numpy as jnp
 
 
+@pytest.fixture(autouse=True)
+def _reset_exchange_state():
+    """Exchange strategy selection is process-global (FORCED pin, DEMOTED
+    ladder state, FALLBACK table).  A test that pins or demotes a strategy
+    and fails before its own cleanup would silently re-route every later
+    test's lookups — restore the canonical state around each test."""
+    from repro.dist import exchange as exl
+    forced = exl.FORCED
+    fallback = dict(exl.FALLBACK)
+    demoted = dict(exl.DEMOTED)
+    yield
+    exl.FORCED = forced
+    exl.FALLBACK.clear()
+    exl.FALLBACK.update(fallback)
+    exl.DEMOTED.clear()
+    exl.DEMOTED.update(demoted)
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

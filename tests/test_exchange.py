@@ -81,13 +81,74 @@ def test_lookup_cost_alloc_term_moves_the_choice():
     delta = exl.alloc_bytes_per_row(32, 32) * 4096
     assert c_lma["psum"] - c_free["psum"] == pytest.approx(delta)
     assert c_lma["ring"] - c_free["ring"] == pytest.approx(delta / 4)
-    # the fused-slab discount is psum-only: ring/all_to_all can never run
-    # the fused kernel, so their entries must not move
+    # the fused-SLAB discount is psum-only: ring/all_to_all run the chunked
+    # engine instead, priced by the separate ``fused_chunk`` flag — the
+    # slab flag must not move their entries
     c_def = exl.lookup_cost(4, 4096, 32)
     c_fus = exl.lookup_cost(4, 4096, 32, fused=True)
     assert c_fus["psum"] == pytest.approx(c_def["psum"] - 8 * 32 * 4096)
     assert c_fus["ring"] == pytest.approx(c_def["ring"])
     assert c_fus["all_to_all"] == pytest.approx(c_def["all_to_all"])
+
+
+def test_lookup_cost_fused_chunk_discount_is_chunked_only():
+    """The chunk-level discount mirrors the slab one with the roles swapped:
+    ``fused_chunk`` removes the [d] location-row term from ring/all_to_all's
+    per-chunk alloc share and leaves psum untouched — each strategy's
+    discount rides its own engine form and its own gate."""
+    d, n = 32, 4096
+    loc = 8 * d * n
+    c_def = exl.lookup_cost(4, n, d)
+    c_fc = exl.lookup_cost(4, n, d, fused_chunk=True)
+    assert c_fc["psum"] == pytest.approx(c_def["psum"])
+    assert c_fc["ring"] == pytest.approx(c_def["ring"] - loc / 4)
+    assert c_fc["all_to_all"] == pytest.approx(c_def["all_to_all"] - loc / 4)
+    # LMA's set-reconstruction exchange (alloc_row excess over 8d) is a
+    # collective and survives the in-VMEM hash discount
+    row = exl.alloc_bytes_per_row(d, 32)
+    c_lma = exl.lookup_cost(4, n, d, alloc_row=row, fused_chunk=True)
+    assert c_lma["ring"] == pytest.approx(c_fc["ring"] + 8 * 32 * n / 4)
+    assert c_lma["all_to_all"] == pytest.approx(
+        c_fc["all_to_all"] + 8 * 32 * n / 4)
+    # both discounts together: psum's pure-collective 2(P-1)/P x row still
+    # undercuts ring's overlap+homing and all_to_all's three barriers, so
+    # in-budget slabs keep resolving to psum
+    c_both = exl.lookup_cost(4, n, d, fused=True, fused_chunk=True)
+    assert min(c_both, key=c_both.get) == "psum"
+
+
+def test_chunk_gate_strictly_weaker_than_slab_gate():
+    """``fused_chunk_eligible`` admits every slab the whole-slab gate does
+    (one block) plus over-gate slabs some power-of-two tiling fits — the
+    135M-slot production shape chunk-fuses where psum's form cannot."""
+    m_big = 135_266_304                  # 34 MiB/device at 16 ranks
+    assert not exl.fused_slab_eligible(m_big, 16)
+    assert exl.fused_chunk_eligible(m_big, 16)
+    assert exl.fused_slab_eligible(1 << 21, 4)
+    assert exl.fused_chunk_eligible(1 << 21, 4)
+    # indivisible pools cannot chunk at all
+    assert not exl.fused_chunk_eligible(m_big + 1, 16)
+    assert not exl.fused_chunk_eligible(m_big, 1)
+
+
+def test_resolve_clamps_caller_asserted_fused_chunk_flag():
+    """Like the psum flag, an explicit ``fused_chunk=True`` routes through
+    its gate: a pool the 'model' axis does not divide (or whose chunks
+    cannot fit the budget) pays full location bytes — asserted and honest
+    resolutions coincide, so modeled dispatch can never promise an engine
+    form the drivers would refuse to run."""
+    m_odd = 135_266_304 + 1
+    assert not exl.fused_chunk_eligible(m_odd, 16)
+    honest = exl.resolve_exchange(MESH_16x16, B=4096, d=32, m=m_odd)
+    asserted = exl.resolve_exchange(MESH_16x16, B=4096, d=32, m=m_odd,
+                                    fused_chunk=True)
+    assert asserted is honest
+    # an eligible pool keeps the flag: the discount applies identically
+    # whether derived from m or caller-asserted
+    derived = exl.resolve_exchange(MESH_16x16, B=4096, d=32, m=135_266_304)
+    explicit = exl.resolve_exchange(MESH_16x16, B=4096, d=32, m=135_266_304,
+                                    fused_chunk=True)
+    assert explicit is derived
 
 
 def test_resolve_clamps_caller_asserted_fused_flag():
@@ -418,6 +479,138 @@ print("CSR_SHARDED_ALL_OK")
 """
 
 
+# ----------------------------------- fused-chunked engine (ring/all_to_all)
+
+_FUSED_CHUNK_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core.signatures import synthetic_dense_store
+from repro.dist import exchange as exl
+from repro.dist.context import use_mesh
+from repro.embed import EmbeddingTable, get_scheme, list_schemes
+import repro.kernels.fused_embed.ops as fe
+
+assert len(jax.devices()) == 8
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+rng = np.random.default_rng(0)
+
+def build(kind):
+    scheme = get_scheme(kind)
+    table = EmbeddingTable(scheme.build_config((512,), 16, 4096, seed=3))
+    store = None
+    if scheme.buffer_source == "signatures":
+        store = synthetic_dense_store(512, 8, max_set=32, seed=2)
+    elif scheme.buffer_source == "id_counts":
+        store = rng.integers(0, 50, 512).astype(np.int64)
+    bufs = table.make_buffers(store)
+    params = table.init(jax.random.key(1))
+    ids = jnp.asarray(rng.integers(0, 512, (64,), np.int32))
+    return table, bufs, params, ids
+
+def run(fn, enabled, forced):
+    fe.ENABLED = enabled
+    exl.FORCED = forced
+    try:
+        if forced is None:
+            return np.asarray(fn())
+        with use_mesh(mesh):
+            return np.asarray(fn())
+    finally:
+        exl.FORCED = None
+        fe.ENABLED = True
+
+# forward: fused-chunked vs the split-chunk oracle AND the replicated
+# single-device lookup, bitwise, for every registered scheme
+for kind in list_schemes():
+    table, bufs, params, ids = build(kind)
+    emb = lambda: table.embed(params, bufs, 0, ids)
+    want = run(emb, True, None)                       # replicated oracle
+    for name in ("ring", "all_to_all"):
+        split = run(emb, False, name)
+        fused = run(emb, True, name)
+        np.testing.assert_array_equal(fused, split)
+        np.testing.assert_array_equal(fused, want)
+    print(kind, "fused-chunked forward bit-parity OK")
+
+# gradients: the chunked engine's custom VJP (saved-location Pallas
+# scatter) against the split path's XLA scatter-add and the replicated
+# oracle — memory-pool cotangents to 1e-6
+for kind in ("lma", "hashed_row"):
+    table, bufs, params, ids = build(kind)
+    y = jnp.asarray(rng.normal(size=(64, 16)).astype(np.float32))
+
+    def loss(p):
+        e = table.embed(p, bufs, 0, ids)
+        return jnp.mean((e - y) ** 2)
+
+    g_fn = lambda: jax.grad(loss)(params)["memory"]
+    g_ref = run(g_fn, True, None)
+    for name in ("ring", "all_to_all"):
+        g_split = run(g_fn, False, name)
+        g_fused = run(g_fn, True, name)
+        np.testing.assert_allclose(g_fused, g_split, atol=1e-6, rtol=1e-6)
+        np.testing.assert_allclose(g_fused, g_ref, atol=1e-6, rtol=1e-6)
+    print(kind, "fused-chunked grad parity OK")
+
+print("FUSED_CHUNK_ALL_OK")
+"""
+
+
+_VMEM_GATE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["REPRO_FUSED_MAX_MEM_MB"] = "5"     # shrink the gate pre-import
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core.allocation import alloc_hashed_elem
+from repro.core.memory import init_memory, lookup
+from repro.dist import exchange as exl
+from repro.dist.context import use_mesh
+from repro.dist.sharded_memory import sharded_hashed_lookup
+import repro.kernels.fused_embed.ops as fe
+
+m, d, B = 1 << 22, 16, 256
+m_local = m // 4                                # 4 MiB/device slab
+assert not fe.fused_supported(m_local, 4)       # whole slab over the gate
+assert fe.fused_chunk_supported(m_local, 4)     # but pow2 slab blocks fit
+assert fe._chunk_blocks(m_local, 4) == 4        # 1 MiB tiles under 5-4 MiB
+assert not exl.fused_slab_eligible(m, 4)
+assert exl.fused_chunk_eligible(m, 4)
+
+# pin that the over-gate slab actually takes the fused-chunked path: count
+# the Pallas entry points the engine dispatches to
+calls = {"fwd": 0, "gather": 0}
+_fwd, _gather = fe.fused_chunk_fwd_pallas, fe.fused_chunk_gather_pallas
+def spy_fwd(*a, **k):
+    calls["fwd"] += 1
+    return _fwd(*a, **k)
+def spy_gather(*a, **k):
+    calls["gather"] += 1
+    return _gather(*a, **k)
+fe.fused_chunk_fwd_pallas = spy_fwd
+fe.fused_chunk_gather_pallas = spy_gather
+
+mem = init_memory(jax.random.key(0), m, "normal", 0.1)
+gids = jnp.asarray(np.random.default_rng(1).integers(0, 4096, (B,), np.int32))
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+oracle = np.asarray(lookup(mem, alloc_hashed_elem(gids, d, m, 7)))
+for name in ("ring", "all_to_all"):
+    exl.FORCED = name
+    try:
+        with use_mesh(mesh):
+            got = sharded_hashed_lookup(mem, gids, d, m, 7, mesh, ("data",))
+    finally:
+        exl.FORCED = None
+    np.testing.assert_array_equal(np.asarray(got), oracle)
+assert calls["fwd"] > 0, calls      # in-kernel loc math + own-slab gather ran
+assert calls["gather"] > 0, calls   # slab-TILED gather ran (whole-slab path
+                                    # is gated off, so no other form could)
+print("VMEM_GATE_CHUNKED_OK", calls)
+"""
+
+
 def _run_sub(script):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -438,6 +631,29 @@ def test_exchange_sparse_training_parity_2x4():
     r = _run_sub(_TRAIN_SCRIPT)
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
     assert "ALL_EXCHANGE_TRAIN_OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_fused_chunked_parity_all_schemes_2x4():
+    """The fused-chunked engine (one Pallas call per exchange chunk: in-VMEM
+    location math + slab-masked gather) under ring and all_to_all is bitwise
+    identical to the split-chunk oracle and the replicated single-device
+    lookup for every registered scheme, forward and (to 1e-6) backward."""
+    r = _run_sub(_FUSED_CHUNK_SCRIPT)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+    assert "FUSED_CHUNK_ALL_OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_vmem_gate_over_slab_under_chunk_takes_fused_path_2x4():
+    """With REPRO_FUSED_MAX_MEM_MB shrunk so the whole per-device slab
+    exceeds the VMEM gate but power-of-two slab blocks fit, ring and
+    all_to_all still take the fused-chunked path (pinned by counting Pallas
+    entry-point dispatches) and stay bitwise identical to the replicated
+    oracle — the tentpole case the chunk-level gate exists for."""
+    r = _run_sub(_VMEM_GATE_SCRIPT)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+    assert "VMEM_GATE_CHUNKED_OK" in r.stdout
 
 
 @pytest.mark.slow
